@@ -1,0 +1,29 @@
+//! Tables 1 + 2 / Fig. 9 — accuracy under quantization.
+//!
+//! Runs the paper's accuracy protocol on the trained mini models: weights
+//! quantized offline to 8-bit LQ, activations quantized at runtime with DQ
+//! (per-layer scale, §IV.B) or LQ (per-region scale, the contribution),
+//! across 8/6/4/2-bit precision.
+//!
+//! ```sh
+//! cargo run --release --example accuracy_sweep -- --limit 512
+//! ```
+
+use anyhow::Result;
+use lqr::eval::sweep;
+use lqr::util::cli::Args;
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let p = Args::new("accuracy_sweep", "Tables 1-2 / Fig. 9 accuracy sweeps")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("bits", "8,6,4,2", "activation bit widths")
+        .flag("limit", "512", "validation images")
+        .parse_from(&std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let artifacts = p.get("artifacts");
+    let limit = p.get_usize("limit");
+    sweep::table1(artifacts, limit)?.print();
+    sweep::table2(artifacts, &p.get_usize_list("bits"), limit)?.print();
+    Ok(())
+}

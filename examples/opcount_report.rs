@@ -1,0 +1,32 @@
+//! Table 3 — multiply/add counts, original vs 2-bit LUT scheme.
+//!
+//! Analytic counts over the *full* AlexNet and VGG-16 conv layers; the LUT
+//! cost model (triple grouping + per-triple-group rescale, see
+//! `nn::opcount`) reproduces the paper's absolute numbers.
+//!
+//! ```sh
+//! cargo run --release --example opcount_report
+//! ```
+
+use lqr::eval::sweep;
+use lqr::nn::opcount::{lut_ops, original_ops, LutCostModel};
+use lqr::nn::Arch;
+
+fn main() {
+    sweep::table3().print();
+
+    // Ablation: how the LUT grouping factor moves the counts.
+    println!("LUT grouping ablation (AlexNet conv ops, millions):");
+    let arch = Arch::alexnet_full();
+    let o = original_ops(&arch);
+    for group in [2usize, 3, 4] {
+        let l = lut_ops(&arch, LutCostModel { group, combine: 3 });
+        println!(
+            "  group={group}: multiplies {}M ({:.1}x less), adds {}M ({:.1}x less)",
+            l.multiplies / 1_000_000,
+            o.multiplies as f64 / l.multiplies as f64,
+            l.adds / 1_000_000,
+            o.adds as f64 / l.adds as f64,
+        );
+    }
+}

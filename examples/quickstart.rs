@@ -1,0 +1,45 @@
+//! Quickstart: load an AOT artifact, classify one validation image.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This exercises the whole three-layer stack once: the image comes from the
+//! build-time dataset, the HLO artifact was lowered from the JAX model (L2)
+//! containing the Pallas LQ kernels (L1), and the rust runtime (L3) compiles
+//! and executes it via PJRT.
+
+use anyhow::Result;
+use lqr::dataset::Dataset;
+use lqr::runtime::Session;
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 1. Open a PJRT session over the artifacts directory.
+    let mut session = Session::open(&artifacts)?;
+
+    // 2. Compile the 8-bit local-quantization variant of MiniAlexNet
+    //    (runtime activation quantization + eq. 7 GEMMs, lowered from Pallas).
+    let runner = session.load("minialexnet_lq8_b1")?;
+
+    // 3. Classify one validation image.
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
+    let image = ds.image(0);
+    let logits = session.run(&runner, &image)?;
+    let row = logits.row(0);
+    let pred = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+
+    println!("artifact : {}", runner.meta.name);
+    println!("logits   : {:?}", &row[..8.min(row.len())]);
+    println!("predicted: class {pred}   (label: {})", ds.labels[0]);
+    assert_eq!(pred as i32, ds.labels[0], "quickstart misclassified image 0");
+    println!("OK — 8-bit LQ artifact agrees with the label");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! E2E serving driver (the repo's end-to-end validation run).
+//!
+//! Loads the trained MiniAlexNet artifacts, starts the coordinator with
+//! dynamic batching, drives a Poisson request stream sampled from the
+//! validation set at several arrival rates, and reports latency percentiles,
+//! throughput, achieved batch sizes and accuracy for both the f32 baseline
+//! and the 8-bit LQ variant. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example serve_workload [artifacts_dir]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lqr::coordinator::backend::{Backend, PjrtBackend};
+use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::dataset::Dataset;
+use lqr::eval::TableFmt;
+use lqr::util::rng::Rng;
+
+struct RunResult {
+    throughput: f64,
+    accuracy: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+}
+
+fn drive(
+    artifacts: &str,
+    variant: &str,
+    rate: f64,
+    total: usize,
+    ds: &Dataset,
+) -> Result<RunResult> {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_millis(4),
+        queue_capacity: 4096,
+    };
+    let (a, v) = (artifacts.to_string(), variant.to_string());
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || Ok(Box::new(PjrtBackend::open(&a, "minialexnet", &v)?) as Box<dyn Backend>)),
+    )?;
+
+    let mut rng = Rng::new(42);
+    let mut rxs = Vec::with_capacity(total);
+    let mut labels = Vec::with_capacity(total);
+    let t0 = Instant::now();
+    for _ in 0..total {
+        let i = ds.sample(&mut rng);
+        labels.push(ds.labels[i]);
+        loop {
+            match coord.submit(ds.image(i)) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+        std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    let mut hits = 0usize;
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(total);
+    let submit_done = t0.elapsed();
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let r = rx.recv()?;
+        lat_ms.push((r.queue_time + r.execute_time).as_secs_f64() * 1e3);
+        if r.predicted as i32 == label {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(submit_done.as_secs_f64());
+    let m = coord.shutdown();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let pct = |p: f64| lat_ms[((lat_ms.len() - 1) as f64 * p) as usize];
+    Ok(RunResult {
+        throughput: total as f64 / wall,
+        accuracy: hits as f64 / total as f64,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        mean_batch: m.mean_batch_size(),
+    })
+}
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
+    let total = 400;
+
+    let mut t = TableFmt::new(
+        "E2E serving: MiniAlexNet, Poisson arrivals, dynamic batching (max_batch=8, max_wait=4ms)",
+        &["variant", "offered req/s", "achieved req/s", "top-1", "p50 ms", "p99 ms", "mean batch"],
+    );
+    for variant in ["f32", "lq"] {
+        for rate in [100.0, 400.0, 1600.0] {
+            let r = drive(&artifacts, variant, rate, total, &ds)?;
+            t.row(&[
+                variant.into(),
+                format!("{rate:.0}"),
+                format!("{:.0}", r.throughput),
+                format!("{:.1}%", r.accuracy * 100.0),
+                format!("{:.2}", r.p50_ms),
+                format!("{:.2}", r.p99_ms),
+                format!("{:.2}", r.mean_batch),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

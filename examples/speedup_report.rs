@@ -1,0 +1,39 @@
+//! Fig. 8 — per-image runtime: 32-bit float baseline vs 8-bit fixed point.
+//!
+//! Two views, mirroring DESIGN.md's substitution:
+//! - measured on this host: rust-native engine, f32 blocked GEMM vs the
+//!   eq. 7 integer GEMM over the trained mini models;
+//! - modelled for the paper's actual testbed: the Edison/Silvermont cost
+//!   model over the full AlexNet / VGG-16 (including the paper's footnote
+//!   that f32 VGG-16 does not fit the board's 1 GB).
+//!
+//! ```sh
+//! cargo run --release --example speedup_report -- --images 20
+//! ```
+
+use anyhow::Result;
+use lqr::eval::sweep;
+use lqr::nn::opcount::weight_bytes;
+use lqr::nn::Arch;
+use lqr::util::cli::Args;
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let p = Args::new("speedup_report", "Fig. 8 runtime comparison")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("images", "20", "images measured per configuration")
+        .parse_from(&std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    sweep::fig8(p.get("artifacts"), p.get_usize("images"))?.print();
+
+    // The paper's Fig. 8 footnote: f32 VGG-16 exceeds the Edison's 1 GB.
+    let vgg = Arch::vgg16_full();
+    println!(
+        "VGG-16 weight footprint: f32 {:.0} MB (exceeds Edison's 1 GB with runtime overhead) \
+         -> 8-bit {:.0} MB -> 2-bit {:.0} MB",
+        weight_bytes(&vgg, 32) as f64 / 1e6,
+        weight_bytes(&vgg, 8) as f64 / 1e6,
+        weight_bytes(&vgg, 2) as f64 / 1e6,
+    );
+    Ok(())
+}

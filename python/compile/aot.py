@@ -1,0 +1,120 @@
+"""AOT lowering: JAX models -> HLO TEXT artifacts for the rust runtime.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a single fused module `fn(w_0, ..., w_{P-1}, x) -> (logits,)`
+with the weights as *runtime parameters* (in model.param_order order), so the
+rust coordinator can substitute arbitrarily quantized/dequantized weights
+without re-lowering. Variants:
+
+  {model}_f32_b{B}.hlo.txt    fp32 forward            (serving baseline)
+  {model}_lq{bits}_b{B}.hlo.txt  Pallas LQ forward    (kernels in the HLO:
+                                 runtime activation quantization + eq. 7 GEMM)
+
+`manifest.json` records every artifact with parameter names/shapes so the
+rust side is fully data-driven.
+
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(model_name: str, variant: str, batch: int, bits: int, region: int,
+                  params: dict) -> str:
+    order = M.param_order(model_name)
+
+    if variant == "f32":
+        def fn(*args):
+            p = dict(zip(order, args[:-1]))
+            return (M.forward(p, args[-1], model_name),)
+    elif variant == "lq":
+        def fn(*args):
+            p = dict(zip(order, args[:-1]))
+            return (M.forward_pallas(p, args[-1], model_name, bits=bits, region=region),)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    specs = [jax.ShapeDtypeStruct(np.asarray(params[k]).shape, np.float32) for k in order]
+    specs.append(jax.ShapeDtypeStruct((batch,) + M.IN_SHAPE, np.float32))
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(M.MODELS))
+    ap.add_argument("--batches", nargs="*", type=int, default=[1, 8, 32])
+    ap.add_argument("--lq-bits", nargs="*", type=int, default=[8, 2])
+    ap.add_argument("--lq-batches", nargs="*", type=int, default=[1, 8])
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": [], "models": {}}
+    for model_name in args.models:
+        wpath = os.path.join(args.out_dir, f"weights_{model_name}.npz")
+        if not os.path.exists(wpath):
+            raise SystemExit(f"missing {wpath}; run `python -m compile.train` first")
+        params = dict(np.load(wpath))
+        order = M.param_order(model_name)
+        manifest["models"][model_name] = {
+            "weights": os.path.basename(wpath),
+            "param_order": order,
+            "param_shapes": {k: list(params[k].shape) for k in order},
+            "input_shape": list(M.IN_SHAPE),
+            "num_classes": M.NUM_CLASSES,
+        }
+
+        jobs = [("f32", b, 0, 0) for b in args.batches]
+        jobs += [("lq", b, bits, 0) for bits in args.lq_bits for b in args.lq_batches]
+        for variant, batch, bits, region in jobs:
+            tag = f"{model_name}_{variant}" + (f"{bits}" if variant == "lq" else "")
+            name = f"{tag}_b{batch}"
+            text = lower_variant(model_name, variant, batch, bits, region, params)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "model": model_name,
+                    "variant": variant,
+                    "bits": bits,
+                    "batch": batch,
+                    "region": region,
+                }
+            )
+            print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Synthetic image-classification dataset (ImageNet stand-in).
+
+The paper evaluates on ImageNet LSVRC-2012 with pretrained Caffe AlexNet /
+VGG-16 — neither the data nor the models are available here, so we substitute
+a procedurally generated 16-class shape dataset (see DESIGN.md
+§Substitutions). What matters for the reproduction is that the task exercises
+a deep conv stack whose activation dynamic range degrades under coarse
+quantization, which this dataset does.
+
+16 classes = 8 shapes x 2 color schemes, rendered at random position / scale /
+rotation over a textured background with additive noise. Images are CHW f32
+in [0, 1]. Deterministic for a given seed.
+
+Run as a module to write artifacts/data/{train,val}.npz:
+    python -m compile.datagen --out-dir ../artifacts/data
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+IMG = 32           # image side
+CHANNELS = 3
+NUM_CLASSES = 16
+SHAPES = ["disk", "ring", "square", "frame", "triangle", "cross", "hbars", "checker"]
+
+
+def _coords(n: int):
+    ax = np.linspace(-1.0, 1.0, n, dtype=np.float32)
+    return np.meshgrid(ax, ax, indexing="xy")
+
+
+def _rotate(x, y, theta):
+    c, s = np.cos(theta), np.sin(theta)
+    return c * x + s * y, -s * x + c * y
+
+
+def shape_mask(shape: str, rng: np.random.Generator) -> np.ndarray:
+    """Binary mask (IMG, IMG) of the given shape at random pose."""
+    x, y = _coords(IMG)
+    cx, cy = rng.uniform(-0.3, 0.3, size=2)
+    scale = rng.uniform(0.45, 0.8)
+    theta = rng.uniform(0, np.pi)
+    xr, yr = _rotate((x - cx) / scale, (y - cy) / scale, theta)
+    r = np.sqrt(xr**2 + yr**2)
+    if shape == "disk":
+        m = r < 0.8
+    elif shape == "ring":
+        m = (r < 0.8) & (r > 0.45)
+    elif shape == "square":
+        m = (np.abs(xr) < 0.7) & (np.abs(yr) < 0.7)
+    elif shape == "frame":
+        m = ((np.abs(xr) < 0.75) & (np.abs(yr) < 0.75)) & ~(
+            (np.abs(xr) < 0.42) & (np.abs(yr) < 0.42)
+        )
+    elif shape == "triangle":
+        m = (yr > -0.55) & (yr < 1.3 * xr + 0.55) & (yr < -1.3 * xr + 0.55)
+    elif shape == "cross":
+        m = (np.abs(xr) < 0.22) | (np.abs(yr) < 0.22)
+        m &= (np.abs(xr) < 0.8) & (np.abs(yr) < 0.8)
+    elif shape == "hbars":
+        m = (np.sin(yr * 3 * np.pi) > 0.25) & (np.abs(xr) < 0.8) & (np.abs(yr) < 0.8)
+    elif shape == "checker":
+        m = (np.sin(xr * 2.5 * np.pi) * np.sin(yr * 2.5 * np.pi) > 0.1) & (r < 0.95)
+    else:
+        raise ValueError(f"unknown shape {shape!r}")
+    return m.astype(np.float32)
+
+
+def render(label: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one CHW image for `label` in [0, NUM_CLASSES)."""
+    shape = SHAPES[label % len(SHAPES)]
+    warm = label // len(SHAPES) == 0  # color scheme bit
+    mask = shape_mask(shape, rng)
+    # Textured background: low-frequency gradient + noise.
+    x, y = _coords(IMG)
+    gx, gy = rng.uniform(-0.4, 0.4, size=2)
+    bg = 0.45 + gx * x + gy * y
+    img = np.empty((CHANNELS, IMG, IMG), dtype=np.float32)
+    if warm:
+        fg = np.array([rng.uniform(0.75, 1.0), rng.uniform(0.25, 0.55), rng.uniform(0.0, 0.25)])
+    else:
+        fg = np.array([rng.uniform(0.0, 0.25), rng.uniform(0.35, 0.65), rng.uniform(0.75, 1.0)])
+    for c in range(CHANNELS):
+        img[c] = bg * (1.0 - mask) + fg[c] * mask
+    img += rng.normal(0.0, 0.06, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def generate(n: int, seed: int):
+    """Generate (x, y): x f32 (n, C, IMG, IMG), y int32 (n,). Balanced classes."""
+    rng = np.random.default_rng(seed)
+    y = np.arange(n, dtype=np.int32) % NUM_CLASSES
+    rng.shuffle(y)
+    x = np.stack([render(int(lbl), rng) for lbl in y])
+    return x.astype(np.float32), y
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts/data")
+    ap.add_argument("--train", type=int, default=8000)
+    ap.add_argument("--val", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=2018)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    xt, yt = generate(args.train, args.seed)
+    xv, yv = generate(args.val, args.seed + 1)
+    np.savez(os.path.join(args.out_dir, "train.npz"), x=xt, y=yt)
+    np.savez(os.path.join(args.out_dir, "val.npz"), x=xv, y=yv)
+    print(f"wrote {args.train} train / {args.val} val images to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Cross-language parity fixtures.
+
+Dumps quantization inputs/outputs from the python reference implementation to
+`artifacts/fixtures.npz`; `rust/tests/quant_parity.rs` recomputes them with
+the rust `quant` module and asserts bit-exact code equality (and fp-tolerance
+scale/min/GEMM equality). This pins the two implementations of the paper's
+scheme to each other.
+
+    python -m compile.fixtures --out ../artifacts/fixtures.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from compile import quant
+
+CASES = [
+    # (rows, k, bits, g, seed)
+    (4, 32, 8, 8, 0),
+    (3, 75, 8, 75, 1),     # kernel-sized region (AlexNet-conv-like)
+    (5, 48, 2, 12, 2),
+    (2, 33, 4, 8, 3),      # ragged tail region
+    (6, 16, 6, 16, 4),
+    (1, 7, 1, 3, 5),       # 1-bit, ragged
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/fixtures.npz")
+    args = ap.parse_args()
+
+    arrays = {}
+    meta = []
+    for i, (rows, k, bits, g, seed) in enumerate(CASES):
+        rng = np.random.default_rng(100 + seed)
+        x = rng.normal(scale=2.0, size=(rows, k)).astype(np.float32)
+        codes, scales, mins = quant.quantize_lq(x, bits, g)
+        arrays[f"case{i}_x"] = x
+        arrays[f"case{i}_codes"] = np.asarray(codes, dtype=np.int32)
+        arrays[f"case{i}_scales"] = np.asarray(scales, dtype=np.float32)
+        arrays[f"case{i}_mins"] = np.asarray(mins, dtype=np.float32)
+        meta.append([rows, k, bits, g])
+        # GEMM fixture: x (rows,k) against a weight matrix (k, n)
+        n = 6
+        w = rng.normal(size=(k, n)).astype(np.float32)
+        out = quant.lq_matmul_reference(x, w, bits, 8, g)
+        arrays[f"case{i}_w"] = w
+        arrays[f"case{i}_gemm"] = np.asarray(out, dtype=np.float32)
+    arrays["meta"] = np.asarray(meta, dtype=np.int32)
+    np.savez(args.out, **arrays)
+    print(f"wrote {len(CASES)} parity cases to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

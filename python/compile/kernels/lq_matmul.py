@@ -1,0 +1,105 @@
+"""Pallas kernel: region-quantized matmul (the paper's eq. 7 hot path).
+
+Computes `out[M, N] ~= A[M, K] @ W[K, N]` from *pre-quantized* operands:
+integer codes plus per-region (scale, min) pairs, with regions of `g`
+consecutive elements along K. The integer partial sums are accumulated per
+region and the affine correction is applied per region — exactly the
+fixed-point pipeline an IoT device (or the rust `fixedpoint` module) runs.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the grid tiles M and N;
+each grid step holds one (bm, K) code stripe of A and one (bn, K) stripe of
+W^T in VMEM together with their (bm, R) / (bn, R) scale/min side-cars, so the
+dequantization correction fuses into the MXU-feeding contraction instead of a
+second pass over HBM. The region axis is aligned with K so per-region sums
+are a reshape + reduce, not a gather.
+
+Constraints: K % g == 0, bm | M, bn | N (callers pad). interpret=True always:
+the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fit_tile(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (>= 1)."""
+    want = max(1, min(want, n))
+    for t in range(want, 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _kernel(qa_ref, sa_ref, ma_ref, qw_ref, sw_ref, mw_ref, out_ref, *, g: int):
+    """One (bm, bn) output tile; full K resident.
+
+    qa: (bm, K) int32 codes      sa, ma: (bm, R) f32
+    qw: (bn, K) int32 codes      sw, mw: (bn, R) f32   (W^T layout)
+    """
+    qa = qa_ref[...].astype(jnp.float32)
+    qw = qw_ref[...].astype(jnp.float32)
+    bm, k = qa.shape
+    bn = qw.shape[0]
+    r = k // g
+    qa_r = qa.reshape(bm, r, g)
+    qw_r = qw.reshape(bn, r, g)
+    sa, ma = sa_ref[...], ma_ref[...]          # (bm, R)
+    sw, mw = sw_ref[...], mw_ref[...]          # (bn, R)
+    # Integer partial sums per region (MXU-friendly contraction over g).
+    s_qq = jax.lax.dot_general(
+        qa_r, qw_r, (((2,), (2,)), ((1,), (1,)))
+    )                                          # (R, bm, bn)
+    s_qa = qa_r.sum(-1)                        # (bm, R)
+    s_qw = qw_r.sum(-1)                        # (bn, R)
+    # Affine correction, applied per region then reduced over R (eq. 7).
+    term_qq = jnp.einsum("mr,nr,rmn->mn", sa, sw, s_qq)
+    term_qa = (sa * s_qa) @ mw.T               # (bm, bn)
+    term_qw = ma @ (sw * s_qw).T               # (bm, bn)
+    term_mm = float(g) * (ma @ mw.T)
+    out_ref[...] = term_qq + term_qa + term_qw + term_mm
+
+
+@functools.partial(jax.jit, static_argnames=("g", "bm", "bn"))
+def lq_matmul(qa, sa, ma, qw_t, sw, mw, *, g: int, bm: int = 32, bn: int = 32):
+    """Region-quantized matmul.
+
+    Args:
+      qa:   (M, K) int32 activation codes.
+      sa:   (M, R) f32 activation scales, R = K // g.
+      ma:   (M, R) f32 activation region minima.
+      qw_t: (N, K) int32 weight codes (transposed layout).
+      sw:   (N, R) f32 weight scales.
+      mw:   (N, R) f32 weight region minima.
+      g:    region size along K; must divide K.
+      bm, bn: output tile sizes (M % bm == 0, N % bn == 0; callers pad).
+
+    Returns (M, N) f32, equal to ref.ref_lq_matmul up to f32 rounding.
+    """
+    m, k = qa.shape
+    n = qw_t.shape[0]
+    if k % g:
+        raise ValueError(f"K={k} not divisible by region size g={g}")
+    r = k // g
+    bm = fit_tile(m, bm)
+    bn = fit_tile(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qa, sa, ma, qw_t, sw, mw)

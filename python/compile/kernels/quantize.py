@@ -1,0 +1,72 @@
+"""Pallas kernel: runtime local-region quantization of activations.
+
+The paper quantizes weights offline but inputs *at runtime* (§V.B: "the
+inputs have to be converted into fixed point in runtime"), so activation
+quantization sits on the hot path and gets its own kernel.
+
+Layout: x is (M, K); regions are `g` consecutive elements along K (the
+im2col receptive-field axis, matching the paper's kernel-sized regions).
+Output codes are int32 in [0, 2^bits - 1] plus per-region (scale, min)
+side-cars of shape (M, R).
+
+TPU shaping: grid over M stripes; each grid step keeps a (bm, K) stripe in
+VMEM, computes the per-region min/max with a reshape+reduce (region axis
+aligned to K), and writes codes in place — one HBM round trip total.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.lq_matmul import fit_tile
+
+
+def _kernel(x_ref, codes_ref, scale_ref, min_ref, *, bits: int, g: int):
+    x = x_ref[...]                             # (bm, K)
+    bm, k = x.shape
+    r = k // g
+    levels = float((1 << bits) - 1)
+    xr = x.reshape(bm, r, g)
+    mn = xr.min(axis=-1)                       # (bm, R)
+    mx = xr.max(axis=-1)
+    span = mx - mn
+    scale = jnp.where(span > 0, span / levels, 1.0)
+    codes = jnp.clip(jnp.round((xr - mn[..., None]) / scale[..., None]), 0.0, levels)
+    codes_ref[...] = codes.reshape(bm, k).astype(jnp.int32)
+    scale_ref[...] = scale
+    min_ref[...] = mn
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "g", "bm"))
+def quantize_lq(x, *, bits: int, g: int, bm: int = 64):
+    """LQ-quantize `x` (M, K) along K with region size g (g must divide K).
+
+    Returns (codes int32 (M,K), scales f32 (M,R), mins f32 (M,R)); matches
+    ref.ref_quantize exactly.
+    """
+    m, k = x.shape
+    if k % g:
+        raise ValueError(f"K={k} not divisible by region size g={g}")
+    r = k // g
+    bm = fit_tile(m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, g=g),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m, r), jnp.float32),
+            jax.ShapeDtypeStruct((m, r), jnp.float32),
+        ],
+        interpret=True,
+    )(x)

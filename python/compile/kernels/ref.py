@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written with
+plain jnp ops and no Pallas. pytest pins kernel == ref (assert_allclose), and
+hypothesis sweeps shapes / bit widths / region sizes. The rust fixed-point
+GEMMs are pinned against the same semantics through shared npz fixtures.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import quant
+
+
+def ref_matmul(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f32 oracle for the plain tiled matmul kernel."""
+    return a @ w
+
+
+def ref_quantize(x: jnp.ndarray, bits: int, g: int):
+    """Oracle for the activation-quantization kernel: LQ along the last axis."""
+    return quant.quantize_lq(x, bits, g)
+
+
+def ref_lq_matmul(a: jnp.ndarray, w: jnp.ndarray, bits_a: int, bits_w: int, g: int):
+    """Oracle for the region-quantized matmul kernel (eq. 7)."""
+    return quant.lq_matmul_reference(a, w, bits_a, bits_w, g)
+
+
+def ref_lq_matmul_fakequant(a, w, bits_a, bits_w, g):
+    """Equivalent formulation: fake-quant both operands, then f32 matmul.
+
+    Mathematically identical to ref_lq_matmul (eq. 7 is the expansion of the
+    product of the affine reconstructions); used as a cross-check in tests.
+    """
+    aq = quant.fake_quant_lq(a, bits_a, g)
+    wq = quant.fake_quant_lq(w.T, bits_w, g).T
+    return aq @ wq
+
+
+def ref_int_gemm(qa: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
+    """Integer GEMM oracle for the LUT kernel: sum_k qa[m,k] * qw[k,n]."""
+    return qa.astype(jnp.int32) @ qw.astype(jnp.int32)
+
+
+def ref_lut_gemm(qa: jnp.ndarray, qw: jnp.ndarray, bits_a: int) -> jnp.ndarray:
+    """Oracle for the LUT (code-bucketing) GEMM — exact integer equality.
+
+    The paper's §V scheme: for c in {0..2^bits-1}, bucket-sum the weights
+    whose paired activation code is c (adds only), then combine with
+    c * bucket (a handful of multiplies per region; c=0 contributes nothing,
+    c=1 needs no multiply). Produces exactly sum_k qa*qw.
+    """
+    levels = 1 << bits_a
+    out = jnp.zeros((qa.shape[0], qw.shape[1]), dtype=jnp.int32)
+    for c in range(1, levels):
+        sel = (qa == c).astype(jnp.int32)          # (M, K)
+        bucket = sel @ qw.astype(jnp.int32)        # adds only
+        out = out + c * bucket
+    return out

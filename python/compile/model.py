@@ -1,0 +1,282 @@
+"""L2: JAX model definitions — MiniAlexNet and MiniVGG (NCHW).
+
+These are the scaled-down stand-ins for the paper's Caffe AlexNet / VGG-16
+(see DESIGN.md §Substitutions); the *full* architectures live in the rust
+side (`nn/arch.rs`) for the analytic experiments (Table 3 op counts).
+
+Three forward paths over the same parameters:
+  - :func:`forward`         — fp32 reference (used for training and the f32
+                              serving artifacts).
+  - :func:`forward_quant`   — fake-quant DQ/LQ path in plain jnp (python-side
+                              accuracy checks; the big sweeps run in rust).
+  - :func:`forward_pallas`  — the L1 path: im2col + Pallas quantize +
+                              lq_matmul kernels; lowered into the quantized
+                              serving artifacts so the kernels ship in HLO.
+
+Convolutions in the quantized paths use im2col + GEMM, which is exactly the
+formulation the paper's Edison implementation uses ("matrix correlation based
+convolution ... offloaded to MKL") and the one the rust fixed-point kernels
+mirror. Parameters are a flat dict name -> array; PARAM_ORDER fixes the
+positional order used by the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quant
+from compile.kernels import lq_matmul as k_lq
+from compile.kernels import quantize as k_quant
+
+Params = Dict[str, jnp.ndarray]
+
+NUM_CLASSES = 16
+IN_SHAPE = (3, 32, 32)
+
+
+class ConvSpec:
+    """One conv layer: out channels, kernel, stride, padding, + pool flag."""
+
+    def __init__(self, name, cin, cout, k, stride=1, pad=None, pool=False):
+        self.name = name
+        self.cin = cin
+        self.cout = cout
+        self.k = k
+        self.stride = stride
+        self.pad = (k // 2) if pad is None else pad
+        self.pool = pool
+
+    @property
+    def patch(self) -> int:
+        """im2col K dimension == the paper's default LQ region size."""
+        return self.cin * self.k * self.k
+
+
+class FcSpec:
+    def __init__(self, name, cin, cout, relu=True):
+        self.name = name
+        self.cin = cin
+        self.cout = cout
+        self.relu = relu
+
+
+def minialexnet() -> Tuple[List, List]:
+    convs = [
+        ConvSpec("conv1", 3, 32, 5, pool=True),
+        ConvSpec("conv2", 32, 64, 5, pool=True),
+        ConvSpec("conv3", 64, 128, 3, pool=True),
+    ]
+    fcs = [FcSpec("fc1", 128 * 4 * 4, 256), FcSpec("fc2", 256, NUM_CLASSES, relu=False)]
+    return convs, fcs
+
+
+def minivgg() -> Tuple[List, List]:
+    convs = [
+        ConvSpec("conv1_1", 3, 32, 3), ConvSpec("conv1_2", 32, 32, 3, pool=True),
+        ConvSpec("conv2_1", 32, 64, 3), ConvSpec("conv2_2", 64, 64, 3, pool=True),
+        ConvSpec("conv3_1", 64, 128, 3), ConvSpec("conv3_2", 128, 128, 3, pool=True),
+    ]
+    fcs = [FcSpec("fc1", 128 * 4 * 4, 256), FcSpec("fc2", 256, NUM_CLASSES, relu=False)]
+    return convs, fcs
+
+
+MODELS = {"minialexnet": minialexnet, "minivgg": minivgg}
+
+
+def param_order(model: str) -> List[str]:
+    """Fixed positional parameter order for the AOT artifacts + rust loader."""
+    convs, fcs = MODELS[model]()
+    names = []
+    for c in convs:
+        names += [f"{c.name}.w", f"{c.name}.b"]
+    for f in fcs:
+        names += [f"{f.name}.w", f"{f.name}.b"]
+    return names
+
+
+def init_params(model: str, seed: int = 0) -> Params:
+    """He-init conv (O, C, Kh, Kw) and fc (In, Out) parameters."""
+    convs, fcs = MODELS[model]()
+    rng = np.random.default_rng(seed)
+    p: Params = {}
+    for c in convs:
+        fan_in = c.cin * c.k * c.k
+        p[f"{c.name}.w"] = jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / fan_in), size=(c.cout, c.cin, c.k, c.k)),
+            dtype=jnp.float32,
+        )
+        p[f"{c.name}.b"] = jnp.zeros((c.cout,), jnp.float32)
+    for f in fcs:
+        p[f"{f.name}.w"] = jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / f.cin), size=(f.cin, f.cout)), dtype=jnp.float32
+        )
+        p[f"{f.name}.b"] = jnp.zeros((f.cout,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------- layers --
+
+
+def conv2d(x, w, b, stride: int, pad: int):
+    """fp32 conv, NCHW x (B,C,H,W), w (O,C,Kh,Kw)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def im2col(x, k: int, stride: int, pad: int):
+    """(B,C,H,W) -> (B*Ho*Wo, C*k*k) patch matrix, channel-major patches.
+
+    Column order matches rust `fixedpoint::im2col` and the paper's region
+    layout: one row = one receptive field = one LQ region (g = C*k*k).
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    # gather k*k shifted views; axis order (B, Ho, Wo, C, kh, kw)
+    cols = jnp.stack(
+        [
+            xp[:, :, i : i + stride * ho : stride, j : j + stride * wo : stride]
+            for i in range(k)
+            for j in range(k)
+        ],
+        axis=-1,
+    )  # (B, C, Ho, Wo, k*k)
+    cols = cols.transpose(0, 2, 3, 1, 4)  # (B, Ho, Wo, C, k*k)
+    return cols.reshape(b * ho * wo, c * k * k), (b, ho, wo)
+
+
+def maxpool2(x):
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def log_softmax(z):
+    z = z - z.max(axis=-1, keepdims=True)
+    return z - jnp.log(jnp.exp(z).sum(axis=-1, keepdims=True))
+
+
+# -------------------------------------------------------------- forwards --
+
+
+def forward(params: Params, x: jnp.ndarray, model: str) -> jnp.ndarray:
+    """fp32 reference forward: logits (B, NUM_CLASSES)."""
+    convs, fcs = MODELS[model]()
+    for c in convs:
+        x = conv2d(x, params[f"{c.name}.w"], params[f"{c.name}.b"], c.stride, c.pad)
+        x = jax.nn.relu(x)
+        if c.pool:
+            x = maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    for f in fcs:
+        x = x @ params[f"{f.name}.w"] + params[f"{f.name}.b"]
+        if f.relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _quant_fn(scheme: str, bits: int, g: int):
+    if scheme == "lq":
+        return lambda t: quant.fake_quant_lq(t, bits, g)
+    if scheme == "dq":
+        return lambda t: quant.fake_quant_dq(t, bits)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def forward_quant(
+    params: Params,
+    x: jnp.ndarray,
+    model: str,
+    *,
+    scheme: str = "lq",
+    bits_w: int = 8,
+    bits_a: int = 8,
+    region: int = 0,
+) -> jnp.ndarray:
+    """Fake-quant forward (paper §VI protocol).
+
+    Weights are quantized per-kernel (offline, static 8-bit in the paper);
+    activations are quantized at runtime with `scheme` in {dq, lq}. `region`
+    is the LQ region size; 0 means "the conv patch size" (paper default).
+    Conv layers run as im2col + GEMM so the quantization region layout is the
+    GEMM reduction axis, exactly like the kernels and the rust engine.
+    """
+    convs, fcs = MODELS[model]()
+    for c in convs:
+        w = params[f"{c.name}.w"].reshape(c.cout, c.patch)  # (O, K) rows=kernels
+        wq = quant.fake_quant_lq(w, bits_w, c.patch if region == 0 else min(region, c.patch))
+        a, (b, ho, wo) = im2col(x, c.k, c.stride, c.pad)
+        g = c.patch if region == 0 else min(region, c.patch)
+        aq = _quant_fn(scheme, bits_a, g)(a)
+        out = aq @ wq.T + params[f"{c.name}.b"]
+        x = jax.nn.relu(out).reshape(b, ho, wo, c.cout).transpose(0, 3, 1, 2)
+        if c.pool:
+            x = maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    for f in fcs:
+        w = params[f"{f.name}.w"]
+        g = w.shape[0] if region == 0 else min(region, w.shape[0])
+        wq = quant.fake_quant_lq(w.T, bits_w, g).T
+        xq = _quant_fn(scheme, bits_a, g)(x)
+        x = xq @ wq + params[f"{f.name}.b"]
+        if f.relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _lq_gemm_pallas(a, w_t, bits: int, g: int):
+    """Quantize `a` at runtime (Pallas) and contract with offline-quantized
+    weights (Pallas lq_matmul). w_t is (N, K).
+
+    Tile choice: on a real TPU the BlockSpec tiles would be VMEM-bounded
+    (DESIGN.md §Perf); the shipped artifacts execute interpret-lowered HLO on
+    the CPU PJRT plugin, where each grid step becomes a while-loop iteration
+    with dynamic-slice traffic — so we collapse the grid with tiles as large
+    as the operands (measured 434 -> 17 ms for the b8 MiniAlexNet forward,
+    EXPERIMENTS.md §Perf)."""
+    m = a.shape[0]
+    n = w_t.shape[0]
+    qa, sa, ma = k_quant.quantize_lq(a, bits=bits, g=g, bm=m)
+    qw, sw, mw = quant.quantize_lq(w_t, 8, g)  # weights: static 8-bit offline
+    return k_lq.lq_matmul(qa, sa, ma, qw, sw, mw, g=g, bm=m, bn=n)
+
+
+def _pick_region(k: int, want: int) -> int:
+    """Largest divisor of k that is <= want (kernels need g | K)."""
+    return k_lq.fit_tile(k, want)
+
+
+def forward_pallas(
+    params: Params, x: jnp.ndarray, model: str, *, bits: int = 8, region: int = 0
+) -> jnp.ndarray:
+    """The L1 path: every GEMM goes through the Pallas quantize + lq_matmul
+    kernels. This is what `aot.py` lowers into the *_lq*.hlo.txt artifacts, so
+    the shipped HLO contains the kernels' computation."""
+    convs, fcs = MODELS[model]()
+    for c in convs:
+        w = params[f"{c.name}.w"].reshape(c.cout, c.patch)
+        a, (b, ho, wo) = im2col(x, c.k, c.stride, c.pad)
+        g = c.patch if region == 0 else _pick_region(c.patch, region)
+        out = _lq_gemm_pallas(a, w, bits, g) + params[f"{c.name}.b"]
+        x = jax.nn.relu(out).reshape(b, ho, wo, c.cout).transpose(0, 3, 1, 2)
+        if c.pool:
+            x = maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    for f in fcs:
+        k = f.cin
+        g = k if region == 0 else _pick_region(k, region)
+        x = _lq_gemm_pallas(x, params[f"{f.name}.w"].T, bits, g) + params[f"{f.name}.b"]
+        if f.relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+forward_jit = functools.partial(jax.jit, static_argnames=("model",))(forward)

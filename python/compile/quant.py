@@ -1,0 +1,149 @@
+"""Reference quantization library: dynamic fixed point (DQ) and the paper's
+local-based quantization (LQ).
+
+This is the *semantic source of truth* shared by the Pallas kernels (L1), the
+JAX models (L2) and the rust `quant` module (S1) — the rust side mirrors these
+functions and the parity is pinned by tests on both sides.
+
+Terminology (paper §IV):
+  - A tensor is quantized along its last axis in *regions* of `g` consecutive
+    elements. Each region k has its own step
+        s_k = (max_k - min_k) / (2^n - 1)                     (eq. 5 / 7)
+    and quantization function
+        Q_k(x)   = round((x - min_k) / s_k)   in [0, 2^n - 1]
+        Q_k^-1(q) = q * s_k + min_k
+  - DQ (dynamic fixed point, Courbariaux et al. 2014) is the degenerate case
+    g = (whole tensor): one globally-shared step per layer.
+  - LQ uses small g (the paper defaults to the conv kernel's receptive-field
+    size, e.g. 11*11*3 = 363 for AlexNet conv1, and §VI.F shrinks it further).
+
+All functions are pure jnp and jit-friendly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_to_multiple(x: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Pad the last axis of `x` with zeros up to a multiple of `g`."""
+    k = x.shape[-1]
+    rem = (-k) % g
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)
+
+
+def region_minmax(x: jnp.ndarray, g: int):
+    """Per-region (min, max) along the last axis.
+
+    Padding elements (when g does not divide K) are *excluded*: the tail
+    region's min/max is computed over its real elements only.
+
+    Returns arrays of shape x.shape[:-1] + (ceil(K/g),).
+    """
+    k = x.shape[-1]
+    rem = (-k) % g
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    xmin = jnp.pad(x, pad, constant_values=jnp.inf)
+    xmax = jnp.pad(x, pad, constant_values=-jnp.inf)
+    r = xmin.shape[-1] // g
+    xmin = xmin.reshape(x.shape[:-1] + (r, g)).min(axis=-1)
+    xmax = xmax.reshape(x.shape[:-1] + (r, g)).max(axis=-1)
+    return xmin, xmax
+
+
+def quantize_lq(x: jnp.ndarray, bits: int, g: int):
+    """Local-region quantization of `x` along the last axis.
+
+    Returns (codes, scales, mins):
+      codes  int32, same shape as x (padded region tail is quantized too but
+             callers slice back to K),
+      scales f32 of shape x.shape[:-1] + (R,)   -- s_k, never zero,
+      mins   f32 of shape x.shape[:-1] + (R,)   -- x_min per region.
+    """
+    if bits < 1 or bits > 16:
+        raise ValueError(f"bits must be in [1, 16], got {bits}")
+    if g < 1:
+        raise ValueError(f"region size must be >= 1, got {g}")
+    levels = (1 << bits) - 1
+    mn, mx = region_minmax(x, g)
+    span = mx - mn
+    # Flat regions (span == 0) quantize everything to code 0 with scale 1 so
+    # dequantization reproduces the constant exactly via the `min` term.
+    scale = jnp.where(span > 0, span / levels, 1.0)
+    xp = pad_to_multiple(x, g)
+    r = xp.shape[-1] // g
+    xr = xp.reshape(xp.shape[:-1] + (r, g))
+    codes = jnp.clip(
+        jnp.round((xr - mn[..., None]) / scale[..., None]), 0, levels
+    ).astype(jnp.int32)
+    codes = codes.reshape(xp.shape)[..., : x.shape[-1]]
+    return codes, scale.astype(jnp.float32), mn.astype(jnp.float32)
+
+
+def dequantize_lq(codes: jnp.ndarray, scales: jnp.ndarray, mins: jnp.ndarray, g: int):
+    """Inverse of :func:`quantize_lq` (up to the rounding error <= s_k/2)."""
+    cp = pad_to_multiple(codes.astype(jnp.float32), g)
+    r = cp.shape[-1] // g
+    cr = cp.reshape(cp.shape[:-1] + (r, g))
+    x = cr * scales[..., None] + mins[..., None]
+    return x.reshape(cp.shape)[..., : codes.shape[-1]]
+
+
+def fake_quant_lq(x: jnp.ndarray, bits: int, g: int) -> jnp.ndarray:
+    """Quantize-dequantize round trip: the value the fixed-point pipeline sees."""
+    codes, scales, mins = quantize_lq(x, bits, g)
+    return dequantize_lq(codes, scales, mins, g)
+
+
+def quantize_dq(x: jnp.ndarray, bits: int):
+    """Dynamic fixed point: one region spanning the whole tensor (paper §IV.B)."""
+    flat = x.reshape(1, -1)
+    codes, scales, mins = quantize_lq(flat, bits, flat.shape[-1])
+    return codes.reshape(x.shape), scales[0, 0], mins[0, 0]
+
+
+def fake_quant_dq(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    codes, scale, mn = quantize_dq(x, bits)
+    return codes.astype(jnp.float32) * scale + mn
+
+
+def lq_matmul_reference(a: jnp.ndarray, w: jnp.ndarray, bits_a: int, bits_w: int, g: int):
+    """Eq. (7): integer-accumulated matmul with per-region affine correction.
+
+    a: (M, K) activations, regions of size g along K (per row).
+    w: (K, N) weights, regions of size g along K (per column).
+
+    dot(a_i, w_j) = sum_r [ sa_ir*sw_rj * S_qq + sa_ir*mw_rj * S_qa
+                          + sw_rj*ma_ir * S_qw + g_r * ma_ir*mw_rj ]
+    where S_qq = sum_{k in r} qa_ik qw_kj, etc. This is *exactly* what the
+    integer hardware pipeline computes, so it is the oracle for the Pallas
+    kernel and the rust fixed-point GEMMs.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    qa, sa, ma = quantize_lq(a, bits_a, g)          # (M,K) (M,R) (M,R)
+    qw, sw, mw = quantize_lq(w.T, bits_w, g)        # (N,K) (N,R) (N,R)
+    kp = pad_to_multiple(qa, g).shape[-1]
+    r = kp // g
+    # Padding positions (beyond K) must contribute nothing to any partial
+    # sum: zero their codes and count only real elements in the min*min term.
+    valid = (jnp.arange(kp) < k).astype(jnp.float32).reshape(1, r, g)
+    qa_r = pad_to_multiple(qa, g).reshape(m, r, g).astype(jnp.float32) * valid
+    qw_r = pad_to_multiple(qw, g).reshape(n, r, g).astype(jnp.float32) * valid
+    # Per-region partial integer sums.
+    s_qq = jnp.einsum("mrg,nrg->mnr", qa_r, qw_r)
+    s_qa = qa_r.sum(-1)                              # (M,R)
+    s_qw = qw_r.sum(-1)                              # (N,R)
+    # Count of *real* (unpadded) elements per region for the min*min term.
+    gcount = jnp.minimum(g, k - jnp.arange(r) * g).astype(jnp.float32)  # (R,)
+    out = (
+        jnp.einsum("mr,nr,mnr->mn", sa, sw, s_qq)
+        + jnp.einsum("mr,nr,mr->mn", sa, mw, s_qa)
+        + jnp.einsum("nr,mr,nr->mn", sw, ma, s_qw)
+        + jnp.einsum("r,mr,nr->mn", gcount, ma, mw)
+    )
+    return out

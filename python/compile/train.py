@@ -1,0 +1,106 @@
+"""Build-time trainer for the Mini models on the synthetic dataset.
+
+Runs ONCE under `make artifacts` (skipped when the weight files already
+exist). SGD with momentum + cosine decay on softmax cross-entropy. The
+resulting weights are written as plain npz (name -> array, the names from
+model.param_order) which the rust side loads with `Literal::read_npz`.
+
+    python -m compile.train --model minialexnet --out ../artifacts/weights_minialexnet.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datagen, model as M
+
+
+def cross_entropy(params, x, y, model_name):
+    logits = M.forward(params, x, model_name)
+    logp = M.log_softmax(logits)
+    return -logp[jnp.arange(y.shape[0]), y].mean()
+
+
+def accuracy(params, x, y, model_name, batch=256):
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = M.forward_jit(params, x[i : i + batch], model=model_name)
+        hits += int((jnp.argmax(logits, -1) == y[i : i + batch]).sum())
+    return hits / x.shape[0]
+
+
+def train(model_name: str, epochs: int, lr: float, momentum: float, batch: int,
+          seed: int, train_n: int, val_n: int):
+    xt, yt = datagen.generate(train_n, seed=2018)
+    xv, yv = datagen.generate(val_n, seed=2019)
+    xt, yt, xv, yv = map(jnp.asarray, (xt, yt, xv, yv))
+    params = M.init_params(model_name, seed=seed)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(cross_entropy), static_argnames=("model_name",)
+    )
+
+    @jax.jit
+    def sgd(params, vel, grads, lr):
+        vel = {k: momentum * vel[k] - lr * grads[k] for k in params}
+        params = {k: params[k] + vel[k] for k in params}
+        return params, vel
+
+    steps_per_epoch = train_n // batch
+    total_steps = epochs * steps_per_epoch
+    rng = np.random.default_rng(seed)
+    step = 0
+    for ep in range(epochs):
+        order = rng.permutation(train_n)
+        t0 = time.time()
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = order[i * batch : (i + 1) * batch]
+            cur_lr = lr * 0.5 * (1 + np.cos(np.pi * step / total_steps))
+            loss, grads = grad_fn(params, xt[idx], yt[idx], model_name=model_name)
+            params, vel = sgd(params, vel, grads, cur_lr)
+            losses.append(float(loss))
+            step += 1
+        va = accuracy(params, xv, yv, model_name)
+        print(
+            f"[{model_name}] epoch {ep + 1}/{epochs} loss={np.mean(losses):.4f} "
+            f"val_top1={va:.4f} ({time.time() - t0:.1f}s)",
+            flush=True,
+        )
+    return params, {"val_top1": va, "epochs": epochs, "train_n": train_n}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=sorted(M.MODELS), required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-n", type=int, default=8000)
+    ap.add_argument("--val-n", type=int, default=1000)
+    args = ap.parse_args()
+
+    params, meta = train(
+        args.model, args.epochs, args.lr, args.momentum, args.batch, args.seed,
+        args.train_n, args.val_n,
+    )
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    np.savez(args.out, **{k: np.asarray(v) for k, v in params.items()})
+    with open(args.out.replace(".npz", ".meta.json"), "w") as f:
+        json.dump({"model": args.model, **meta}, f, indent=2)
+    print(f"wrote {args.out} (val_top1={meta['val_top1']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""AOT lowering tests: HLO text generation round-trips through the
+xla_client parser (the same path `make artifacts` uses)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_simple_fn():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_lower_variant_f32_small():
+    params = M.init_params("minialexnet")
+    text = aot.lower_variant("minialexnet", "f32", 1, 0, 0, params)
+    assert "ENTRY" in text
+    # input parameter: 1x3x32x32
+    assert "f32[1,3,32,32]" in text
+    # output: tuple with (1, 16) logits
+    assert "f32[1,16]" in text
+
+
+def test_lower_variant_lq_contains_quantization():
+    params = M.init_params("minialexnet")
+    text = aot.lower_variant("minialexnet", "lq", 1, 8, 0, params)
+    # The runtime quantization pass lowers to round/clamp ops in HLO (they
+    # may be wrapped in called computations, so check for either form).
+    assert "round-nearest-even" in text or "round" in text
+    assert "clamp" in text or "minimum" in text or "maximum" in text
+
+
+def test_lower_variant_rejects_unknown():
+    params = M.init_params("minialexnet")
+    with pytest.raises(ValueError):
+        aot.lower_variant("minialexnet", "nope", 1, 0, 0, params)
+
+
+def test_param_order_matches_lowering_arity():
+    params = M.init_params("minivgg")
+    order = M.param_order("minivgg")
+    text = aot.lower_variant("minivgg", "f32", 1, 0, 0, params)
+    # The ENTRY computation takes len(order) weight params + 1 input (nested
+    # computations have their own parameters, so count ENTRY only).
+    entry = text[text.index("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(order) + 1, (n_params, len(order))

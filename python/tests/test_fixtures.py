@@ -1,0 +1,44 @@
+"""Fixture-generator self-checks (the rust side consumes these via
+`rust/tests/quant_parity.rs`; here we pin the python-side invariants)."""
+
+import numpy as np
+
+from compile import fixtures, quant
+
+
+def test_cases_cover_paper_bit_widths():
+    bits = {c[2] for c in fixtures.CASES}
+    assert {8, 6, 4, 2, 1} <= bits
+
+
+def test_cases_include_ragged_regions():
+    assert any(k % g != 0 for (_, k, _, g, _) in fixtures.CASES)
+
+
+def test_fixture_determinism(tmp_path):
+    import subprocess
+    import sys
+
+    out1 = tmp_path / "a.npz"
+    out2 = tmp_path / "b.npz"
+    for out in (out1, out2):
+        subprocess.run(
+            [sys.executable, "-m", "compile.fixtures", "--out", str(out)],
+            check=True,
+        )
+    a = np.load(out1)
+    b = np.load(out2)
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_gemm_fixture_matches_recomputation():
+    rng = np.random.default_rng(100)  # seed 0 == case 0
+    rows, k, bits, g = fixtures.CASES[0][:4]
+    x = rng.normal(scale=2.0, size=(rows, k)).astype(np.float32)
+    codes, scales, mins = quant.quantize_lq(x, bits, g)
+    codes2, scales2, mins2 = quant.quantize_lq(x, bits, g)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(scales2))
+    np.testing.assert_array_equal(np.asarray(mins), np.asarray(mins2))

@@ -1,0 +1,110 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes / bit widths / region sizes; every kernel runs in
+interpret mode (the CPU plugin cannot execute Mosaic custom-calls).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import lq_matmul, lut_gemm, quantize, ref
+
+
+class TestQuantizeKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 48),
+        r=st.integers(1, 6),
+        g=st.sampled_from([1, 2, 4, 8]),
+        bits=st.sampled_from([1, 2, 4, 6, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, r, g, bits, seed):
+        k = r * g  # kernel requires g | K
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        kc, ks, km = quantize.quantize_lq(x, bits=bits, g=g)
+        rc, rs, rm = ref.ref_quantize(x, bits, g)
+        np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+        np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(km), np.asarray(rm), rtol=1e-6)
+
+    def test_rejects_non_dividing_region(self):
+        with pytest.raises(ValueError):
+            quantize.quantize_lq(jnp.zeros((4, 10)), bits=8, g=3)
+
+
+class TestLqMatmulKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 40),
+        n=st.integers(1, 24),
+        r=st.integers(1, 4),
+        g=st.sampled_from([2, 4, 8]),
+        bits=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_eq7_reference(self, m, n, r, g, bits, seed):
+        k = r * g
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        qa, sa, ma = quant.quantize_lq(a, bits, g)
+        qw, sw, mw = quant.quantize_lq(w.T, bits, g)
+        out = lq_matmul.lq_matmul(qa, sa, ma, qw, sw, mw, g=g)
+        want = ref.ref_lq_matmul(a, w, bits, bits, g)
+        scale = float(jnp.abs(want).max()) + 1e-6
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), atol=3e-4 * scale, rtol=3e-4
+        )
+
+    def test_tile_fitting_odd_sizes(self):
+        # M=33, N=17 force fit_tile to pick non-default tiles.
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(33, 8)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(8, 17)).astype(np.float32))
+        qa, sa, ma = quant.quantize_lq(a, 8, 4)
+        qw, sw, mw = quant.quantize_lq(w.T, 8, 4)
+        out = lq_matmul.lq_matmul(qa, sa, ma, qw, sw, mw, g=4)
+        assert out.shape == (33, 17)
+
+    def test_rejects_bad_region(self):
+        with pytest.raises(ValueError):
+            lq_matmul.lq_matmul(
+                jnp.zeros((4, 10), jnp.int32),
+                jnp.zeros((4, 2)),
+                jnp.zeros((4, 2)),
+                jnp.zeros((4, 10), jnp.int32),
+                jnp.zeros((4, 2)),
+                jnp.zeros((4, 2)),
+                g=3,
+            )
+
+
+class TestLutGemmKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 32),
+        k=st.integers(1, 64),
+        n=st.integers(1, 32),
+        bits=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exact_integer_equality(self, m, k, n, bits, seed):
+        rng = np.random.default_rng(seed)
+        qa = jnp.asarray(rng.integers(0, 1 << bits, size=(m, k)).astype(np.int32))
+        qw = jnp.asarray(rng.integers(0, 256, size=(k, n)).astype(np.int32))
+        got = lut_gemm.lut_gemm(qa, qw, bits=bits)
+        want = ref.ref_int_gemm(qa, qw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bucketing_formulation_matches(self):
+        rng = np.random.default_rng(1)
+        qa = jnp.asarray(rng.integers(0, 4, size=(8, 24)).astype(np.int32))
+        qw = jnp.asarray(rng.integers(0, 256, size=(24, 8)).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(ref.ref_lut_gemm(qa, qw, 2)), np.asarray(ref.ref_int_gemm(qa, qw))
+        )

@@ -1,0 +1,81 @@
+"""L2 model tests: shapes, quantized-path agreement, im2col layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("name", sorted(M.MODELS))
+class TestForward:
+    def test_shapes(self, name, rng):
+        p = M.init_params(name)
+        x = jnp.asarray(rng.normal(size=(2, *M.IN_SHAPE)).astype(np.float32))
+        y = M.forward(p, x, name)
+        assert y.shape == (2, M.NUM_CLASSES)
+        assert bool(jnp.isfinite(y).all())
+
+    def test_quant8_close_to_f32(self, name, rng):
+        p = M.init_params(name)
+        x = jnp.asarray(rng.uniform(size=(2, *M.IN_SHAPE)).astype(np.float32))
+        f = M.forward(p, x, name)
+        q = M.forward_quant(p, x, name, scheme="lq", bits_a=8)
+        rel = float(jnp.abs(f - q).max() / (jnp.abs(f).max() + 1e-6))
+        assert rel < 0.1, rel
+
+    def test_pallas_path_matches_fakequant(self, name, rng):
+        p = M.init_params(name)
+        x = jnp.asarray(rng.uniform(size=(1, *M.IN_SHAPE)).astype(np.float32))
+        q = M.forward_quant(p, x, name, scheme="lq", bits_a=8, bits_w=8)
+        k = M.forward_pallas(p, x, name, bits=8)
+        rel = float(jnp.abs(q - k).max() / (jnp.abs(q).max() + 1e-6))
+        assert rel < 0.05, rel
+
+    def test_param_order_covers_params(self, name, rng):
+        p = M.init_params(name)
+        assert sorted(M.param_order(name)) == sorted(p.keys())
+
+
+class TestIm2col:
+    def test_matches_lax_conv(self, rng):
+        # im2col + GEMM must equal lax.conv for the same weights.
+        b, c, h, o, k = 2, 3, 8, 4, 3
+        x = jnp.asarray(rng.normal(size=(b, c, h, h)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(o, c, k, k)).astype(np.float32))
+        bias = jnp.zeros((o,))
+        direct = M.conv2d(x, w, bias, 1, 1)
+        cols, (bb, ho, wo) = M.im2col(x, k, 1, 1)
+        gemm = (cols @ w.reshape(o, -1).T).reshape(bb, ho, wo, o).transpose(0, 3, 1, 2)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(gemm), atol=1e-4)
+
+    def test_patch_column_order_channel_major(self, rng):
+        # One-hot input pins the (C, kh, kw) column order the rust side mirrors.
+        x = jnp.zeros((1, 2, 4, 4)).at[0, 1, 1, 2].set(7.0)
+        cols, _ = M.im2col(x, 3, 1, 1)
+        # output position (1,2) has the hot pixel at patch center:
+        # column = (ci * k + kh) * k + kw = (1*3+1)*3+1 = 13
+        row = cols[1 * 4 + 2]
+        assert float(row[13]) == 7.0
+
+
+class TestGradients:
+    def test_loss_differentiable(self, rng):
+        p = M.init_params("minialexnet")
+        x = jnp.asarray(rng.normal(size=(4, *M.IN_SHAPE)).astype(np.float32))
+        y = jnp.asarray([0, 1, 2, 3])
+
+        def loss(params):
+            lp = M.log_softmax(M.forward(params, x, "minialexnet"))
+            return -lp[jnp.arange(4), y].mean()
+
+        g = jax.grad(loss)(p)
+        assert set(g) == set(p)
+        total = sum(float(jnp.abs(v).sum()) for v in g.values())
+        assert np.isfinite(total) and total > 0

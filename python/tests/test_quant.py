@@ -1,0 +1,117 @@
+"""Unit + property tests for the quantization reference library."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+class TestQuantizeLq:
+    def test_constant_region_exact(self):
+        x = jnp.full((2, 8), 3.25)
+        fq = quant.fake_quant_lq(x, 2, 4)
+        np.testing.assert_array_equal(np.asarray(fq), np.asarray(x))
+
+    def test_codes_in_range(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+        for bits in (1, 2, 4, 6, 8):
+            codes, _, _ = quant.quantize_lq(x, bits, 8)
+            assert int(codes.min()) >= 0
+            assert int(codes.max()) <= (1 << bits) - 1
+
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(3, 40)).astype(np.float32))
+        for bits, g in [(8, 8), (4, 10), (2, 5)]:
+            codes, scales, mins = quant.quantize_lq(x, bits, g)
+            fq = quant.dequantize_lq(codes, scales, mins, g)
+            err = np.abs(np.asarray(fq - x))
+            smax = float(scales.max())
+            assert err.max() <= smax / 2 + 1e-6
+
+    def test_bad_bits_raises(self):
+        with pytest.raises(ValueError):
+            quant.quantize_lq(jnp.zeros((2, 4)), 0, 2)
+        with pytest.raises(ValueError):
+            quant.quantize_lq(jnp.zeros((2, 4)), 8, 0)
+
+    def test_ragged_tail_region(self):
+        # K=7, g=3: the tail region has one element; min/max exclude padding.
+        x = jnp.asarray([[1.0, 2.0, 3.0, -4.0, 0.0, 4.0, 100.0]])
+        codes, scales, mins = quant.quantize_lq(x, 2, 3)
+        # last region = [100.0] alone: constant -> exact reconstruction
+        fq = quant.dequantize_lq(codes, scales, mins, 3)
+        assert float(fq[0, -1]) == 100.0
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        rows=st.integers(1, 6),
+        k=st.integers(1, 40),
+        bits=st.sampled_from([1, 2, 4, 6, 8]),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_property_roundtrip(self, rows, k, bits, seed, data):
+        g = data.draw(st.integers(1, k))
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(scale=3.0, size=(rows, k)).astype(np.float32))
+        codes, scales, mins = quant.quantize_lq(x, bits, g)
+        assert codes.shape == x.shape
+        fq = quant.dequantize_lq(codes, scales, mins, g)
+        err = np.abs(np.asarray(fq - x))
+        # per-element bound via the element's own region scale
+        r = int(np.ceil(k / g))
+        for i in range(rows):
+            for j in range(k):
+                s = float(scales[i, j // g])
+                assert err[i, j] <= s / 2 + 1e-5 * max(s, 1.0), (i, j, s)
+        assert scales.shape == (rows, r)
+
+    def test_dq_is_whole_tensor(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+        codes, scale, mn = quant.quantize_dq(x, 8)
+        assert codes.shape == x.shape
+        assert float(mn) == float(x.min())
+
+    def test_lq_step_never_exceeds_dq_step(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+        _, s_dq, _ = quant.quantize_dq(x, 4)
+        _, s_lq, _ = quant.quantize_lq(x, 4, 8)
+        assert float(s_lq.max()) <= float(s_dq) + 1e-7
+
+
+class TestLqMatmulReference:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 6),
+        k=st.integers(1, 24),
+        n=st.integers(1, 6),
+        bits=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_eq7_equals_fakequant_matmul(self, m, k, n, bits, seed, data):
+        g = data.draw(st.integers(1, k))
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        r1 = quant.lq_matmul_reference(a, w, bits, bits, g)
+        aq = quant.fake_quant_lq(a, bits, g)
+        wq = quant.fake_quant_lq(w.T, bits, g).T
+        r2 = aq @ wq
+        scale = float(jnp.abs(r2).max()) + 1e-6
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=2e-4 * scale, rtol=2e-4)
+
+    def test_8bit_close_to_exact(self):
+        rng = np.random.default_rng(5)
+        a = jnp.asarray(rng.normal(size=(8, 75)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(75, 12)).astype(np.float32))
+        approx = quant.lq_matmul_reference(a, w, 8, 8, 75)
+        exact = a @ w
+        rel = float(jnp.abs(approx - exact).max() / jnp.abs(exact).max())
+        assert rel < 0.01

@@ -1,0 +1,15 @@
+//! Bench: Fig. 10 — 2-bit accuracy vs LQ region size (MiniVGG).
+//!
+//! `LQR_BENCH_LIMIT` = validation images (default 512).
+
+fn main() {
+    let limit = std::env::var("LQR_BENCH_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let artifacts = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match lqr::eval::sweep::fig10(&artifacts, &[27, 9, 3], limit) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("fig10_region_sweep skipped: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench: Fig. 2 — fixed-point quantization transfer + error curves.
+//! Prints the staircase/sawtooth samples and verifies max|err| == step/2.
+
+fn main() {
+    print!("{}", lqr::quant::curves::render_curve_table(&[2, 4, 8], 17));
+}

@@ -1,0 +1,18 @@
+//! Bench: Fig. 8 — per-image runtime, f32 baseline vs 8-bit LQ fixed point.
+//!
+//! Measured on the host engine (mini models) + the Edison cost model (full
+//! models). `LQR_BENCH_LIMIT` scales the measured image count (default 20).
+
+fn main() {
+    let images = std::env::var("LQR_BENCH_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let artifacts = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match lqr::eval::sweep::fig8(&artifacts, images) {
+        Ok(t) => t.print(),
+        Err(e) => {
+            eprintln!("fig8_speedup skipped: {e:#} (run `make artifacts`)");
+        }
+    }
+}

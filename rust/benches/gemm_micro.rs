@@ -1,0 +1,111 @@
+//! Micro-benchmarks of the GEMM ladder — the §Perf profiling tool.
+//!
+//! Times f32 / eq.7-i8 / packed / LUT GEMMs on layer-shaped problems and
+//! reports effective GMAC/s, plus the runtime activation-quantization pass.
+//! `LQR_BENCH_ITERS` overrides the per-case iteration count (default 5).
+
+use std::time::Instant;
+
+use lqr::fixedpoint::gemm_lut::gemm_lut;
+use lqr::fixedpoint::gemm_packed::{gemm_packed, PackedMatrix};
+use lqr::fixedpoint::{gemm_f32, gemm_quantized};
+use lqr::quant::{quantize_matrix, RegionSpec};
+use lqr::tensor::Tensor;
+use lqr::util::rng::Rng;
+
+fn gmacs(m: usize, k: usize, n: usize, secs: f64) -> f64 {
+    (m * k * n) as f64 / secs / 1e9
+}
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let iters: usize = std::env::var("LQR_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    println!("gemm micro-bench (iters={iters}, threads={threads})");
+    println!("{:<28} {:>10} {:>10} {:>10}", "case", "ms", "GMAC/s", "vs f32");
+
+    let mut rng = Rng::new(1);
+    // Layer-shaped cases: (label, M, K, N) from the mini models' conv GEMMs.
+    for &(label, m, k, n) in &[
+        ("conv1 1024x75x32", 1024usize, 75usize, 32usize),
+        ("conv2 256x800x64", 256, 800, 64),
+        ("fc 8x2048x256", 8, 2048, 256),
+    ] {
+        let a = Tensor::new(&[m, k], rng.uniform_vec(m * k, 0.0, 1.0));
+        let w_t = Tensor::new(&[n, k], rng.normal_vec(n * k));
+        let w = w_t.transpose2();
+
+        let t_f32 = time(iters, || {
+            std::hint::black_box(gemm_f32(&a, &w, threads));
+        });
+        println!(
+            "{:<28} {:>10.3} {:>10.2} {:>10}",
+            format!("{label} f32"),
+            t_f32 * 1e3,
+            gmacs(m, k, n, t_f32),
+            "1.00x"
+        );
+
+        for bits in [8u8, 2] {
+            let aq = quantize_matrix(&a, bits, RegionSpec::PerRow);
+            let wq = quantize_matrix(&w_t, 8, RegionSpec::PerRow);
+            let t_q = time(iters, || {
+                std::hint::black_box(gemm_quantized(&aq, &wq, threads));
+            });
+            println!(
+                "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
+                format!("{label} i8(a{bits})"),
+                t_q * 1e3,
+                gmacs(m, k, n, t_q),
+                t_f32 / t_q
+            );
+            if bits == 2 {
+                let t_lut = time(iters, || {
+                    std::hint::black_box(gemm_lut(&aq, &wq, threads));
+                });
+                println!(
+                    "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
+                    format!("{label} lut(a2)"),
+                    t_lut * 1e3,
+                    gmacs(m, k, n, t_lut),
+                    t_f32 / t_lut
+                );
+                let ap = PackedMatrix::from_quantized(&aq);
+                let wp = PackedMatrix::from_quantized(&wq);
+                let t_p = time(iters, || {
+                    std::hint::black_box(gemm_packed(&ap, &wp, threads));
+                });
+                println!(
+                    "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
+                    format!("{label} packed(a2)"),
+                    t_p * 1e3,
+                    gmacs(m, k, n, t_p),
+                    t_f32 / t_p
+                );
+            }
+        }
+
+        // Runtime activation quantization cost (the paper's overhead term).
+        let t_quant = time(iters, || {
+            std::hint::black_box(quantize_matrix(&a, 8, RegionSpec::PerRow));
+        });
+        println!(
+            "{:<28} {:>10.3} {:>10} {:>10}",
+            format!("{label} quantize(a)"),
+            t_quant * 1e3,
+            "-",
+            format!("{:.1}%", 100.0 * t_quant / t_f32)
+        );
+    }
+}

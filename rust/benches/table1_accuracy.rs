@@ -1,0 +1,15 @@
+//! Bench: Table 1 — top-1/top-5 accuracy, f32 vs 8-bit LQ (both models).
+//!
+//! `LQR_BENCH_LIMIT` = validation images (default 512).
+
+fn main() {
+    let limit = std::env::var("LQR_BENCH_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let artifacts = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match lqr::eval::sweep::table1(&artifacts, limit) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("table1_accuracy skipped: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: Table 2 / Fig. 9 — DQ vs LQ accuracy across 8/6/4/2-bit inputs.
+//!
+//! `LQR_BENCH_LIMIT` = validation images (default 512).
+
+fn main() {
+    let limit = std::env::var("LQR_BENCH_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let artifacts = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match lqr::eval::sweep::table2(&artifacts, &[8, 6, 4, 2], limit) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("table2_accuracy_sweep skipped: {e:#} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench: Table 3 — conv multiply/add counts, original vs 2-bit LUT.
+//! Purely analytic (full AlexNet / VGG-16); matches the paper's numbers.
+
+fn main() {
+    lqr::eval::sweep::table3().print();
+}

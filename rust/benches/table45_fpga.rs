@@ -1,0 +1,38 @@
+//! Bench: Tables 4 + 5 — FPGA Matrix Multiplier resource/timing/perf/power
+//! model, plus cycle counts from the functional 4x4 CU array simulation.
+
+use lqr::platform::fpga::resource::CuConfig;
+use lqr::platform::fpga::sim::simulate;
+use lqr::util::rng::Rng;
+
+fn main() {
+    lqr::eval::sweep::table45().print();
+
+    // Simulated cycle counts for an AlexNet-conv1-shaped GEMM panel per CU
+    // configuration (same workload, narrower inputs).
+    println!("cycle-level simulation, 16x363x16 quantized GEMM panel:");
+    let (m, k, n) = (16usize, 363usize, 16usize);
+    let mut rng = Rng::new(9);
+    let b_codes: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+    for cfg in [
+        CuConfig::Fixed { wp: 8, wi: 8 },
+        CuConfig::Fixed { wp: 8, wi: 4 },
+        CuConfig::Fixed { wp: 8, wi: 2 },
+    ] {
+        let wi = match cfg {
+            CuConfig::Fixed { wi, .. } => wi,
+            _ => unreachable!(),
+        };
+        let a_codes: Vec<i32> = (0..m * k).map(|_| rng.below(1 << wi) as i32).collect();
+        let sim = simulate(cfg, &a_codes, &b_codes, m, k, n);
+        let r = lqr::platform::fpga::resource::estimate(cfg);
+        let us = sim.cycles as f64 / (r.fmax_mhz * 1e6) * 1e6;
+        println!(
+            "  {:<10} cycles={:<6} util={:>5.1}%  @Fmax: {:.2} us/panel",
+            cfg.label(),
+            sim.cycles,
+            sim.utilization() * 100.0,
+            us
+        );
+    }
+}

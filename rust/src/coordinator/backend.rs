@@ -1,0 +1,200 @@
+//! Execution backends for the worker threads.
+//!
+//! A backend turns a `(B, C, H, W)` batch into `(B, classes)` logits. Three
+//! implementations:
+//!
+//! - [`PjrtBackend`]  — the AOT path: compiled HLO artifacts (f32 or the
+//!   Pallas-LQ variants), per-thread PJRT session. Picks the best artifact
+//!   batch size for each incoming batch and pads the remainder.
+//! - [`NativeBackend`] — the rust-native engine at any [`Precision`]
+//!   (used for quantization configurations not baked into artifacts).
+//! - [`MockBackend`]  — deterministic stub for coordinator tests.
+
+use anyhow::Result;
+
+use crate::nn::{Engine, Precision};
+use crate::runtime::{ModelRunner, Session};
+use crate::tensor::Tensor;
+
+/// A batch executor. Implementations need not be Send — each worker thread
+/// builds its own backend via [`BackendFactory`].
+pub trait Backend {
+    /// Execute a `(B, C, H, W)` batch -> `(B, classes)` logits.
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor>;
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}
+
+/// Thread-safe constructor for per-worker backends.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+// ------------------------------------------------------------------ PJRT --
+
+/// Runs batches through AOT artifacts, choosing the smallest artifact batch
+/// size >= the incoming batch (padding with zero rows) — or falling back to
+/// looping the largest artifact when the batch exceeds it.
+pub struct PjrtBackend {
+    session: Session,
+    /// (batch_size, runner), ascending by batch size.
+    runners: Vec<(usize, ModelRunner)>,
+    input_chw: (usize, usize, usize),
+    name: String,
+}
+
+impl PjrtBackend {
+    /// Load every `(model, variant)` artifact from `artifacts_dir`.
+    pub fn open(artifacts_dir: &str, model: &str, variant: &str) -> Result<PjrtBackend> {
+        let mut session = Session::open(artifacts_dir)?;
+        let metas: Vec<_> = session
+            .manifest()
+            .variants(model, variant)
+            .into_iter()
+            .map(|a| a.name.clone())
+            .collect();
+        anyhow::ensure!(
+            !metas.is_empty(),
+            "no artifacts for model={model} variant={variant} in {artifacts_dir}"
+        );
+        let input_chw = session.manifest().models[model].input_shape;
+        let mut runners = Vec::new();
+        for name in metas {
+            let r = session.load(&name)?;
+            runners.push((r.meta.batch, r));
+        }
+        runners.sort_by_key(|(b, _)| *b);
+        Ok(PjrtBackend {
+            session,
+            runners,
+            input_chw,
+            name: format!("pjrt:{model}:{variant}"),
+        })
+    }
+
+    fn pick(&self, n: usize) -> &ModelRunner {
+        for (b, r) in &self.runners {
+            if *b >= n {
+                return r;
+            }
+        }
+        &self.runners.last().unwrap().1
+    }
+
+    /// Run exactly one artifact invocation on `rows` rows (rows <= artifact
+    /// batch), padding the tail with zeros.
+    fn run_padded(&self, runner: &ModelRunner, batch: &Tensor, start: usize, rows: usize) -> Result<Tensor> {
+        let (c, h, w) = self.input_chw;
+        let per = c * h * w;
+        let ab = runner.meta.batch;
+        let mut data = vec![0.0f32; ab * per];
+        data[..rows * per]
+            .copy_from_slice(&batch.data()[start * per..(start + rows) * per]);
+        let padded = Tensor::new(&[ab, c, h, w], data);
+        let logits = self.session.run(runner, &padded)?;
+        Ok(logits.take_rows(rows))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.dim(0);
+        let largest = self.runners.last().unwrap().0;
+        if n <= largest {
+            let runner = self.pick(n);
+            return self.run_padded(runner, batch, 0, n);
+        }
+        // Oversized batch: tile the largest artifact.
+        let runner = &self.runners.last().unwrap().1;
+        let mut out = Vec::with_capacity(n * runner.num_classes);
+        let mut start = 0;
+        while start < n {
+            let rows = largest.min(n - start);
+            let part = self.run_padded(runner, batch, start, rows)?;
+            out.extend_from_slice(part.data());
+            start += rows;
+        }
+        Ok(Tensor::new(&[n, runner.num_classes], out))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{} batches={:?}",
+            self.name,
+            self.runners.iter().map(|(b, _)| *b).collect::<Vec<_>>()
+        )
+    }
+}
+
+// ---------------------------------------------------------------- native --
+
+/// Rust-native engine backend: any precision, no artifact needed.
+pub struct NativeBackend {
+    engine: Engine,
+    precision: Precision,
+}
+
+impl NativeBackend {
+    pub fn new(engine: Engine, precision: Precision) -> NativeBackend {
+        NativeBackend { engine, precision }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        Ok(self.engine.forward(batch, self.precision))
+    }
+
+    fn describe(&self) -> String {
+        format!("native:{}:{:?}", self.engine.arch.name, self.precision)
+    }
+}
+
+// ------------------------------------------------------------------ mock --
+
+/// Test backend: logits = [row_sum, id, 0, ...]; optional artificial delay.
+pub struct MockBackend {
+    pub classes: usize,
+    pub delay: std::time::Duration,
+    pub calls: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Backend for MockBackend {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let n = batch.dim(0);
+        let per = batch.len() / n;
+        let mut out = vec![0.0f32; n * self.classes];
+        for i in 0..n {
+            let s: f32 = batch.data()[i * per..(i + 1) * per].iter().sum();
+            out[i * self.classes] = s;
+        }
+        Ok(Tensor::new(&[n, self.classes], out))
+    }
+
+    fn describe(&self) -> String {
+        "mock".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn mock_backend_row_sums() {
+        let mut b = MockBackend {
+            classes: 4,
+            delay: std::time::Duration::ZERO,
+            calls: Arc::new(AtomicU64::new(0)),
+        };
+        let x = Tensor::new(&[2, 1, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = b.run_batch(&x).unwrap();
+        assert_eq!(y.at2(0, 0), 3.0);
+        assert_eq!(y.at2(1, 0), 7.0);
+        assert_eq!(b.calls.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

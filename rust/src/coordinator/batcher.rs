@@ -1,0 +1,261 @@
+//! Bounded FIFO queue + dynamic batching policy.
+//!
+//! The policy is the classic serving trade-off: a batch is released when
+//! either `max_batch` requests are queued (throughput) or the oldest queued
+//! request has waited `max_wait` (latency). The queue is bounded at
+//! `capacity`; when full, `submit` applies backpressure by returning
+//! [`SubmitError::QueueFull`] so the caller can shed or retry.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::request::InferRequest;
+
+/// Why a batch was released (recorded in metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Shutdown,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum SubmitError {
+    #[error("queue full (capacity {0})")]
+    QueueFull(usize),
+    #[error("coordinator shut down")]
+    ShutDown,
+}
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), capacity: 1024 }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<InferRequest>,
+    shutdown: bool,
+}
+
+/// Thread-safe batching queue shared between submitters and workers.
+pub struct BatchQueue {
+    policy: BatchPolicy,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new(policy: BatchPolicy) -> BatchQueue {
+        assert!(policy.max_batch >= 1);
+        BatchQueue {
+            policy,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request (FIFO). Fails when full or shut down.
+    pub fn submit(&self, req: InferRequest) -> Result<(), SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return Err(SubmitError::ShutDown);
+        }
+        if inner.queue.len() >= self.policy.capacity {
+            return Err(SubmitError::QueueFull(self.policy.capacity));
+        }
+        inner.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Current depth (approximate).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Block until a batch is ready, the deadline of the oldest request
+    /// expires, or shutdown. Returns `None` only when shut down *and* empty;
+    /// FIFO order is preserved within and across batches.
+    pub fn pop_batch(&self) -> Option<(Vec<InferRequest>, FlushReason)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.queue.len() >= self.policy.max_batch {
+                let batch = drain(&mut inner.queue, self.policy.max_batch);
+                self.cv.notify_all(); // submitters may be watching depth
+                return Some((batch, FlushReason::Full));
+            }
+            if !inner.queue.is_empty() {
+                let oldest = inner.queue.front().unwrap().submitted_at;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.policy.max_wait {
+                    let n = inner.queue.len().min(self.policy.max_batch);
+                    let batch = drain(&mut inner.queue, n);
+                    return Some((batch, FlushReason::Deadline));
+                }
+                if inner.shutdown {
+                    let n = inner.queue.len().min(self.policy.max_batch);
+                    return Some((drain(&mut inner.queue, n), FlushReason::Shutdown));
+                }
+                // Wait out the remaining deadline (or a new arrival).
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(inner, self.policy.max_wait - elapsed)
+                    .unwrap();
+                inner = guard;
+            } else {
+                if inner.shutdown {
+                    return None;
+                }
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Stop accepting new work; wake workers to drain the remainder.
+    pub fn shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+}
+
+fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
+    q.drain(..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Instant;
+
+    fn req(id: u64) -> (InferRequest, mpsc::Receiver<crate::coordinator::InferResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferRequest {
+                id,
+                image: Tensor::zeros(&[1, 1, 2, 2]),
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            capacity: 100,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i);
+            q.submit(r).unwrap();
+            rxs.push(rx);
+        }
+        let (batch, reason) = q.pop_batch().unwrap();
+        assert_eq!(reason, FlushReason::Full);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_flush_partial_batch() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            capacity: 100,
+        });
+        let (r, _rx) = req(7);
+        q.submit(r).unwrap();
+        let t0 = Instant::now();
+        let (batch, reason) = q.pop_batch().unwrap();
+        assert_eq!(reason, FlushReason::Deadline);
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(8), "flushed too early");
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = BatchQueue::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+            capacity: 2,
+        });
+        let (a, _ra) = req(1);
+        let (b, _rb) = req(2);
+        let (c, _rc) = req(3);
+        q.submit(a).unwrap();
+        q.submit(b).unwrap();
+        assert_eq!(q.submit(c), Err(SubmitError::QueueFull(2)));
+    }
+
+    #[test]
+    fn shutdown_drains_then_none() {
+        let q = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            capacity: 100,
+        }));
+        let (r, _rx) = req(1);
+        q.submit(r).unwrap();
+        q.shutdown();
+        let (batch, reason) = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(reason, FlushReason::Shutdown);
+        assert!(q.pop_batch().is_none());
+        let (r2, _rx2) = req(2);
+        assert_eq!(q.submit(r2), Err(SubmitError::ShutDown));
+    }
+
+    #[test]
+    fn fifo_across_batches_with_concurrent_worker() {
+        let q = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(5),
+            capacity: 1000,
+        }));
+        let qq = Arc::clone(&q);
+        let collector = thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some((batch, _)) = qq.pop_batch() {
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            seen
+        });
+        let mut rxs = Vec::new();
+        for i in 0..50 {
+            let (r, rx) = req(i);
+            q.submit(r).unwrap();
+            rxs.push(rx);
+            if i % 7 == 0 {
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+        q.shutdown();
+        let seen = collector.join().unwrap();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>(), "FIFO order violated");
+    }
+}

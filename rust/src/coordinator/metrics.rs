@@ -1,0 +1,85 @@
+//! Serving metrics: counters + latency histograms, shared via `Arc`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Aggregated coordinator metrics. Cheap atomic counters on the hot path;
+/// histograms behind short-lived mutexes.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of (unpadded) batch sizes — mean batch size = this / batches.
+    pub batched_requests: AtomicU64,
+    /// Batches released by deadline rather than size.
+    pub deadline_flushes: AtomicU64,
+    pub queue_hist: Mutex<LatencyHistogram>,
+    pub execute_hist: Mutex<LatencyHistogram>,
+    pub e2e_hist: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, execute: Duration, deadline_flush: bool) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        if deadline_flush {
+            self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.execute_hist.lock().unwrap().record(execute);
+    }
+
+    pub fn record_completion(&self, queue: Duration, e2e: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.queue_hist.lock().unwrap().record(queue);
+        self.e2e_hist.lock().unwrap().record(e2e);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line summary for logs / reports.
+    pub fn summary(&self) -> String {
+        let e2e = self.e2e_hist.lock().unwrap();
+        let exe = self.execute_hist.lock().unwrap();
+        let q = self.queue_hist.lock().unwrap();
+        format!(
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
+             deadline_flushes={} | e2e p50={:?} p99={:?} | exec mean={:?} | queue mean={:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.deadline_flushes.load(Ordering::Relaxed),
+            e2e.quantile(0.5),
+            e2e.quantile(0.99),
+            exe.mean(),
+            q.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(4, Duration::from_millis(2), false);
+        m.record_batch(8, Duration::from_millis(3), true);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 1);
+        assert!(m.summary().contains("mean_batch=6.00"));
+    }
+}

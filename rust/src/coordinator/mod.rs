@@ -1,0 +1,26 @@
+//! S8 — the L3 serving coordinator.
+//!
+//! A vLLM-router-shaped inference service for the quantized CNNs: callers
+//! submit single images; the coordinator queues them per model variant,
+//! forms dynamic batches (size- and deadline-bounded), executes them on
+//! worker threads — each owning a PJRT session or a rust-native quantized
+//! engine — and returns per-request responses with queue/execute timings.
+//!
+//! - [`request`]  — request/response types.
+//! - [`batcher`]  — bounded FIFO queue + dynamic batch formation policy.
+//! - [`backend`]  — execution backends: PJRT artifacts or the native engine.
+//! - [`worker`]   — worker threads draining batches into a backend.
+//! - [`server`]   — the public [`server::Coordinator`] facade.
+//! - [`metrics`]  — counters + latency histograms.
+//! - [`router`]   — multi-model front door mapping requests to coordinators.
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod net;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use request::{InferRequest, InferResponse};
+pub use server::{Coordinator, CoordinatorConfig};

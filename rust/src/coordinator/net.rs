@@ -1,0 +1,288 @@
+//! TCP front door for the coordinator: a length-prefixed binary protocol so
+//! external clients (other processes, other hosts) can submit images — the
+//! deployment shape of paper §VI.C's "BLAImark" harness.
+//!
+//! Wire format (little-endian):
+//! ```text
+//! request : u32 route_len | route utf8 | u32 n_floats | n_floats x f32 (CHW image)
+//! response: u8 status (0=ok, 1=error) |
+//!           ok:   u32 n_logits | n x f32 | u32 predicted
+//!           err:  u32 msg_len | msg utf8
+//! ```
+//! One request per connection round; connections are persistent (clients may
+//! pipeline rounds sequentially). The accept loop and per-connection handlers
+//! run on plain threads (the vendor set has no async runtime — and the
+//! payloads are single images, so blocking I/O per connection is adequate).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::router::Router;
+use crate::tensor::Tensor;
+
+/// A running TCP server wrapping a [`Router`].
+pub struct NetServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+}
+
+/// Image geometry accepted by the server (validated per request).
+#[derive(Debug, Clone, Copy)]
+pub struct ImageSpec {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl NetServer {
+    /// Bind and serve `router` on `addr` (use port 0 for an ephemeral port).
+    pub fn serve(addr: &str, router: Arc<Router>, spec: ImageSpec) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let (stop2, conns2) = (Arc::clone(&stop), Arc::clone(&connections));
+        let accept_thread = std::thread::Builder::new()
+            .name("lqr-net-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let router = Arc::clone(&router);
+                            stream.set_nonblocking(false).ok();
+                            std::thread::spawn(move || {
+                                if let Err(e) = handle_conn(stream, &router, spec) {
+                                    log::debug!("connection ended: {e:#}");
+                                }
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            log::error!("accept failed: {e}");
+                            break;
+                        }
+                    }
+                }
+            })?;
+        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread), connections })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn rd_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn handle_conn(stream: TcpStream, router: &Router, spec: ImageSpec) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // Route name.
+        let route_len = match rd_u32(&mut reader) {
+            Ok(n) => n as usize,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        if route_len > 4096 {
+            bail!("route name too long");
+        }
+        let mut route = vec![0u8; route_len];
+        reader.read_exact(&mut route)?;
+        let route = String::from_utf8(route).context("route not utf8")?;
+        // Image payload.
+        let n_floats = rd_u32(&mut reader)? as usize;
+        let expect = spec.c * spec.h * spec.w;
+        let mut payload = vec![0u8; n_floats * 4];
+        reader.read_exact(&mut payload)?;
+        let result = if n_floats != expect {
+            Err(anyhow::anyhow!("expected {expect} floats, got {n_floats}"))
+        } else {
+            let data: Vec<f32> = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let img = Tensor::new(&[1, spec.c, spec.h, spec.w], data);
+            router.infer(&route, img)
+        };
+        match result {
+            Ok(resp) => {
+                writer.write_all(&[0u8])?;
+                writer.write_all(&(resp.logits.len() as u32).to_le_bytes())?;
+                for v in &resp.logits {
+                    writer.write_all(&v.to_le_bytes())?;
+                }
+                writer.write_all(&(resp.predicted as u32).to_le_bytes())?;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                writer.write_all(&[1u8])?;
+                writer.write_all(&(msg.len() as u32).to_le_bytes())?;
+                writer.write_all(msg.as_bytes())?;
+            }
+        }
+        writer.flush()?;
+    }
+}
+
+/// Minimal blocking client for the wire protocol (used by tests, examples
+/// and external tooling).
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        Ok(NetClient { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
+    }
+
+    /// Classify one CHW image on `route`; returns (logits, predicted).
+    pub fn classify(&mut self, route: &str, image: &Tensor) -> Result<(Vec<f32>, usize)> {
+        self.writer.write_all(&(route.len() as u32).to_le_bytes())?;
+        self.writer.write_all(route.as_bytes())?;
+        self.writer.write_all(&(image.len() as u32).to_le_bytes())?;
+        for v in image.data() {
+            self.writer.write_all(&v.to_le_bytes())?;
+        }
+        self.writer.flush()?;
+        let mut status = [0u8; 1];
+        self.reader.read_exact(&mut status)?;
+        if status[0] != 0 {
+            let n = rd_u32(&mut self.reader)? as usize;
+            let mut msg = vec![0u8; n];
+            self.reader.read_exact(&mut msg)?;
+            bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        let n = rd_u32(&mut self.reader)? as usize;
+        let mut logits = Vec::with_capacity(n);
+        let mut buf = [0u8; 4];
+        for _ in 0..n {
+            self.reader.read_exact(&mut buf)?;
+            logits.push(f32::from_le_bytes(buf));
+        }
+        let predicted = rd_u32(&mut self.reader)? as usize;
+        Ok((logits, predicted))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, MockBackend};
+    use crate::coordinator::server::CoordinatorConfig;
+    use std::sync::atomic::AtomicU64;
+
+    fn test_router() -> Arc<Router> {
+        let mut r = Router::new();
+        r.add_route(
+            "mock",
+            CoordinatorConfig::default(),
+            Box::new(|| {
+                Ok(Box::new(MockBackend {
+                    classes: 4,
+                    delay: std::time::Duration::ZERO,
+                    calls: Arc::new(AtomicU64::new(0)),
+                }) as Box<dyn Backend>)
+            }),
+        )
+        .unwrap();
+        Arc::new(r)
+    }
+
+    #[test]
+    fn round_trip_over_tcp() {
+        let router = test_router();
+        let spec = ImageSpec { c: 1, h: 2, w: 2 };
+        let server = NetServer::serve("127.0.0.1:0", router, spec).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let img = Tensor::filled(&[1, 1, 2, 2], 0.25);
+        let (logits, predicted) = client.classify("mock", &img).unwrap();
+        assert_eq!(logits, vec![1.0, 0.0, 0.0, 0.0]); // row sum = 4 * 0.25
+        assert_eq!(predicted, 0);
+        // Pipelined second round on the same connection.
+        let (logits2, _) = client.classify("mock", &Tensor::filled(&[1, 1, 2, 2], 0.5)).unwrap();
+        assert_eq!(logits2[0], 2.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_route_reports_error() {
+        let router = test_router();
+        let server =
+            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let err = client
+            .classify("nope", &Tensor::filled(&[1, 1, 2, 2], 0.1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no route"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_image_size_reports_error() {
+        let router = test_router();
+        let server =
+            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let err = client
+            .classify("mock", &Tensor::filled(&[1, 1, 3, 3], 0.1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("expected 4 floats"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let router = test_router();
+        let server =
+            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = NetClient::connect(addr).unwrap();
+                    for i in 0..8 {
+                        let v = (t * 8 + i) as f32 * 0.1;
+                        let (logits, _) =
+                            c.classify("mock", &Tensor::filled(&[1, 1, 2, 2], v)).unwrap();
+                        assert!((logits[0] - 4.0 * v).abs() < 1e-5);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(server.connections.load(Ordering::Relaxed) >= 4);
+        server.shutdown();
+    }
+}

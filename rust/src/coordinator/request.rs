@@ -1,0 +1,70 @@
+//! Request / response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a single image (1, C, H, W).
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: RequestId,
+    pub image: Tensor,
+    pub submitted_at: Instant,
+    /// Completion channel; the worker sends exactly one response.
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// Completed inference for one request.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Raw logits over classes.
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub predicted: usize,
+    /// Time spent queued before batch formation.
+    pub queue_time: Duration,
+    /// Execution time of the batch this request rode in.
+    pub execute_time: Duration,
+    /// Size of that batch (before padding).
+    pub batch_size: usize,
+}
+
+impl InferResponse {
+    pub fn from_logits(
+        id: RequestId,
+        logits: Vec<f32>,
+        queue_time: Duration,
+        execute_time: Duration,
+        batch_size: usize,
+    ) -> InferResponse {
+        let predicted = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        InferResponse { id, logits, predicted, queue_time, execute_time, batch_size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_prediction() {
+        let r = InferResponse::from_logits(
+            1,
+            vec![0.1, 0.7, 0.2],
+            Duration::ZERO,
+            Duration::ZERO,
+            1,
+        );
+        assert_eq!(r.predicted, 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Multi-model front door: route requests by model name to per-model
+//! coordinators (each with its own queue, batching policy and workers).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::backend::BackendFactory;
+use crate::coordinator::batcher::SubmitError;
+use crate::coordinator::request::InferResponse;
+use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+use crate::tensor::Tensor;
+
+/// Routes inference traffic across models/variants.
+pub struct Router {
+    routes: BTreeMap<String, Coordinator>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { routes: BTreeMap::new() }
+    }
+
+    /// Register a route (e.g. "minialexnet/f32").
+    pub fn add_route(
+        &mut self,
+        name: &str,
+        config: CoordinatorConfig,
+        factory: BackendFactory,
+    ) -> Result<()> {
+        anyhow::ensure!(!self.routes.contains_key(name), "route {name} already exists");
+        self.routes.insert(name.to_string(), Coordinator::start(config, factory)?);
+        Ok(())
+    }
+
+    pub fn route_names(&self) -> Vec<&str> {
+        self.routes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Submit to a named route.
+    pub fn submit(
+        &self,
+        route: &str,
+        image: Tensor,
+    ) -> Result<std::sync::mpsc::Receiver<InferResponse>> {
+        let c = self.routes.get(route).with_context(|| format!("no route {route}"))?;
+        c.submit(image).map_err(|e| match e {
+            SubmitError::QueueFull(cap) => anyhow::anyhow!("route {route}: queue full ({cap})"),
+            SubmitError::ShutDown => anyhow::anyhow!("route {route}: shut down"),
+        })
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, route: &str, image: Tensor) -> Result<InferResponse> {
+        let c = self.routes.get(route).with_context(|| format!("no route {route}"))?;
+        c.infer(image)
+    }
+
+    pub fn coordinator(&self, route: &str) -> Option<&Coordinator> {
+        self.routes.get(route)
+    }
+
+    /// Shut every route down, returning per-route metric summaries.
+    pub fn shutdown(self) -> Vec<(String, String)> {
+        self.routes
+            .into_iter()
+            .map(|(name, c)| {
+                let m = c.shutdown();
+                (name, m.summary())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, MockBackend};
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn factory(classes: usize) -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(MockBackend {
+                classes,
+                delay: Duration::ZERO,
+                calls: Arc::new(AtomicU64::new(0)),
+            }) as Box<dyn Backend>)
+        })
+    }
+
+    #[test]
+    fn routes_independently() {
+        let mut r = Router::new();
+        r.add_route("a", CoordinatorConfig::default(), factory(2)).unwrap();
+        r.add_route("b", CoordinatorConfig::default(), factory(6)).unwrap();
+        let img = Tensor::filled(&[1, 1, 2, 2], 1.0);
+        assert_eq!(r.infer("a", img.clone()).unwrap().logits.len(), 2);
+        assert_eq!(r.infer("b", img.clone()).unwrap().logits.len(), 6);
+        assert!(r.infer("c", img).is_err());
+        let summaries = r.shutdown();
+        assert_eq!(summaries.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_route_rejected() {
+        let mut r = Router::new();
+        r.add_route("a", CoordinatorConfig::default(), factory(2)).unwrap();
+        assert!(r.add_route("a", CoordinatorConfig::default(), factory(2)).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! The coordinator facade: configuration, lifecycle, submission API.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::backend::BackendFactory;
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, SubmitError};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::worker::spawn_workers;
+use crate::tensor::Tensor;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+/// A running inference service over one model variant.
+pub struct Coordinator {
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start workers over a backend factory (each worker builds its own
+    /// backend — PJRT sessions are thread-bound).
+    pub fn start(config: CoordinatorConfig, factory: BackendFactory) -> Result<Coordinator> {
+        anyhow::ensure!(config.workers >= 1, "need at least one worker");
+        let queue = Arc::new(BatchQueue::new(BatchPolicy {
+            max_batch: config.max_batch,
+            max_wait: config.max_wait,
+            capacity: config.queue_capacity,
+        }));
+        let metrics = Arc::new(Metrics::default());
+        let workers = spawn_workers(
+            config.workers,
+            Arc::clone(&queue),
+            Arc::clone(&metrics),
+            Arc::new(factory),
+        );
+        Ok(Coordinator { queue, metrics, next_id: AtomicU64::new(0), workers })
+    }
+
+    /// Submit one image; returns a receiver for the response. Applies
+    /// backpressure via [`SubmitError::QueueFull`].
+    pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<InferResponse>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferRequest { id, image, submitted_at: Instant::now(), reply: tx };
+        match self.queue.submit(req) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(e) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and wait (convenience for examples / tests).
+    pub fn infer(&self, image: Tensor) -> Result<InferResponse> {
+        let rx = self.submit(image).map_err(anyhow::Error::from)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request (backend failure)"))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Stop accepting work, drain the queue, join the workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.queue.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        Arc::clone(&self.metrics)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, MockBackend};
+    use std::sync::atomic::AtomicU64 as AU64;
+
+    fn mock_factory(delay_ms: u64, calls: Arc<AU64>) -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(MockBackend {
+                classes: 4,
+                delay: Duration::from_millis(delay_ms),
+                calls: Arc::clone(&calls),
+            }) as Box<dyn Backend>)
+        })
+    }
+
+    fn img(v: f32) -> Tensor {
+        Tensor::filled(&[1, 1, 2, 2], v)
+    }
+
+    #[test]
+    fn end_to_end_single() {
+        let calls = Arc::new(AU64::new(0));
+        let c = Coordinator::start(CoordinatorConfig::default(), mock_factory(0, calls)).unwrap();
+        let resp = c.infer(img(0.5)).unwrap();
+        assert_eq!(resp.logits[0], 2.0); // 4 pixels * 0.5
+        let m = c.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batching_aggregates_under_load() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_capacity: 256,
+        };
+        let c = Coordinator::start(cfg, mock_factory(2, Arc::clone(&calls))).unwrap();
+        let rxs: Vec<_> = (0..32).map(|i| c.submit(img(i as f32)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32, "response routed to wrong request");
+        }
+        let m = c.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 32);
+        assert!(
+            m.mean_batch_size() > 1.5,
+            "expected batching under load, mean={}",
+            m.mean_batch_size()
+        );
+    }
+
+    #[test]
+    fn responses_match_requests_across_workers() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 256,
+        };
+        let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
+        let rxs: Vec<_> = (0..64).map(|i| c.submit(img(i as f32)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().logits[0], 4.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn rejects_when_queue_full() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait: Duration::from_millis(200),
+            queue_capacity: 4,
+        };
+        let c = Coordinator::start(cfg, mock_factory(100, calls)).unwrap();
+        let mut rejected = false;
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            match c.submit(img(i as f32)) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::QueueFull(_)) => {
+                    rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected, "backpressure never engaged");
+        assert!(c.metrics().rejected.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(500),
+            queue_capacity: 256,
+        };
+        let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
+        let rxs: Vec<_> = (0..6).map(|i| c.submit(img(i as f32)).unwrap()).collect();
+        let m = c.shutdown(); // must flush the partial batch immediately
+        assert_eq!(m.completed.load(Ordering::Relaxed), 6);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Worker threads: drain batches from the queue into a backend.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::coordinator::backend::BackendFactory;
+use crate::coordinator::batcher::{BatchQueue, FlushReason};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::tensor::Tensor;
+
+/// Spawn `n` workers; each builds its own backend (PJRT sessions are not
+/// Send) and loops `pop_batch -> run -> reply` until the queue shuts down
+/// and drains. Returns the join handles.
+pub fn spawn_workers(
+    n: usize,
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    factory: Arc<BackendFactory>,
+) -> Vec<thread::JoinHandle<()>> {
+    (0..n)
+        .map(|wid| {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let factory = Arc::clone(&factory);
+            thread::Builder::new()
+                .name(format!("lqr-worker-{wid}"))
+                .spawn(move || {
+                    let mut backend = match factory() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            log::error!("worker {wid}: backend init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    log::info!("worker {wid}: {}", backend.describe());
+                    while let Some((batch, reason)) = queue.pop_batch() {
+                        run_batch(&mut *backend, batch, reason, &metrics);
+                    }
+                    log::debug!("worker {wid}: queue drained, exiting");
+                })
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+/// Assemble the image rows, execute, and reply to every request.
+fn run_batch(
+    backend: &mut dyn crate::coordinator::backend::Backend,
+    batch: Vec<InferRequest>,
+    reason: FlushReason,
+    metrics: &Metrics,
+) {
+    let n = batch.len();
+    debug_assert!(n > 0);
+    let formed_at = Instant::now();
+    // Assemble (n, C, H, W) from the per-request (1, C, H, W) images.
+    let shape = batch[0].image.shape().to_vec();
+    let per: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n * per);
+    for r in &batch {
+        debug_assert_eq!(r.image.shape(), &shape[..], "mixed image shapes in batch");
+        data.extend_from_slice(r.image.data());
+    }
+    let mut dims = vec![n];
+    dims.extend_from_slice(&shape[1..]);
+    let input = Tensor::new(&dims, data);
+
+    let t0 = Instant::now();
+    let result = backend.run_batch(&input);
+    let exec = t0.elapsed();
+    metrics.record_batch(n, exec, reason == FlushReason::Deadline);
+
+    match result {
+        Ok(logits) => {
+            let classes = logits.dim(1);
+            for (i, req) in batch.into_iter().enumerate() {
+                let queue_time = formed_at.duration_since(req.submitted_at);
+                let resp = InferResponse::from_logits(
+                    req.id,
+                    logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                    queue_time,
+                    exec,
+                    n,
+                );
+                metrics.record_completion(queue_time, req.submitted_at.elapsed());
+                // Receiver may have given up; dropping the response is fine.
+                let _ = req.reply.send(resp);
+            }
+        }
+        Err(e) => {
+            log::error!("batch of {n} failed: {e:#}");
+            // Drop the reply senders: receivers observe a disconnect error.
+            drop(batch);
+        }
+    }
+}
+
+/// Convenience used by tests and single-shot tools: run one request through
+/// a backend synchronously.
+pub fn run_one(
+    backend: &mut dyn crate::coordinator::backend::Backend,
+    image: Tensor,
+) -> anyhow::Result<InferResponse> {
+    let (tx, rx) = mpsc::channel();
+    let req = InferRequest { id: 0, image, submitted_at: Instant::now(), reply: tx };
+    run_batch(backend, vec![req], FlushReason::Full, &Metrics::default());
+    rx.recv().map_err(|_| anyhow::anyhow!("backend failed"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_one_mock() {
+        let mut b = MockBackend {
+            classes: 3,
+            delay: std::time::Duration::ZERO,
+            calls: Arc::new(AtomicU64::new(0)),
+        };
+        let img = Tensor::new(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let resp = run_one(&mut b, img).unwrap();
+        assert_eq!(resp.logits, vec![4.0, 0.0, 0.0]);
+        assert_eq!(resp.predicted, 0);
+        assert_eq!(resp.batch_size, 1);
+    }
+}

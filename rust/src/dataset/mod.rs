@@ -1,0 +1,123 @@
+//! S11 — dataset access for the runtime side.
+//!
+//! The build-time python generator (`python/compile/datagen.py`) writes the
+//! synthetic 16-class shape dataset to `artifacts/data/{train,val}.npz`; this
+//! module loads those for the accuracy experiments and samples them to drive
+//! serving workloads. A pure-noise generator is provided for load tests that
+//! do not care about labels.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{read_npz, Tensor};
+use crate::util::rng::Rng;
+
+/// An in-memory labelled image set (NCHW f32 in [0,1]).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    /// Load `{split}.npz` (keys: x f32 (N,C,H,W), y int (N,)).
+    pub fn load(dir: impl AsRef<Path>, split: &str) -> Result<Dataset> {
+        let path = dir.as_ref().join(format!("{split}.npz"));
+        let entries = read_npz(&path)
+            .with_context(|| format!("loading {} (run `make artifacts`)", path.display()))?;
+        let mut images = None;
+        let mut labels = None;
+        for e in entries {
+            match e.name.as_str() {
+                "x" => images = Some(e.to_tensor()),
+                "y" => {
+                    labels = Some(match e.as_i32() {
+                        Some(v) => v.to_vec(),
+                        None => e.to_tensor().data().iter().map(|&f| f as i32).collect(),
+                    })
+                }
+                _ => {}
+            }
+        }
+        let images = images.context("npz missing 'x'")?;
+        let labels = labels.context("npz missing 'y'")?;
+        anyhow::ensure!(images.rank() == 4, "x must be NCHW, got {:?}", images.shape());
+        anyhow::ensure!(images.dim(0) == labels.len(), "x/y length mismatch");
+        Ok(Dataset { images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// (C, H, W) of one image.
+    pub fn image_shape(&self) -> (usize, usize, usize) {
+        (self.images.dim(1), self.images.dim(2), self.images.dim(3))
+    }
+
+    /// Copy image `i` as a `(1, C, H, W)` tensor.
+    pub fn image(&self, i: usize) -> Tensor {
+        let (c, h, w) = self.image_shape();
+        let per = c * h * w;
+        Tensor::new(&[1, c, h, w], self.images.data()[i * per..(i + 1) * per].to_vec())
+    }
+
+    /// Copy images `[start, start+n)` as an `(n, C, H, W)` batch.
+    pub fn batch(&self, start: usize, n: usize) -> Tensor {
+        let (c, h, w) = self.image_shape();
+        let per = c * h * w;
+        assert!(start + n <= self.len());
+        Tensor::new(
+            &[n, c, h, w],
+            self.images.data()[start * per..(start + n) * per].to_vec(),
+        )
+    }
+
+    /// First `n` examples as a smaller dataset (cheap experiment subsets).
+    pub fn take(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        Dataset { images: self.batch(0, n), labels: self.labels[..n].to_vec() }
+    }
+
+    /// Sample a random index.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.index(0, self.len())
+    }
+}
+
+/// Random-noise image batch `(n, C, H, W)` in [0, 1] — for load tests.
+pub fn noise_batch(rng: &mut Rng, n: usize, c: usize, h: usize, w: usize) -> Tensor {
+    Tensor::new(&[n, c, h, w], rng.uniform_vec(n * c * h * w, 0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_batch_shape_and_range() {
+        let mut rng = Rng::new(1);
+        let b = noise_batch(&mut rng, 2, 3, 8, 8);
+        assert_eq!(b.shape(), &[2, 3, 8, 8]);
+        assert!(b.data().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn batch_slicing() {
+        let images = Tensor::from_fn(&[4, 1, 2, 2], |i| i as f32);
+        let ds = Dataset { images, labels: vec![0, 1, 2, 3] };
+        let b = ds.batch(1, 2);
+        assert_eq!(b.shape(), &[2, 1, 2, 2]);
+        assert_eq!(b.data()[0], 4.0); // starts at image 1
+        let one = ds.image(3);
+        assert_eq!(one.data()[0], 12.0);
+        assert_eq!(ds.take(2).len(), 2);
+    }
+
+    // Loading the real artifacts npz is covered in rust/tests/npz_interop.rs.
+}

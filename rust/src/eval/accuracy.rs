@@ -1,0 +1,80 @@
+//! Top-k accuracy evaluation over a [`Dataset`] with any [`Precision`].
+
+use crate::dataset::Dataset;
+use crate::nn::{Engine, Precision};
+
+/// Result of one accuracy run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyResult {
+    pub n: usize,
+    pub top1: f64,
+    pub top5: f64,
+}
+
+impl AccuracyResult {
+    pub fn pct(v: f64) -> String {
+        format!("{:.1}%", v * 100.0)
+    }
+}
+
+/// Does `label` fall in the top-k of `logits`?
+pub fn topk_hit(logits: &[f32], label: i32, k: usize) -> bool {
+    let target = logits[label as usize];
+    // Count strictly-greater entries; ties resolved in favour of the label
+    // (deterministic, matches argsort-stable protocols).
+    let greater = logits.iter().filter(|&&v| v > target).count();
+    greater < k
+}
+
+/// Evaluate `engine` at `precision` over (a subset of) `ds`.
+pub fn evaluate(
+    engine: &Engine,
+    ds: &Dataset,
+    precision: Precision,
+    batch: usize,
+    limit: Option<usize>,
+) -> AccuracyResult {
+    let n = limit.unwrap_or(ds.len()).min(ds.len());
+    let mut hit1 = 0usize;
+    let mut hit5 = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let x = ds.batch(i, b);
+        let logits = engine.forward(&x, precision);
+        for r in 0..b {
+            let row = logits.row(r);
+            let label = ds.labels[i + r];
+            if topk_hit(row, label, 1) {
+                hit1 += 1;
+            }
+            if topk_hit(row, label, 5) {
+                hit5 += 1;
+            }
+        }
+        i += b;
+    }
+    AccuracyResult { n, top1: hit1 as f64 / n as f64, top5: hit5 as f64 / n as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_semantics() {
+        let logits = [0.1f32, 0.9, 0.5, 0.3];
+        assert!(topk_hit(&logits, 1, 1));
+        assert!(!topk_hit(&logits, 2, 1));
+        assert!(topk_hit(&logits, 2, 2));
+        assert!(topk_hit(&logits, 0, 4));
+        assert!(!topk_hit(&logits, 0, 3));
+    }
+
+    #[test]
+    fn topk_tie_favours_label() {
+        let logits = [0.5f32, 0.5, 0.1];
+        assert!(topk_hit(&logits, 0, 1));
+        assert!(topk_hit(&logits, 1, 1));
+    }
+}

@@ -1,0 +1,12 @@
+//! S12 — evaluation harness: top-k accuracy, sweep drivers, table rendering.
+//!
+//! The accuracy experiments (Tables 1–2, Figs. 9–10) all reduce to "run the
+//! engine at precision P over the validation set and report top-1/top-5";
+//! this module owns that loop plus the fixed-width table formatter the
+//! benches/examples print (mirroring the paper's table rows).
+pub mod accuracy;
+pub mod sweep;
+pub mod table;
+
+pub use accuracy::{evaluate, topk_hit, AccuracyResult};
+pub use table::TableFmt;

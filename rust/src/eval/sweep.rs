@@ -1,0 +1,228 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Both the benches (`rust/benches/*`) and the examples call these, so every
+//! reported number comes from a single implementation. Each driver returns a
+//! rendered [`TableFmt`] matching the paper's row/column layout.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::dataset::Dataset;
+use crate::eval::accuracy::{evaluate, AccuracyResult};
+use crate::eval::table::TableFmt;
+use crate::nn::forward::Scheme;
+use crate::nn::opcount::{lut_ops, original_ops, LutCostModel};
+use crate::nn::{Arch, Engine, Precision};
+use crate::platform::edison::{EdisonModel, NumFmt};
+use crate::platform::fpga::perf::perf;
+use crate::platform::fpga::resource::{estimate, CuConfig};
+use crate::quant::RegionSpec;
+use crate::tensor::Tensor;
+
+/// Load the trained engine for a mini model from the artifacts dir.
+pub fn load_engine(artifacts: &str, model: &str) -> Result<Engine> {
+    let arch = Arch::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    Engine::from_npz(arch, format!("{artifacts}/weights_{model}.npz"))
+}
+
+fn pct(v: f64) -> String {
+    AccuracyResult::pct(v)
+}
+
+/// Table 1 — top-1/top-5, f32 baseline vs 8-bit LQ, both mini models.
+pub fn table1(artifacts: &str, limit: usize) -> Result<TableFmt> {
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?.take(limit);
+    let mut t = TableFmt::new(
+        "Table 1 — accuracy, 32-bit float baseline vs 8-bit LQ fixed point",
+        &["model", "scheme", "top-1", "top-5"],
+    );
+    for model in ["minialexnet", "minivgg"] {
+        let engine = load_engine(artifacts, model)?;
+        let f = evaluate(&engine, &ds, Precision::F32, 32, None);
+        let q = evaluate(&engine, &ds, Precision::lq(8), 32, None);
+        t.row(&[model.into(), "32-bit float".into(), pct(f.top1), pct(f.top5)]);
+        t.row(&[model.into(), "8-bit LQ".into(), pct(q.top1), pct(q.top5)]);
+    }
+    Ok(t)
+}
+
+/// Table 2 / Fig. 9 — DQ vs LQ across 8/6/4/2-bit activations.
+pub fn table2(artifacts: &str, bits: &[usize], limit: usize) -> Result<TableFmt> {
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?.take(limit);
+    let mut t = TableFmt::new(
+        "Table 2 / Fig. 9 — accuracy vs activation precision (weights 8-bit LQ)",
+        &["model", "metric", "scheme", "8-bit", "6-bit", "4-bit", "2-bit"],
+    );
+    for model in ["minialexnet", "minivgg"] {
+        let engine = load_engine(artifacts, model)?;
+        let mut rows: Vec<(String, Vec<AccuracyResult>)> = Vec::new();
+        for scheme in ["DQ", "LQ"] {
+            let mut res = Vec::new();
+            for &b in bits {
+                let p = if scheme == "DQ" {
+                    Precision::dq(b as u8)
+                } else {
+                    Precision::lq(b as u8)
+                };
+                res.push(evaluate(&engine, &ds, p, 32, None));
+            }
+            rows.push((scheme.into(), res));
+        }
+        for metric in ["top-1", "top-5"] {
+            for (scheme, res) in &rows {
+                let mut cells = vec![model.to_string(), metric.into(), scheme.clone()];
+                for r in res {
+                    cells.push(pct(if metric == "top-1" { r.top1 } else { r.top5 }));
+                }
+                t.row(&cells);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 10 — 2-bit accuracy vs LQ region size (VGG stand-in).
+pub fn fig10(artifacts: &str, regions: &[usize], limit: usize) -> Result<TableFmt> {
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?.take(limit);
+    let engine = load_engine(artifacts, "minivgg")?;
+    let mut t = TableFmt::new(
+        "Fig. 10 — 2-bit accuracy vs local quantization region size (minivgg)",
+        &["region", "top-1", "top-5"],
+    );
+    // Kernel-sized region first (the paper's default / leftmost point).
+    let base = evaluate(&engine, &ds, Precision::lq(2), 32, None);
+    t.row(&["kernel".into(), pct(base.top1), pct(base.top5)]);
+    for &g in regions {
+        let p = Precision::Quant {
+            scheme: Scheme::Lq,
+            bits_a: 2,
+            bits_w: 8,
+            region: RegionSpec::Size(g),
+            lut: false,
+        };
+        let r = evaluate(&engine, &ds, p, 32, None);
+        t.row(&[g.to_string(), pct(r.top1), pct(r.top5)]);
+    }
+    Ok(t)
+}
+
+/// Table 3 — conv-layer multiply/add counts, original vs 2-bit LUT, on the
+/// *full* AlexNet / VGG-16 (matches the paper's absolute numbers).
+pub fn table3() -> TableFmt {
+    let mut t = TableFmt::new(
+        "Table 3 — conv multiply/add operations per image (millions)",
+        &["network", "scheme", "multiply (M)", "add (M)"],
+    );
+    const M: u64 = 1_000_000;
+    for arch in [Arch::alexnet_full(), Arch::vgg16_full()] {
+        let o = original_ops(&arch);
+        let l = lut_ops(&arch, LutCostModel::default());
+        t.row(&[
+            arch.name.into(),
+            "original".into(),
+            (o.multiplies / M).to_string(),
+            (o.adds / M).to_string(),
+        ]);
+        t.row(&[
+            arch.name.into(),
+            "2-bit LUT".into(),
+            (l.multiplies / M).to_string(),
+            (l.adds / M).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Tables 4+5 — FPGA resources, timing, throughput and power.
+pub fn table45() -> TableFmt {
+    let mut t = TableFmt::new(
+        "Tables 4+5 — Matrix Multiplier on XC6VLX240T (structural model)",
+        &["configuration", "LUT#", "FF#", "max freq", "latency", "Gops @max @90%", "mW @200MHz"],
+    );
+    for cfg in CuConfig::paper_rows() {
+        let r = estimate(cfg);
+        let p = perf(cfg);
+        t.row(&[
+            cfg.label(),
+            r.luts.to_string(),
+            r.ffs.to_string(),
+            format!("{:.0} MHz", r.fmax_mhz),
+            r.latency.to_string(),
+            format!("{:.0}", p.gops_at_max),
+            format!("{:.0}", p.power_mw_200),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8 — per-image runtime, f32 vs 8-bit fixed point.
+///
+/// Two sections: *measured* on this host with the rust engine over the mini
+/// models, and *modelled* for the full AlexNet/VGG-16 on the Edison cost
+/// model (the paper's actual testbed, which we cannot run).
+pub fn fig8(artifacts: &str, measure_images: usize) -> Result<TableFmt> {
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
+    let mut t = TableFmt::new(
+        "Fig. 8 — per-image runtime: f32 baseline vs 8-bit LQ fixed point",
+        &["network", "platform", "f32 ms/img", "8-bit ms/img", "speedup"],
+    );
+    for model in ["minialexnet", "minivgg"] {
+        let engine = load_engine(artifacts, model)?;
+        let time_per_image = |p: Precision| -> f64 {
+            // One warmup pass then timed single-image runs (the paper's
+            // protocol: latency of recognizing ONE image).
+            let x = ds.image(0);
+            let _ = engine.forward(&x, p);
+            let t0 = Instant::now();
+            for i in 0..measure_images {
+                let x: Tensor = ds.image(i);
+                std::hint::black_box(engine.forward(&x, p));
+            }
+            t0.elapsed().as_secs_f64() / measure_images as f64
+        };
+        let f = time_per_image(Precision::F32);
+        let q = time_per_image(Precision::lq(8));
+        t.row(&[
+            model.into(),
+            "host (measured)".into(),
+            format!("{:.2}", f * 1e3),
+            format!("{:.2}", q * 1e3),
+            format!("{:.2}x", f / q),
+        ]);
+    }
+    let edison = EdisonModel::default();
+    for arch in [Arch::alexnet_full(), Arch::vgg16_full()] {
+        let f = edison.image_time(&arch, NumFmt::F32);
+        let q = edison.image_time(&arch, NumFmt::Fixed(8));
+        t.row(&[
+            arch.name.into(),
+            "Edison (modelled)".into(),
+            format!("{:.0}", f * 1e3),
+            format!("{:.0}", q * 1e3),
+            format!("{:.2}x", f / q),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_rows_render() {
+        let s = table3().render();
+        assert!(s.contains("alexnet"));
+        assert!(s.contains("665") || s.contains("666"));
+        assert!(s.contains("2-bit LUT"));
+    }
+
+    #[test]
+    fn table45_rows_render() {
+        let s = table45().render();
+        assert!(s.contains("FP 32x32"));
+        assert!(s.contains("Fixed 8x2"));
+    }
+}

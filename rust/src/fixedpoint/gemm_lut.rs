@@ -1,0 +1,97 @@
+//! §V — LUT GEMM: the multiply-free fixed-point GEMM for <= 4-bit inputs.
+//!
+//! Weights stay as (dequant-pending) integer codes; activations are low-bit
+//! codes. The inner product is computed by code bucketing (see
+//! [`crate::quant::lut`]): the per-region integer sum `S_qq` needs **zero**
+//! multiplies in the inner loop — the paper's Table 3 claim — and the affine
+//! correction adds the usual handful of per-region multiplies.
+
+use crate::quant::lut::bucketed_dot;
+use crate::quant::scheme::QuantizedMatrix;
+use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+
+use super::gemm_i8::SyncPtr;
+
+/// `A_q (M,K) x W_q^T (N,K) -> (M,N)` with the bucketed (LUT) inner loop.
+/// `aq.bits` must be <= 4. Numerically identical to `gemm_quantized`.
+pub fn gemm_lut(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize) -> Tensor {
+    assert!(aq.bits <= 4, "LUT GEMM needs <= 4-bit activations, got {}", aq.bits);
+    assert_eq!(aq.k, wq.k);
+    assert_eq!(aq.group_len(), wq.group_len());
+    let (m, n, k) = (aq.rows, wq.rows, aq.k);
+    let g = aq.group_len();
+    let rpr = aq.regions_per_row();
+    let mut out = vec![0.0f32; m * n];
+
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    scope_chunks(m, threads, |i0, i1| {
+        let out_ptr = &out_ptr;
+        // Per-thread scratch: weight codes widened once per (j, region) pass.
+        let mut wbuf = vec![0i32; k];
+        for i in i0..i1 {
+            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            let arow = &aq.codes[i * k..(i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wrow = &wq.codes[j * k..(j + 1) * k];
+                for (dst, &w) in wbuf.iter_mut().zip(wrow) {
+                    *dst = w as i32;
+                }
+                let mut acc = 0.0f32;
+                for r in 0..rpr {
+                    let start = r * g;
+                    let end = ((r + 1) * g).min(k);
+                    let qq = bucketed_dot(&arow[start..end], &wbuf[start..end], aq.bits);
+                    let sa = aq.scale(i, r);
+                    let ma = aq.min(i, r);
+                    let sw = wq.scale(j, r);
+                    let mw = wq.min(j, r);
+                    acc += sa * sw * qq as f32
+                        + sa * mw * aq.code_sums[i * rpr + r]
+                        + sw * ma * wq.code_sums[j * rpr + r]
+                        + (end - start) as f32 * ma * mw;
+                }
+                *o = acc;
+            }
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::gemm_i8::gemm_quantized;
+    use crate::quant::{quantize_matrix, RegionSpec};
+    use crate::util::prop;
+
+    #[test]
+    fn lut_equals_integer_gemm() {
+        prop::check_named("gemm-lut-vs-i8", 0x10F, 24, |rng, _| {
+            let m = rng.index(1, 10);
+            let n = rng.index(1, 10);
+            let k = rng.index(1, 50);
+            let bits = [1u8, 2, 4][rng.below(3) as usize];
+            let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let region = RegionSpec::Size(rng.index(1, k + 1));
+            let aq = quantize_matrix(&a, bits, region);
+            let wq = quantize_matrix(&w, 8, region); // paper: weights stay 8-bit
+            let want = gemm_quantized(&aq, &wq, 1);
+            let got = gemm_lut(&aq, &wq, 2);
+            assert!(
+                got.max_abs_diff(&want) <= 1e-5 * want.max_abs().max(1.0),
+                "bits={bits} diff={}",
+                got.max_abs_diff(&want)
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "4-bit")]
+    fn rejects_high_bit_activations() {
+        let a = Tensor::zeros(&[2, 8]);
+        let q8 = quantize_matrix(&a, 8, RegionSpec::PerRow);
+        gemm_lut(&q8, &q8, 1);
+    }
+}

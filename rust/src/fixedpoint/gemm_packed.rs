@@ -1,0 +1,139 @@
+//! Packed low-bit GEMM: the eq. 7 pipeline reading bit-packed code streams.
+//!
+//! The paper's bandwidth argument (§III.C): SIMD/memory throughput scales
+//! inversely with operand width, so 2-bit codes move 16x more elements per
+//! load than f32. This kernel consumes [`crate::quant::codec::Packed`]
+//! streams directly, unpacking one 64-bit word at a time in registers —
+//! matching how an IoT-class core would stream packed weights from flash.
+
+use crate::quant::codec::Packed;
+use crate::quant::scheme::QuantizedMatrix;
+use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+
+use super::gemm_i8::SyncPtr;
+
+/// A [`QuantizedMatrix`] with its codes bit-packed.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub k: usize,
+    pub bits: u8,
+    /// One packed stream per row (row-aligned so rows can unpack independently).
+    pub rows_packed: Vec<Packed>,
+    pub scales: Vec<f32>,
+    pub mins: Vec<f32>,
+    pub code_sums: Vec<f32>,
+    pub regions_per_row: usize,
+    pub group: usize,
+}
+
+impl PackedMatrix {
+    pub fn from_quantized(q: &QuantizedMatrix) -> PackedMatrix {
+        let rows_packed = (0..q.rows)
+            .map(|i| crate::quant::codec::pack(&q.codes[i * q.k..(i + 1) * q.k], q.bits))
+            .collect();
+        PackedMatrix {
+            rows: q.rows,
+            k: q.k,
+            bits: q.bits,
+            rows_packed,
+            scales: q.scales.clone(),
+            mins: q.mins.clone(),
+            code_sums: q.code_sums.clone(),
+            regions_per_row: q.regions_per_row(),
+            group: q.group_len(),
+        }
+    }
+
+    /// Total packed bytes (codes only).
+    pub fn code_bytes(&self) -> usize {
+        self.rows_packed.iter().map(|p| p.bytes()).sum()
+    }
+}
+
+/// `A_packed (M,K) x W_packed^T (N,K) -> (M,N)` with per-region correction.
+///
+/// Unpacks codes on the fly into a per-row scratch buffer once per row pair
+/// panel (A row reused across all N columns), so unpack cost amortizes.
+pub fn gemm_packed(aq: &PackedMatrix, wq: &PackedMatrix, threads: usize) -> Tensor {
+    assert_eq!(aq.k, wq.k);
+    assert_eq!(aq.group, wq.group, "operands must share the region size");
+    let (m, n, k) = (aq.rows, wq.rows, aq.k);
+    let g = aq.group;
+    let rpr = aq.regions_per_row;
+    let mut out = vec![0.0f32; m * n];
+
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    scope_chunks(m, threads, |i0, i1| {
+        let out_ptr = &out_ptr;
+        let mut abuf = vec![0u8; k];
+        let mut wbuf = vec![0u8; k];
+        for i in i0..i1 {
+            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            abuf.copy_from_slice(&crate::quant::codec::unpack(&aq.rows_packed[i]));
+            for (j, o) in orow.iter_mut().enumerate() {
+                wbuf.copy_from_slice(&crate::quant::codec::unpack(&wq.rows_packed[j]));
+                let mut acc = 0.0f32;
+                for r in 0..rpr {
+                    let start = r * g;
+                    let end = ((r + 1) * g).min(k);
+                    let mut qq: i32 = 0;
+                    for (a, w) in abuf[start..end].iter().zip(&wbuf[start..end]) {
+                        qq += (*a as i32) * (*w as i32);
+                    }
+                    let sa = aq.scales[i * rpr + r];
+                    let ma = aq.mins[i * rpr + r];
+                    let sw = wq.scales[j * rpr + r];
+                    let mw = wq.mins[j * rpr + r];
+                    acc += sa * sw * qq as f32
+                        + sa * mw * aq.code_sums[i * rpr + r]
+                        + sw * ma * wq.code_sums[j * rpr + r]
+                        + (end - start) as f32 * ma * mw;
+                }
+                *o = acc;
+            }
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::gemm_i8::gemm_quantized;
+    use crate::quant::{quantize_matrix, RegionSpec};
+    use crate::util::prop;
+
+    #[test]
+    fn packed_equals_unpacked_gemm() {
+        prop::check_named("gemm-packed-vs-i8", 0x9A, 24, |rng, _| {
+            let m = rng.index(1, 10);
+            let n = rng.index(1, 10);
+            let k = rng.index(1, 40);
+            let bits = [2u8, 4, 8][rng.below(3) as usize];
+            let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let region = RegionSpec::Size(rng.index(1, k + 1));
+            let aq = quantize_matrix(&a, bits, region);
+            let wq = quantize_matrix(&w, bits, region);
+            let want = gemm_quantized(&aq, &wq, 1);
+            let got = gemm_packed(
+                &PackedMatrix::from_quantized(&aq),
+                &PackedMatrix::from_quantized(&wq),
+                2,
+            );
+            assert!(got.max_abs_diff(&want) <= 1e-5 * want.max_abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn packed_bytes_ratio() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Tensor::new(&[8, 256], rng.normal_vec(8 * 256));
+        let p8 = PackedMatrix::from_quantized(&quantize_matrix(&a, 8, RegionSpec::PerRow));
+        let p2 = PackedMatrix::from_quantized(&quantize_matrix(&a, 2, RegionSpec::PerRow));
+        let ratio = p8.code_bytes() as f64 / p2.code_bytes() as f64;
+        assert!((3.0..=4.5).contains(&ratio), "8-bit/2-bit byte ratio {ratio}");
+    }
+}

@@ -1,0 +1,143 @@
+//! im2col conv lowering — layout-compatible with `python/compile/model.py`.
+//!
+//! Input NCHW `(B, C, H, W)` -> patch matrix `(B*Ho*Wo, C*k*k)` where one row
+//! is one receptive field with channel-major patch order `(C, kh, kw)`. One
+//! row therefore spans exactly one "kernel-sized" LQ region (the paper's
+//! default region choice in §VI.D: 11x11x3 = 363 for AlexNet conv1).
+
+use crate::tensor::Tensor;
+
+/// Output spatial size for a conv dimension.
+pub fn conv_output_size(h: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (h + 2 * pad - k) / stride + 1
+}
+
+/// Lower `(B,C,H,W)` to the `(B*Ho*Wo, C*k*k)` patch matrix.
+pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, (usize, usize, usize)) {
+    assert_eq!(x.rank(), 4, "im2col needs NCHW, got {:?}", x.shape());
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let ho = conv_output_size(h, k, stride, pad);
+    let wo = conv_output_size(w, k, stride, pad);
+    let patch = c * k * k;
+    let mut out = vec![0.0f32; b * ho * wo * patch];
+    let xd = x.data();
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * patch;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            let dst = row + (ci * k + ky) * k + kx;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                out[dst] =
+                                    xd[((bi * c + ci) * h + iy as usize) * w + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(&[b * ho * wo, patch], out), (b, ho, wo))
+}
+
+/// Fold a `(B*Ho*Wo, O)` GEMM result back to NCHW `(B, O, Ho, Wo)`.
+pub fn col2im_output(y: &Tensor, b: usize, ho: usize, wo: usize) -> Tensor {
+    assert_eq!(y.rank(), 2);
+    assert_eq!(y.dim(0), b * ho * wo);
+    let o = y.dim(1);
+    let mut out = vec![0.0f32; b * o * ho * wo];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (bi * ho + oy) * wo + ox;
+                for oc in 0..o {
+                    out[((bi * o + oc) * ho + oy) * wo + ox] = y.at2(row, oc);
+                }
+            }
+        }
+    }
+    Tensor::new(&[b, o, ho, wo], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Direct (nested-loop) convolution oracle.
+    fn conv_direct(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+        let (b, c, h, ww) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let (o, _c2, k, _) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+        let ho = conv_output_size(h, k, stride, pad);
+        let wo = conv_output_size(ww, k, stride, pad);
+        let mut out = vec![0.0f32; b * o * ho * wo];
+        for bi in 0..b {
+            for oc in 0..o {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut acc = 0.0f32;
+                        for ci in 0..c {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    let iy = (oy * stride + ky) as isize - pad as isize;
+                                    let ix = (ox * stride + kx) as isize - pad as isize;
+                                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < ww
+                                    {
+                                        let xv = x.data()
+                                            [((bi * c + ci) * h + iy as usize) * ww + ix as usize];
+                                        let wv = w.data()[((oc * c + ci) * k + ky) * k + kx];
+                                        acc += xv * wv;
+                                    }
+                                }
+                            }
+                        }
+                        out[((bi * o + oc) * ho + oy) * wo + ox] = acc;
+                    }
+                }
+            }
+        }
+        Tensor::new(&[b, o, ho, wo], out)
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for &(c, h, k, stride, pad) in
+            &[(1usize, 5usize, 3usize, 1usize, 1usize), (3, 8, 5, 1, 2), (2, 9, 3, 2, 1), (4, 6, 1, 1, 0)]
+        {
+            let b = 2;
+            let o = 3;
+            let x = Tensor::new(&[b, c, h, h], rng.normal_vec(b * c * h * h));
+            let w = Tensor::new(&[o, c, k, k], rng.normal_vec(o * c * k * k));
+            let (cols, (bb, ho, wo)) = im2col(&x, k, stride, pad);
+            // GEMM: (rows, patch) x (patch, O)
+            let wmat = w.reshape(&[o, c * k * k]).unwrap().transpose2();
+            let y = crate::fixedpoint::gemm_f32(&cols, &wmat, 1);
+            let got = col2im_output(&y, bb, ho, wo);
+            let want = conv_direct(&x, &w, stride, pad);
+            assert!(
+                got.max_abs_diff(&want) <= 1e-4 * want.max_abs().max(1.0),
+                "c={c} h={h} k={k} s={stride} p={pad}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn output_size() {
+        assert_eq!(conv_output_size(32, 5, 1, 2), 32);
+        assert_eq!(conv_output_size(224, 11, 4, 0), 54); // AlexNet conv1 (paper Fig. 7)
+        assert_eq!(conv_output_size(32, 2, 2, 0), 16);
+    }
+
+    #[test]
+    fn patch_matrix_shape() {
+        let x = Tensor::zeros(&[2, 3, 32, 32]);
+        let (cols, (b, ho, wo)) = im2col(&x, 5, 1, 2);
+        assert_eq!((b, ho, wo), (2, 32, 32));
+        assert_eq!(cols.shape(), &[2 * 32 * 32, 75]);
+    }
+}

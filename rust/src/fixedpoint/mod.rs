@@ -1,0 +1,24 @@
+//! S6 — fixed-point GEMM kernels: the Edison-side hot path.
+//!
+//! The paper's Fig. 8 speedup comes from replacing the f32 GEMM (offloaded to
+//! MKL on the Edison board) with integer GEMMs over quantized operands. This
+//! module provides the same ladder on the host CPU:
+//!
+//! - [`gemm_f32`]   — blocked, multi-threaded f32 baseline (the MKL stand-in).
+//! - [`gemm_i8`]    — eq. 7: integer accumulation over 8-bit codes with
+//!   per-region affine correction (the LQ hot path, any bits <= 8).
+//! - [`gemm_packed`] — the same pipeline reading *bit-packed* 4/2-bit code
+//!   streams (the paper's bandwidth claim: codes travel packed).
+//! - [`gemm_lut`]   — §V look-up-table GEMM: multiplies replaced by
+//!   table-indexed adds for <= 4-bit activations.
+//! - [`im2col`]     — conv lowering; layout matches `python/compile/model.py`
+//!   so one row = one receptive field = one LQ region.
+pub mod gemm_f32;
+pub mod gemm_i8;
+pub mod gemm_lut;
+pub mod gemm_packed;
+pub mod im2col;
+
+pub use gemm_f32::gemm_f32;
+pub use gemm_i8::gemm_quantized;
+pub use im2col::{conv_output_size, im2col};

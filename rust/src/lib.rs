@@ -1,0 +1,29 @@
+//! `lqr` — Local Quantization Region inference stack.
+//!
+//! Reproduction of "Deploy Large-Scale Deep Neural Networks in Resource
+//! Constrained IoT Devices with Local Quantization Region" (Yang et al.,
+//! 2018). See DESIGN.md for the system inventory and per-experiment index.
+//!
+//! Crate layout:
+//! - [`util`] — hand-rolled infra (RNG, JSON, CLI, thread pool, stats, prop).
+//! - [`tensor`] — minimal f32/int ndarray substrate with npz I/O.
+//! - [`quant`] — the paper's contribution: DQ / LQ schemes, region
+//!   partitioning, bit codecs, LUT construction, error analysis.
+//! - [`nn`] — network graph, rust-native forward executor, architecture zoo
+//!   (full AlexNet / VGG-16 + the trained Mini variants), op counting.
+//! - [`fixedpoint`] — f32 / i8 / packed low-bit / LUT GEMM kernels.
+//! - [`runtime`] — PJRT artifact loading + execution (xla crate).
+//! - [`coordinator`] — serving: router, dynamic batcher, workers, metrics.
+//! - [`platform`] — Edison/Silvermont cost model + FPGA simulator.
+//! - [`dataset`] — synthetic dataset generation / npz loading.
+//! - [`eval`] — accuracy harness, sweeps, report formatting.
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod nn;
+pub mod fixedpoint;
+pub mod runtime;
+pub mod coordinator;
+pub mod platform;
+pub mod dataset;
+pub mod eval;

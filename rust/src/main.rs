@@ -1,0 +1,337 @@
+//! `lqr` — CLI for the Local Quantization Region inference stack.
+//!
+//! Subcommands (one per workflow; see `lqr help`):
+//!   serve      run the serving coordinator over a model variant
+//!   classify   classify validation images through a PJRT artifact
+//!   accuracy   accuracy sweeps (Tables 1-2 / Figs. 9-10)
+//!   opcount    analytic op counts (Table 3)
+//!   fpga       FPGA resource/perf/power model (Tables 4-5)
+//!   speedup    f32 vs fixed-point runtime (Fig. 8)
+//!   info       artifact manifest + architecture summary
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use lqr::coordinator::backend::{Backend, PjrtBackend};
+use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::dataset::Dataset;
+use lqr::eval::sweep;
+use lqr::nn::Arch;
+use lqr::runtime::Manifest;
+use lqr::util::cli::Args;
+use lqr::util::rng::Rng;
+
+fn main() {
+    lqr::util::logging::init();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&argv),
+        "serve-tcp" => cmd_serve_tcp(&argv),
+        "quantize" => cmd_quantize(&argv),
+        "classify" => cmd_classify(&argv),
+        "accuracy" => cmd_accuracy(&argv),
+        "opcount" => cmd_opcount(),
+        "fpga" => cmd_fpga(),
+        "speedup" => cmd_speedup(&argv),
+        "info" => cmd_info(&argv),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+lqr — Local Quantization Region inference stack (Yang et al. 2018 reproduction)
+
+USAGE: lqr <command> [flags]
+
+COMMANDS:
+  serve      run the serving coordinator (dynamic batching over PJRT artifacts)
+  serve-tcp  expose the coordinator over the TCP wire protocol
+  quantize   quantize a trained model offline into a .lqz deploy artifact
+  classify   classify validation images through one artifact
+  accuracy   accuracy sweeps: DQ vs LQ, bit widths, region sizes
+  opcount    Table 3 analytic op counts (full AlexNet / VGG-16)
+  fpga       Tables 4-5 FPGA matrix-multiplier model
+  speedup    Fig. 8 f32 vs 8-bit per-image runtime
+  info       list artifacts and architectures
+
+Run `lqr <command> --help` for flags.
+";
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let p = Args::new("lqr serve", "serve a model variant with dynamic batching")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "minialexnet", "model name")
+        .flag("variant", "f32", "artifact variant: f32 | lq")
+        .flag("workers", "1", "worker threads (each owns a PJRT session)")
+        .flag("max-batch", "8", "dynamic batch size cap")
+        .flag("max-wait-ms", "5", "batch deadline in milliseconds")
+        .flag("rate", "200", "request arrival rate (Poisson, req/s)")
+        .flag("requests", "500", "total requests to send")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let artifacts = p.get("artifacts").to_string();
+    let model = p.get("model").to_string();
+    let variant = p.get("variant").to_string();
+    let cfg = CoordinatorConfig {
+        workers: p.get_usize("workers"),
+        max_batch: p.get_usize("max-batch"),
+        max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
+        queue_capacity: 4096,
+    };
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
+    let (a2, m2, v2) = (artifacts.clone(), model.clone(), variant.clone());
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || Ok(Box::new(PjrtBackend::open(&a2, &m2, &v2)?) as Box<dyn Backend>)),
+    )?;
+
+    let rate = p.get_f64("rate");
+    let total = p.get_usize("requests");
+    println!("serving {model}/{variant}: {total} requests @ {rate} req/s (Poisson)");
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::with_capacity(total);
+    let mut labels = Vec::with_capacity(total);
+    let t0 = std::time::Instant::now();
+    for _ in 0..total {
+        let i = ds.sample(&mut rng);
+        labels.push(ds.labels[i]);
+        loop {
+            match coord.submit(ds.image(i)) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                // Backpressure: wait for the queue to drain a little.
+                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+            }
+        }
+        std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    let mut hits = 0usize;
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let resp = rx.recv()?;
+        if resp.predicted as i32 == label {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    println!(
+        "done in {wall:.2}s  throughput={:.1} req/s  accuracy={:.1}%",
+        total as f64 / wall,
+        100.0 * hits as f64 / total as f64
+    );
+    println!("{}", m.summary());
+    Ok(())
+}
+
+fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
+    use lqr::coordinator::net::{ImageSpec, NetServer};
+    use lqr::coordinator::router::Router;
+    use std::sync::Arc;
+
+    let p = Args::new("lqr serve-tcp", "serve models over the TCP wire protocol")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("listen", "127.0.0.1:7423", "bind address")
+        .flag("models", "minialexnet,minivgg", "models to route (comma list)")
+        .flag("variants", "f32,lq", "artifact variants per model (comma list)")
+        .flag("workers", "1", "workers per route")
+        .flag("max-batch", "8", "dynamic batch cap")
+        .flag("max-wait-ms", "5", "batch deadline (ms)")
+        .flag("duration", "30", "seconds to serve before shutdown (0 = forever)")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let artifacts = p.get("artifacts").to_string();
+    let manifest = Manifest::load(&artifacts)?;
+    let mut router = Router::new();
+    for model in p.get("models").split(',') {
+        let meta = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        let _ = meta;
+        for variant in p.get("variants").split(',') {
+            let route = format!("{model}/{variant}");
+            let (a, m, v) = (artifacts.clone(), model.to_string(), variant.to_string());
+            router.add_route(
+                &route,
+                CoordinatorConfig {
+                    workers: p.get_usize("workers"),
+                    max_batch: p.get_usize("max-batch"),
+                    max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
+                    queue_capacity: 4096,
+                },
+                Box::new(move || {
+                    Ok(Box::new(PjrtBackend::open(&a, &m, &v)?) as Box<dyn Backend>)
+                }),
+            )?;
+            println!("route {route}");
+        }
+    }
+    let (c, h, w) = manifest.models.values().next().unwrap().input_shape;
+    let router = Arc::new(router);
+    let server = NetServer::serve(p.get("listen"), Arc::clone(&router), ImageSpec { c, h, w })?;
+    println!("listening on {}", server.addr);
+    let secs = p.get_u64("duration");
+    if secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    server.shutdown();
+    println!("shut down after {secs}s");
+    Ok(())
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    use lqr::nn::Engine;
+    use lqr::quant::serialize::write_lqz;
+    use lqr::quant::RegionSpec;
+
+    let p = Args::new("lqr quantize", "offline-quantize a model into .lqz")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "minialexnet", "model name")
+        .flag("bits", "8", "weight bits (1-8)")
+        .flag("region", "kernel", "region: kernel | dq | <size>")
+        .required("out", "output .lqz path")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let artifacts = p.get("artifacts");
+    let model = p.get("model");
+    let region = RegionSpec::parse(p.get("region"))
+        .ok_or_else(|| anyhow::anyhow!("bad --region {}", p.get("region")))?;
+    let engine = Engine::from_npz(
+        Arch::by_name(model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?,
+        format!("{artifacts}/weights_{model}.npz"),
+    )?;
+    let entries = engine.to_lqz_entries(p.get_usize("bits") as u8, region);
+    write_lqz(p.get("out"), &entries)?;
+    let bytes = std::fs::metadata(p.get("out"))?.len();
+    println!(
+        "wrote {} ({} entries, {:.0} KB, {} bits, region={region})",
+        p.get("out"),
+        entries.len(),
+        bytes as f64 / 1e3,
+        p.get("bits"),
+    );
+    Ok(())
+}
+
+fn cmd_classify(argv: &[String]) -> Result<()> {
+    let p = Args::new("lqr classify", "classify val images through one artifact")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("artifact", "minialexnet_f32_b8", "artifact name (see `lqr info`)")
+        .flag("count", "32", "number of images")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let artifacts = p.get("artifacts");
+    let mut session = lqr::runtime::Session::open(artifacts)?;
+    let runner = session.load(p.get("artifact"))?;
+    let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
+    let batch = runner.meta.batch;
+    let n = p.get_usize("count").min(ds.len());
+    let mut hits = 0;
+    let mut done = 0;
+    while done + batch <= n {
+        let x = ds.batch(done, batch);
+        let logits = session.run(&runner, &x)?;
+        for r in 0..batch {
+            let row = logits.row(r);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == ds.labels[done + r] {
+                hits += 1;
+            }
+        }
+        done += batch;
+    }
+    println!("{}: {hits}/{done} top-1 over val subset", p.get("artifact"));
+    Ok(())
+}
+
+fn cmd_accuracy(argv: &[String]) -> Result<()> {
+    let p = Args::new("lqr accuracy", "accuracy sweeps (Tables 1-2, Figs. 9-10)")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("table", "2", "which experiment: 1 | 2 | fig10")
+        .flag("bits", "8,6,4,2", "activation bit widths for table 2")
+        .flag("regions", "27,9,3", "region sizes for fig10")
+        .flag("limit", "512", "validation images to evaluate")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let artifacts = p.get("artifacts");
+    let limit = p.get_usize("limit");
+    match p.get("table") {
+        "1" => sweep::table1(artifacts, limit)?.print(),
+        "2" => sweep::table2(artifacts, &p.get_usize_list("bits"), limit)?.print(),
+        "fig10" => sweep::fig10(artifacts, &p.get_usize_list("regions"), limit)?.print(),
+        other => anyhow::bail!("unknown --table {other} (want 1 | 2 | fig10)"),
+    }
+    Ok(())
+}
+
+fn cmd_opcount() -> Result<()> {
+    sweep::table3().print();
+    Ok(())
+}
+
+fn cmd_fpga() -> Result<()> {
+    sweep::table45().print();
+    Ok(())
+}
+
+fn cmd_speedup(argv: &[String]) -> Result<()> {
+    let p = Args::new("lqr speedup", "Fig. 8 f32 vs 8-bit per-image runtime")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("images", "20", "images to measure per configuration")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    sweep::fig8(p.get("artifacts"), p.get_usize("images"))?.print();
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let p = Args::new("lqr info", "artifact + architecture summary")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .parse_from(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let m = Manifest::load(p.get("artifacts"))?;
+    println!("artifacts in {}:", m.dir.display());
+    for a in &m.artifacts {
+        println!(
+            "  {:<24} model={:<12} variant={:<4} bits={} batch={}",
+            a.name, a.model, a.variant, a.bits, a.batch
+        );
+    }
+    println!("\narchitectures:");
+    for name in ["minialexnet", "minivgg", "alexnet", "vgg16"] {
+        let a = Arch::by_name(name).unwrap();
+        println!(
+            "  {:<12} input={:?} layers={} params={:.1}M",
+            name,
+            a.input,
+            a.layers.len(),
+            a.param_count() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

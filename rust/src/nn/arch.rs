@@ -1,0 +1,274 @@
+//! Architecture descriptors.
+//!
+//! The Mini models mirror `python/compile/model.py` exactly (same layer
+//! names, shapes and pooling) — the npz weights from `make artifacts` load
+//! into them 1:1. The full AlexNet / VGG-16 descriptors carry the canonical
+//! hyper-parameters (including AlexNet's grouped convolutions) so the
+//! analytic experiments reproduce the paper's absolute op counts.
+
+/// One layer of a feed-forward CNN.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// Convolution (+ ReLU), optionally followed by 2x2 max-pool.
+    Conv {
+        name: &'static str,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        /// Grouped convolution (AlexNet conv2/4/5 use groups = 2).
+        groups: usize,
+        /// Append a 2x2/s2 max-pool after the activation.
+        pool: bool,
+    },
+    /// Fully connected (+ optional ReLU).
+    Fc { name: &'static str, cin: usize, cout: usize, relu: bool },
+}
+
+impl Layer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layer::Conv { name, .. } | Layer::Fc { name, .. } => name,
+        }
+    }
+
+    /// im2col reduction length = the paper's default LQ region size.
+    pub fn patch(&self) -> usize {
+        match *self {
+            Layer::Conv { cin, k, groups, .. } => cin / groups * k * k,
+            Layer::Fc { cin, .. } => cin,
+        }
+    }
+}
+
+/// A network: ordered layers + input geometry.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: &'static str,
+    /// (C, H, W) input.
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+fn conv(
+    name: &'static str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    pool: bool,
+) -> Layer {
+    Layer::Conv { name, cin, cout, k, stride, pad, groups: 1, pool }
+}
+
+fn gconv(
+    name: &'static str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    pool: bool,
+) -> Layer {
+    Layer::Conv { name, cin, cout, k, stride, pad, groups, pool }
+}
+
+fn fc(name: &'static str, cin: usize, cout: usize, relu: bool) -> Layer {
+    Layer::Fc { name, cin, cout, relu }
+}
+
+impl Arch {
+    /// MiniAlexNet — the trained 32x32 stand-in (matches python model.py).
+    pub fn minialexnet() -> Arch {
+        Arch {
+            name: "minialexnet",
+            input: (3, 32, 32),
+            num_classes: 16,
+            layers: vec![
+                conv("conv1", 3, 32, 5, 1, 2, true),
+                conv("conv2", 32, 64, 5, 1, 2, true),
+                conv("conv3", 64, 128, 3, 1, 1, true),
+                fc("fc1", 128 * 4 * 4, 256, true),
+                fc("fc2", 256, 16, false),
+            ],
+        }
+    }
+
+    /// MiniVGG — the trained 32x32 stand-in (matches python model.py).
+    pub fn minivgg() -> Arch {
+        Arch {
+            name: "minivgg",
+            input: (3, 32, 32),
+            num_classes: 16,
+            layers: vec![
+                conv("conv1_1", 3, 32, 3, 1, 1, false),
+                conv("conv1_2", 32, 32, 3, 1, 1, true),
+                conv("conv2_1", 32, 64, 3, 1, 1, false),
+                conv("conv2_2", 64, 64, 3, 1, 1, true),
+                conv("conv3_1", 64, 128, 3, 1, 1, false),
+                conv("conv3_2", 128, 128, 3, 1, 1, true),
+                fc("fc1", 128 * 4 * 4, 256, true),
+                fc("fc2", 256, 16, false),
+            ],
+        }
+    }
+
+    /// Full AlexNet (Krizhevsky et al. 2012), canonical 227x227 geometry with
+    /// grouped conv2/4/5 — used analytically (Table 3: 666M conv multiplies).
+    pub fn alexnet_full() -> Arch {
+        Arch {
+            name: "alexnet",
+            input: (3, 227, 227),
+            num_classes: 1000,
+            layers: vec![
+                conv("conv1", 3, 96, 11, 4, 0, true),
+                gconv("conv2", 96, 256, 5, 1, 2, 2, true),
+                conv("conv3", 256, 384, 3, 1, 1, false),
+                gconv("conv4", 384, 384, 3, 1, 1, 2, false),
+                gconv("conv5", 384, 256, 3, 1, 1, 2, true),
+                fc("fc6", 256 * 6 * 6, 4096, true),
+                fc("fc7", 4096, 4096, true),
+                fc("fc8", 4096, 1000, false),
+            ],
+        }
+    }
+
+    /// Full VGG-16 (Simonyan & Zisserman 2014), all 3x3 receptive fields —
+    /// used analytically (Table 3: 15347M conv multiplies).
+    pub fn vgg16_full() -> Arch {
+        Arch {
+            name: "vgg16",
+            input: (3, 224, 224),
+            num_classes: 1000,
+            layers: vec![
+                conv("conv1_1", 3, 64, 3, 1, 1, false),
+                conv("conv1_2", 64, 64, 3, 1, 1, true),
+                conv("conv2_1", 64, 128, 3, 1, 1, false),
+                conv("conv2_2", 128, 128, 3, 1, 1, true),
+                conv("conv3_1", 128, 256, 3, 1, 1, false),
+                conv("conv3_2", 256, 256, 3, 1, 1, false),
+                conv("conv3_3", 256, 256, 3, 1, 1, true),
+                conv("conv4_1", 256, 512, 3, 1, 1, false),
+                conv("conv4_2", 512, 512, 3, 1, 1, false),
+                conv("conv4_3", 512, 512, 3, 1, 1, true),
+                conv("conv5_1", 512, 512, 3, 1, 1, false),
+                conv("conv5_2", 512, 512, 3, 1, 1, false),
+                conv("conv5_3", 512, 512, 3, 1, 1, true),
+                fc("fc6", 512 * 7 * 7, 4096, true),
+                fc("fc7", 4096, 4096, true),
+                fc("fc8", 4096, 1000, false),
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Arch> {
+        match name {
+            "minialexnet" => Some(Arch::minialexnet()),
+            "minivgg" => Some(Arch::minivgg()),
+            "alexnet" => Some(Arch::alexnet_full()),
+            "vgg16" => Some(Arch::vgg16_full()),
+            _ => None,
+        }
+    }
+
+    /// Spatial size after each layer; validates the geometry chains up.
+    pub fn validate(&self) -> Result<(), String> {
+        let (mut c, mut h, mut w) = self.input;
+        let mut flattened = false;
+        for l in &self.layers {
+            match *l {
+                Layer::Conv { name, cin, cout, k, stride, pad, groups, pool } => {
+                    if flattened {
+                        return Err(format!("{name}: conv after flatten"));
+                    }
+                    if cin != c {
+                        return Err(format!("{name}: cin {cin} != incoming {c}"));
+                    }
+                    if cin % groups != 0 || cout % groups != 0 {
+                        return Err(format!("{name}: groups {groups} must divide channels"));
+                    }
+                    h = (h + 2 * pad - k) / stride + 1;
+                    w = (w + 2 * pad - k) / stride + 1;
+                    if pool {
+                        h /= 2;
+                        w /= 2;
+                    }
+                    c = cout;
+                }
+                Layer::Fc { name, cin, cout, .. } => {
+                    let incoming = if flattened { c } else { c * h * w };
+                    if cin != incoming {
+                        return Err(format!("{name}: cin {cin} != incoming {incoming}"));
+                    }
+                    flattened = true;
+                    c = cout;
+                }
+            }
+        }
+        if c != self.num_classes {
+            return Err(format!("final width {c} != num_classes {}", self.num_classes));
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match *l {
+                Layer::Conv { cin, cout, k, groups, .. } => cout * (cin / groups) * k * k + cout,
+                Layer::Fc { cin, cout, .. } => cin * cout + cout,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_archs_validate() {
+        for a in [
+            Arch::minialexnet(),
+            Arch::minivgg(),
+            Arch::alexnet_full(),
+            Arch::vgg16_full(),
+        ] {
+            a.validate().unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+    }
+
+    #[test]
+    fn alexnet_param_count_canonical() {
+        // ~61M parameters is the canonical AlexNet figure.
+        let p = Arch::alexnet_full().param_count();
+        assert!((58_000_000..64_000_000).contains(&p), "alexnet params {p}");
+    }
+
+    #[test]
+    fn vgg16_param_count_canonical() {
+        // ~138M parameters is the canonical VGG-16 figure.
+        let p = Arch::vgg16_full().param_count();
+        assert!((135_000_000..141_000_000).contains(&p), "vgg16 params {p}");
+    }
+
+    #[test]
+    fn patch_is_kernel_region() {
+        // Paper §VI.D: AlexNet conv1's region = 11*11*3 = 363.
+        let a = Arch::alexnet_full();
+        assert_eq!(a.layers[0].patch(), 363);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["minialexnet", "minivgg", "alexnet", "vgg16"] {
+            assert_eq!(Arch::by_name(n).unwrap().name, n);
+        }
+        assert!(Arch::by_name("nope").is_none());
+    }
+}

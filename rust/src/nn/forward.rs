@@ -1,0 +1,442 @@
+//! Rust-native CPU inference engine (the "BLAImark" role from paper §VI.C).
+//!
+//! Loads npz weights for an [`Arch`] and runs the forward pass at a chosen
+//! [`Precision`]:
+//!
+//! - `F32` — baseline: im2col + blocked f32 GEMM (the MKL stand-in).
+//! - `Quant` — the paper's pipeline: weights quantized *offline* (static
+//!   8-bit by default, per-kernel regions), activations quantized *at
+//!   runtime* with DQ (per-layer scale) or LQ (per-region scale), integer
+//!   GEMM via eq. 7, optional LUT inner loop for <= 4-bit activations.
+//!
+//! The engine is deliberately identical in layout to the build-time python
+//! path (im2col layout, region geometry), so its accuracy numbers are the
+//! paper's Tables 1–2 / Figs. 9–10 protocol.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fixedpoint::{gemm_f32, gemm_lut::gemm_lut, gemm_quantized, im2col};
+use crate::fixedpoint::im2col::col2im_output;
+use crate::nn::arch::{Arch, Layer};
+use crate::quant::{quantize_matrix, QuantizedMatrix, RegionSpec};
+use crate::tensor::{read_npz, Tensor};
+
+/// Activation-quantization scheme for the quantized pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Dynamic fixed point (paper §IV.B): one scale per layer.
+    Dq,
+    /// Local quantization (the paper's contribution): per-region scales.
+    Lq,
+}
+
+/// Numeric configuration of a forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    F32,
+    Quant {
+        scheme: Scheme,
+        /// Activation bits (the paper sweeps 8/6/4/2).
+        bits_a: u8,
+        /// Weight bits (the paper fixes 8).
+        bits_w: u8,
+        /// LQ region size for activations & weights; `PerRow` = the paper's
+        /// kernel-sized default, `Size(g)` = §VI.F smaller regions.
+        region: RegionSpec,
+        /// Use the §V LUT (bucketed) inner loop (needs bits_a <= 4).
+        lut: bool,
+    },
+}
+
+impl Precision {
+    /// The paper's default LQ configuration at a given activation width.
+    pub fn lq(bits_a: u8) -> Precision {
+        Precision::Quant { scheme: Scheme::Lq, bits_a, bits_w: 8, region: RegionSpec::PerRow, lut: false }
+    }
+
+    /// The prior-work DQ configuration at a given activation width.
+    pub fn dq(bits_a: u8) -> Precision {
+        Precision::Quant { scheme: Scheme::Dq, bits_a, bits_w: 8, region: RegionSpec::PerTensor, lut: false }
+    }
+}
+
+/// Weights + cached offline-quantized weights for one network.
+pub struct Engine {
+    pub arch: Arch,
+    params: HashMap<String, Tensor>,
+    /// Offline weight quantization cache keyed by (layer, bits_w, region).
+    wq_cache: std::sync::Mutex<HashMap<(String, u8, String), std::sync::Arc<QuantizedMatrix>>>,
+    pub threads: usize,
+}
+
+impl Engine {
+    /// Load weights from an npz produced by `python -m compile.train`.
+    pub fn from_npz(arch: Arch, path: impl AsRef<Path>) -> Result<Engine> {
+        arch.validate().map_err(|e| anyhow::anyhow!("bad arch: {e}"))?;
+        let entries = read_npz(&path).with_context(|| "loading weights npz")?;
+        let mut params = HashMap::new();
+        for e in entries {
+            params.insert(e.name.clone(), e.to_tensor());
+        }
+        let eng = Engine { arch, params, wq_cache: Default::default(), threads: default_threads() };
+        eng.check_params()?;
+        Ok(eng)
+    }
+
+    /// Build from an in-memory parameter map (tests, synthetic weights).
+    pub fn from_params(arch: Arch, params: HashMap<String, Tensor>) -> Result<Engine> {
+        let eng = Engine { arch, params, wq_cache: Default::default(), threads: default_threads() };
+        eng.check_params()?;
+        Ok(eng)
+    }
+
+    fn check_params(&self) -> Result<()> {
+        for l in &self.arch.layers {
+            let (wname, bname) = (format!("{}.w", l.name()), format!("{}.b", l.name()));
+            let w = self.params.get(&wname).with_context(|| format!("missing {wname}"))?;
+            self.params.get(&bname).with_context(|| format!("missing {bname}"))?;
+            match *l {
+                Layer::Conv { cin, cout, k, groups, .. } => {
+                    if groups != 1 {
+                        bail!("{}: grouped conv unsupported by the engine", l.name());
+                    }
+                    if w.shape() != [cout, cin, k, k] {
+                        bail!("{wname}: shape {:?} != [{cout},{cin},{k},{k}]", w.shape());
+                    }
+                }
+                Layer::Fc { cin, cout, .. } => {
+                    if w.shape() != [cin, cout] {
+                        bail!("{wname}: shape {:?} != [{cin},{cout}]", w.shape());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn param(&self, name: &str) -> &Tensor {
+        &self.params[name]
+    }
+
+    /// Quantize the whole network offline into `.lqz` deployment entries
+    /// (weights at `bits_w`/`region` in GEMM layout; biases at 8-bit).
+    /// This is the artifact that ships to the device — see `quant::serialize`.
+    pub fn to_lqz_entries(&self, bits_w: u8, region: RegionSpec) -> Vec<crate::quant::serialize::LqzEntry> {
+        use crate::quant::serialize::LqzEntry;
+        let wregion = match region {
+            RegionSpec::PerTensor => RegionSpec::PerRow,
+            r => r,
+        };
+        let mut entries = Vec::new();
+        for l in &self.arch.layers {
+            let w = &self.params[&format!("{}.w", l.name())];
+            let wmat = match *l {
+                Layer::Conv { cout, .. } => w.reshape(&[cout, l.patch()]).unwrap(),
+                Layer::Fc { .. } => w.transpose2(),
+            };
+            entries.push(LqzEntry {
+                name: format!("{}.w", l.name()),
+                matrix: quantize_matrix(&wmat, bits_w, wregion),
+            });
+            let b = &self.params[&format!("{}.b", l.name())];
+            let brow = b.reshape(&[1, b.len()]).unwrap();
+            entries.push(LqzEntry {
+                name: format!("{}.b", l.name()),
+                matrix: quantize_matrix(&brow, 8, RegionSpec::PerRow),
+            });
+        }
+        entries
+    }
+
+    /// Build an engine from a `.lqz` deployment file: no f32 weights needed.
+    /// The stored quantized weights seed the offline cache (so the quantized
+    /// forward path reuses the shipped codes exactly); the f32 parameter map
+    /// is reconstructed by dequantization for bias adds and the f32 path.
+    pub fn from_lqz(arch: Arch, path: impl AsRef<Path>) -> Result<Engine> {
+        use crate::quant::serialize::read_lqz;
+        arch.validate().map_err(|e| anyhow::anyhow!("bad arch: {e}"))?;
+        let entries = read_lqz(&path)?;
+        let by_name: HashMap<String, crate::quant::serialize::LqzEntry> =
+            entries.into_iter().map(|e| (e.name.clone(), e)).collect();
+        let mut params = HashMap::new();
+        let mut cache: HashMap<(String, u8, String), std::sync::Arc<QuantizedMatrix>> =
+            HashMap::new();
+        for l in &arch.layers {
+            let wname = format!("{}.w", l.name());
+            let bname = format!("{}.b", l.name());
+            let we = by_name.get(&wname).with_context(|| format!("lqz missing {wname}"))?;
+            let be = by_name.get(&bname).with_context(|| format!("lqz missing {bname}"))?;
+            // f32 reconstruction in the engine's storage layout.
+            let wmat = we.matrix.dequantize();
+            let w = match *l {
+                Layer::Conv { cin, cout, k, .. } => {
+                    wmat.reshape(&[cout, cin, k, k]).unwrap()
+                }
+                Layer::Fc { .. } => wmat.transpose2(),
+            };
+            params.insert(wname.clone(), w);
+            let b = be.matrix.dequantize();
+            params.insert(bname, b.reshape(&[b.len()]).unwrap());
+            cache.insert(
+                (l.name().to_string(), we.matrix.bits, we.matrix.region.to_string()),
+                std::sync::Arc::new(we.matrix.clone()),
+            );
+        }
+        let eng = Engine {
+            arch,
+            params,
+            wq_cache: std::sync::Mutex::new(cache),
+            threads: default_threads(),
+        };
+        eng.check_params()?;
+        Ok(eng)
+    }
+
+    /// Offline weight quantization (cached): rows = output channels.
+    fn quantized_weights(
+        &self,
+        layer: &Layer,
+        bits_w: u8,
+        region: RegionSpec,
+    ) -> std::sync::Arc<QuantizedMatrix> {
+        let key = (layer.name().to_string(), bits_w, region.to_string());
+        if let Some(q) = self.wq_cache.lock().unwrap().get(&key) {
+            return q.clone();
+        }
+        let w = &self.params[&format!("{}.w", layer.name())];
+        let wmat = match *layer {
+            Layer::Conv { cout, .. } => w.reshape(&[cout, layer.patch()]).unwrap(),
+            Layer::Fc { .. } => w.transpose2(), // (out, in): rows contract over K
+        };
+        // Weights are quantized offline with *local* (per-kernel) regions in
+        // every configuration — the paper quantizes kernels with LQ even when
+        // comparing DQ activations (§VI.E).
+        let wregion = match region {
+            RegionSpec::PerTensor => RegionSpec::PerRow,
+            r => r,
+        };
+        let q = std::sync::Arc::new(quantize_matrix(&wmat, bits_w, wregion));
+        self.wq_cache.lock().unwrap().insert(key, q.clone());
+        q
+    }
+
+    /// Quantize activations at runtime per the scheme.
+    fn quantize_acts(a: &Tensor, scheme: Scheme, bits_a: u8, region: RegionSpec) -> QuantizedMatrix {
+        let r = match scheme {
+            Scheme::Dq => RegionSpec::PerTensor,
+            Scheme::Lq => region,
+        };
+        quantize_matrix(a, bits_a, r)
+    }
+
+    /// One GEMM at the configured precision: `a (M,K) x w^T (N,K) + bias`.
+    fn gemm(
+        &self,
+        a: &Tensor,
+        layer: &Layer,
+        bias: &Tensor,
+        precision: Precision,
+    ) -> Tensor {
+        let mut out = match precision {
+            Precision::F32 => {
+                let w = &self.params[&format!("{}.w", layer.name())];
+                let wmat = match *layer {
+                    Layer::Conv { cout, .. } => {
+                        w.reshape(&[cout, layer.patch()]).unwrap().transpose2()
+                    }
+                    Layer::Fc { .. } => w.clone(), // already (in, out)
+                };
+                gemm_f32(a, &wmat, self.threads)
+            }
+            Precision::Quant { scheme, bits_a, bits_w, region, lut } => {
+                let wq = self.quantized_weights(layer, bits_w, region);
+                let aq = Self::quantize_acts(a, scheme, bits_a, region);
+                if lut {
+                    gemm_lut(&aq, &wq, self.threads)
+                } else {
+                    gemm_quantized(&aq, &wq, self.threads)
+                }
+            }
+        };
+        // bias add
+        let n = out.dim(1);
+        for i in 0..out.dim(0) {
+            let row = &mut out.data_mut()[i * n..(i + 1) * n];
+            for (o, b) in row.iter_mut().zip(bias.data()) {
+                *o += b;
+            }
+        }
+        out
+    }
+
+    /// Forward pass: `x (B, C, H, W)` -> logits `(B, num_classes)`.
+    pub fn forward(&self, x: &Tensor, precision: Precision) -> Tensor {
+        let mut act = x.clone();
+        let mut flattened = false;
+        for l in &self.arch.layers {
+            let bias = &self.params[&format!("{}.b", l.name())];
+            match *l {
+                Layer::Conv { k, stride, pad, pool, .. } => {
+                    let (cols, (b, ho, wo)) = im2col(&act, k, stride, pad);
+                    let y = self.gemm(&cols, l, bias, precision).max_scalar(0.0);
+                    act = col2im_output(&y, b, ho, wo);
+                    if pool {
+                        act = maxpool2(&act);
+                    }
+                }
+                Layer::Fc { cin, relu, .. } => {
+                    if !flattened {
+                        act = act.reshape(&[act.dim(0), cin]).unwrap();
+                        flattened = true;
+                    }
+                    // Quantized fc contracts (B,K) x (N,K): pass act rows.
+                    act = self.gemm(&act, l, bias, precision);
+                    if relu {
+                        act = act.max_scalar(0.0);
+                    }
+                }
+            }
+        }
+        act
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// 2x2 stride-2 max pool on NCHW.
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * c * ho * wo];
+    let xd = x.data();
+    for bc in 0..b * c {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let base = bc * h * w + 2 * y * w + 2 * xx;
+                let m = xd[base]
+                    .max(xd[base + 1])
+                    .max(xd[base + w])
+                    .max(xd[base + w + 1]);
+                out[bc * ho * wo + y * wo + xx] = m;
+            }
+        }
+    }
+    Tensor::new(&[b, c, ho, wo], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        // A 2-conv + 2-fc net small enough for exhaustive testing.
+        let arch = Arch {
+            name: "tiny",
+            input: (2, 8, 8),
+            num_classes: 4,
+            layers: vec![
+                Layer::Conv { name: "c1", cin: 2, cout: 4, k: 3, stride: 1, pad: 1, groups: 1, pool: true },
+                Layer::Conv { name: "c2", cin: 4, cout: 8, k: 3, stride: 1, pad: 1, groups: 1, pool: true },
+                Layer::Fc { name: "f1", cin: 8 * 2 * 2, cout: 16, relu: true },
+                Layer::Fc { name: "f2", cin: 16, cout: 4, relu: false },
+            ],
+        };
+        arch.validate().unwrap();
+        let mut rng = Rng::new(seed);
+        let mut params = HashMap::new();
+        for l in &arch.layers {
+            let (wshape, blen): (Vec<usize>, usize) = match *l {
+                Layer::Conv { cin, cout, k, .. } => (vec![cout, cin, k, k], cout),
+                Layer::Fc { cin, cout, .. } => (vec![cin, cout], cout),
+            };
+            let n: usize = wshape.iter().product();
+            params.insert(
+                format!("{}.w", l.name()),
+                Tensor::new(&wshape, rng.normal_vec(n).iter().map(|v| v * 0.3).collect()),
+            );
+            params.insert(format!("{}.b", l.name()), Tensor::new(&[blen], rng.normal_vec(blen)));
+        }
+        Engine::from_params(arch, params).unwrap()
+    }
+
+    #[test]
+    fn f32_forward_shapes() {
+        let eng = tiny_engine(1);
+        let mut rng = Rng::new(2);
+        let x = Tensor::new(&[3, 2, 8, 8], rng.normal_vec(3 * 2 * 8 * 8));
+        let y = eng.forward(&x, Precision::F32);
+        assert_eq!(y.shape(), &[3, 4]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quant8_close_to_f32() {
+        let eng = tiny_engine(3);
+        let mut rng = Rng::new(4);
+        let x = Tensor::new(&[2, 2, 8, 8], rng.uniform_vec(2 * 2 * 8 * 8, 0.0, 1.0));
+        let f = eng.forward(&x, Precision::F32);
+        let q = eng.forward(&x, Precision::lq(8));
+        let rel = f.max_abs_diff(&q) / f.max_abs().max(1e-6);
+        assert!(rel < 0.05, "8-bit LQ logits deviate {rel}");
+    }
+
+    #[test]
+    fn lut_matches_integer_path() {
+        let eng = tiny_engine(5);
+        let mut rng = Rng::new(6);
+        let x = Tensor::new(&[2, 2, 8, 8], rng.uniform_vec(2 * 2 * 8 * 8, 0.0, 1.0));
+        let base = Precision::Quant {
+            scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::PerRow, lut: false,
+        };
+        let with_lut = Precision::Quant {
+            scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::PerRow, lut: true,
+        };
+        let a = eng.forward(&x, base);
+        let b = eng.forward(&x, with_lut);
+        assert!(a.max_abs_diff(&b) <= 1e-4 * a.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn lq_beats_dq_at_2bit() {
+        // The paper's headline mechanism: when activation magnitude varies
+        // across receptive fields (here: across images in the batch), the
+        // per-layer DQ scale clips the small-magnitude samples to nothing
+        // while per-region LQ scales adapt. Compare *relative* logit error.
+        let eng = tiny_engine(7);
+        let mut rng = Rng::new(8);
+        let mut data = rng.uniform_vec(4 * 2 * 8 * 8, 0.0, 1.0);
+        let per = 2 * 8 * 8;
+        for (i, mag) in [0.01f32, 0.1, 1.0, 10.0].iter().enumerate() {
+            for v in &mut data[i * per..(i + 1) * per] {
+                *v *= mag;
+            }
+        }
+        let x = Tensor::new(&[4, 2, 8, 8], data);
+        let f = eng.forward(&x, Precision::F32);
+        let lq = eng.forward(&x, Precision::lq(2));
+        let dq = eng.forward(&x, Precision::dq(2));
+        let rel = |q: &Tensor, img: usize| {
+            let fr = f.row(img);
+            let qr = q.row(img);
+            let num: f32 = fr.iter().zip(qr).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = fr.iter().map(|a| a * a).sum::<f32>().max(1e-12);
+            (num / den).sqrt()
+        };
+        // The small-magnitude images are where DQ collapses.
+        let e_lq = rel(&lq, 0) + rel(&lq, 1);
+        let e_dq = rel(&dq, 0) + rel(&dq, 1);
+        assert!(e_lq < e_dq, "LQ rel err {e_lq} should beat DQ rel err {e_dq}");
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(maxpool2(&x).data(), &[4.0]);
+    }
+}

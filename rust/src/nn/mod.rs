@@ -1,0 +1,18 @@
+//! S4/S5 — network descriptions, the rust-native forward engine, and
+//! analytic op counting.
+//!
+//! - [`arch`]    — layer descriptors + the architecture zoo: the trained
+//!   Mini models (MiniAlexNet / MiniVGG, weights from `make artifacts`) and
+//!   the *full* AlexNet / VGG-16 used analytically (Table 3, memory).
+//! - [`forward`] — CPU inference engine over npz weights with selectable
+//!   precision: f32 baseline, or the quantized pipeline (DQ / LQ, any bit
+//!   width, any region size, optional LUT inner loop). This engine powers
+//!   the accuracy experiments (Tables 1–2, Figs. 9–10).
+//! - [`opcount`] — analytic multiply/add counting (Table 3) and model
+//!   memory footprints.
+pub mod arch;
+pub mod forward;
+pub mod opcount;
+
+pub use arch::{Arch, Layer};
+pub use forward::{Engine, Precision};

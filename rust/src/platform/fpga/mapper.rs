@@ -1,0 +1,144 @@
+//! Whole-network mapping onto the Matrix Multiplier substrate.
+//!
+//! Extends Tables 4–5 from a single module to a full deployment estimate:
+//! tile every conv/fc layer of an [`Arch`] into 4x4 GEMM panels, count the
+//! exact cycles the systolic schedule needs (same formula the cycle-level
+//! simulator realizes, validated against it in tests), and combine with the
+//! per-configuration Fmax/power models to estimate per-image latency and
+//! energy at each precision — the end-to-end version of the paper's §VI.H
+//! conclusion that narrow CUs win on both speed and power.
+
+use crate::nn::arch::{Arch, Layer};
+use crate::nn::opcount::conv_macs;
+use crate::platform::fpga::perf::perf;
+use crate::platform::fpga::resource::{estimate, CuConfig};
+use crate::platform::fpga::sim::GRID;
+
+/// Per-image deployment estimate for one (network, CU config) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct MappingEstimate {
+    /// Total array beats across all layer tiles (one module).
+    pub cycles: u64,
+    /// Latency per image at the configuration's Fmax, milliseconds.
+    pub latency_ms: f64,
+    /// Energy per image at 200 MHz operating point, millijoules.
+    pub energy_mj: f64,
+    /// MAC utilization of the schedule (MACs / (cycles * 16 CUs)).
+    pub utilization: f64,
+}
+
+/// Cycles for one (m, k, n) GEMM tiled on the 4x4 array: each 4x4 output
+/// tile streams K with skew fill/drain, plus the CU pipeline latency per
+/// tile. Mirrors `sim::simulate`'s accounting exactly (pinned by tests).
+pub fn gemm_cycles(cfg: CuConfig, m: usize, k: usize, n: usize) -> u64 {
+    let r = estimate(cfg);
+    let tiles_m = m.div_ceil(GRID) as u64;
+    let tiles_n = n.div_ceil(GRID) as u64;
+    let mut cycles = 0u64;
+    // Tail tiles have smaller th/tw: beats = k + th + tw - 1.
+    for ti in 0..tiles_m {
+        let th = GRID.min(m - ti as usize * GRID) as u64;
+        for tj in 0..tiles_n {
+            let tw = GRID.min(n - tj as usize * GRID) as u64;
+            cycles += k as u64 + th + tw - 1;
+        }
+    }
+    cycles + tiles_m * tiles_n * r.latency as u64
+}
+
+/// GEMM geometry of a layer at batch 1 (im2col formulation).
+fn layer_gemm(arch: &Arch, l: &Layer) -> (usize, usize, usize) {
+    match *l {
+        Layer::Conv { cout, cin, k, groups, .. } => {
+            let macs = conv_macs(arch, l);
+            let patch = cin / groups * k * k;
+            let positions = (macs / (cout as u64 * patch as u64)) as usize;
+            (positions * groups, patch, cout / groups)
+        }
+        Layer::Fc { cin, cout, .. } => (1, cin, cout),
+    }
+}
+
+/// Map the whole network at batch 1.
+pub fn map_network(arch: &Arch, cfg: CuConfig) -> MappingEstimate {
+    let r = estimate(cfg);
+    let p = perf(cfg);
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+    for l in &arch.layers {
+        let (m, k, n) = layer_gemm(arch, l);
+        cycles += gemm_cycles(cfg, m, k, n);
+        macs += (m * k * n) as u64;
+    }
+    let latency_ms = cycles as f64 / (r.fmax_mhz * 1e6) * 1e3;
+    // Energy at the 200 MHz measurement point: P * t(200MHz).
+    let t200_s = cycles as f64 / 200e6;
+    let energy_mj = p.power_mw_200 * t200_s;
+    MappingEstimate {
+        cycles,
+        latency_ms,
+        energy_mj,
+        utilization: macs as f64 / (cycles as f64 * (GRID * GRID) as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::fpga::sim::simulate;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cycles_match_simulator_exactly() {
+        let mut rng = Rng::new(7);
+        let cfg = CuConfig::Fixed { wp: 8, wi: 2 };
+        for &(m, k, n) in &[(4usize, 8usize, 4usize), (7, 20, 9), (16, 363, 12), (1, 5, 1)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.below(4) as i32).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+            let sim = simulate(cfg, &a, &b, m, k, n);
+            assert_eq!(
+                gemm_cycles(cfg, m, k, n),
+                sim.cycles,
+                "analytic cycles diverge from the simulator at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn narrower_inputs_faster_and_cheaper() {
+        // The §VI.H conclusion at whole-network scale.
+        let arch = crate::nn::Arch::alexnet_full();
+        let rows: Vec<MappingEstimate> = [
+            CuConfig::Fixed { wp: 8, wi: 8 },
+            CuConfig::Fixed { wp: 8, wi: 4 },
+            CuConfig::Fixed { wp: 8, wi: 2 },
+        ]
+        .into_iter()
+        .map(|c| map_network(&arch, c))
+        .collect();
+        for w in rows.windows(2) {
+            assert!(w[1].latency_ms <= w[0].latency_ms, "latency must not rise");
+            assert!(w[1].energy_mj < w[0].energy_mj, "energy must fall");
+        }
+        // Near-identical cycle count (same schedule; only the per-tile
+        // pipeline latency differs) — the gain is Fmax + power.
+        let rel = (rows[0].cycles as f64 - rows[2].cycles as f64).abs() / rows[0].cycles as f64;
+        assert!(rel < 0.005, "schedules should match within pipeline latency: {rel}");
+    }
+
+    #[test]
+    fn long_k_layers_dominate_utilization() {
+        let arch = crate::nn::Arch::vgg16_full();
+        let e = map_network(&arch, CuConfig::Fixed { wp: 8, wi: 8 });
+        assert!(e.utilization > 0.8, "VGG's long reductions should keep CUs busy: {}", e.utilization);
+    }
+
+    #[test]
+    fn fp32_much_slower_than_fixed() {
+        let arch = crate::nn::Arch::alexnet_full();
+        let fp = map_network(&arch, CuConfig::Fp32);
+        let f82 = map_network(&arch, CuConfig::Fixed { wp: 8, wi: 2 });
+        assert!(fp.latency_ms > 1.5 * f82.latency_ms);
+        assert!(fp.energy_mj > 10.0 * f82.energy_mj);
+    }
+}

@@ -1,0 +1,16 @@
+//! Xilinx Virtex-6 Matrix Multiplier substrate (paper §VI.H, Fig. 11–12).
+//!
+//! Three pieces:
+//! - [`resource`] — structural LUT/FF/Fmax/latency estimator per CU
+//!   configuration (Table 4) calibrated to LUT6 costs on XC6VLX240T.
+//! - [`perf`]     — throughput @ 90% device utilization and dynamic power
+//!   @ 200 MHz (Table 5).
+//! - [`sim`]      — cycle-level functional simulator of the 4x4 CU array
+//!   with ISC/PSC operand streaming; proves the dataflow computes exact
+//!   integer matrix products and measures cycle counts.
+pub mod mapper;
+pub mod perf;
+pub mod resource;
+pub mod sim;
+
+pub use resource::{CuConfig, ResourceEstimate};

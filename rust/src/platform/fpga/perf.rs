@@ -1,0 +1,92 @@
+//! Throughput / power model for the Matrix Multiplier (Table 5).
+//!
+//! - **Performance @ max freq @ 90% utilization of LUTs** (paper note 1):
+//!   fill 90% of the device with multiplier modules of the given config and
+//!   run them at their Fmax; each CU contributes one multiply + one add per
+//!   cycle (2 ops).
+//! - **Power @ 200 MHz** (paper note 2): dynamic (clock/logic/signal) power
+//!   of a *single* multiplier module, modelled as a base clock-tree term
+//!   plus a per-LUT switching term — the standard first-order CV²f model
+//!   with constants fit to the paper's XPower numbers.
+
+use crate::platform::fpga::resource::{estimate, CuConfig, DEVICE_LUTS, GRID_CUS};
+
+/// Table 5 row for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfEstimate {
+    /// Giga-ops/s (or Gflops for FP32) at 90% utilization and max frequency.
+    pub gops_at_max: f64,
+    /// Dynamic power of one module at 200 MHz, in mW.
+    pub power_mw_200: f64,
+    /// Modules that fit in 90% of the device.
+    pub modules: u64,
+}
+
+/// Per-LUT dynamic power at 200 MHz (mW) and clock-tree base (mW), fit to
+/// the paper's four XPower measurements.
+const MW_PER_LUT: f64 = 0.0358;
+const MW_BASE: f64 = 15.0;
+
+pub fn perf(cfg: CuConfig) -> PerfEstimate {
+    let r = estimate(cfg);
+    let budget = (DEVICE_LUTS as f64) * 0.90;
+    let modules = (budget / r.luts as f64).floor() as u64;
+    let cus = modules * GRID_CUS;
+    let gops_at_max = cus as f64 * 2.0 * r.fmax_mhz * 1e6 / 1e9;
+    let power_mw_200 = MW_BASE + MW_PER_LUT * r.luts as f64;
+    PerfEstimate { gops_at_max, power_mw_200, modules }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 5: (config, Gops@max, mW@200MHz).
+    const PAPER: [(f64, f64); 4] =
+        [(67.0, 643.0), (890.0, 71.0), (2502.0, 51.0), (4511.0, 37.0)];
+
+    fn rel_err(got: f64, want: f64) -> f64 {
+        (got - want).abs() / want
+    }
+
+    #[test]
+    fn table5_performance_within_25pct() {
+        for (cfg, &(gops, _)) in CuConfig::paper_rows().iter().zip(PAPER.iter()) {
+            let p = perf(*cfg);
+            assert!(
+                rel_err(p.gops_at_max, gops) < 0.25,
+                "{}: {} Gops vs paper {gops}",
+                cfg.label(),
+                p.gops_at_max
+            );
+        }
+    }
+
+    #[test]
+    fn table5_power_within_25pct() {
+        for (cfg, &(_, mw)) in CuConfig::paper_rows().iter().zip(PAPER.iter()) {
+            let p = perf(*cfg);
+            assert!(
+                rel_err(p.power_mw_200, mw) < 0.25,
+                "{}: {} mW vs paper {mw}",
+                cfg.label(),
+                p.power_mw_200
+            );
+        }
+    }
+
+    #[test]
+    fn low_bits_dominate_perf_per_watt() {
+        // The paper's conclusion: each halving of input width improves both
+        // throughput and power.
+        let rows: Vec<PerfEstimate> = CuConfig::paper_rows().into_iter().map(perf).collect();
+        for w in rows.windows(2) {
+            assert!(w[1].gops_at_max > w[0].gops_at_max);
+            assert!(w[1].power_mw_200 < w[0].power_mw_200);
+        }
+        let fp = &rows[0];
+        let f82 = &rows[3];
+        let ratio = (f82.gops_at_max / f82.power_mw_200) / (fp.gops_at_max / fp.power_mw_200);
+        assert!(ratio > 50.0, "8x2 perf/W should crush FP32: {ratio}x");
+    }
+}

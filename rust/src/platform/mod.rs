@@ -1,0 +1,12 @@
+//! S9/S10 — platform models standing in for the paper's hardware testbeds.
+//!
+//! - [`edison`] — Intel Edison (Silvermont) analytic cost model: SIMD
+//!   throughput + memory bandwidth per numeric width. Regenerates the Fig. 8
+//!   speedup shape for the *full* AlexNet / VGG-16 (which we cannot run with
+//!   real weights) alongside the measured mini-model numbers.
+//! - [`fpga`] — Xilinx Virtex-6 matrix-multiplier substrate: structural
+//!   LUT/FF resource estimation, timing and power models (Tables 4–5), and a
+//!   cycle-level functional simulator of the 4x4 CU array with ISC/PSC
+//!   operand streaming that proves the datapath computes exact products.
+pub mod edison;
+pub mod fpga;

@@ -1,0 +1,207 @@
+//! Streaming range calibration.
+//!
+//! The paper quantizes inputs at runtime by computing each region's min/max
+//! on the fly (§V.B). On devices where even that pass is too expensive, a
+//! common deployment alternative is *calibrated* quantization: observe
+//! ranges over a calibration stream and freeze them. This module provides
+//! the observer (exact and EMA-smoothed) plus a frozen-range quantizer, and
+//! the tests quantify the accuracy cost vs true runtime min/max — an
+//! ablation of the paper's design choice to pay the runtime pass.
+
+use crate::quant::region::RegionSpec;
+use crate::quant::scheme::{round_half_even, QuantizedMatrix};
+use crate::tensor::Tensor;
+
+/// Observes per-region ranges over a stream of `(rows, K)` batches.
+/// Regions follow the same geometry as [`crate::quant::quantize_matrix`],
+/// but ranges are tracked per *column region* (shared across rows), since a
+/// frozen calibration cannot depend on the individual row.
+#[derive(Debug, Clone)]
+pub struct RangeObserver {
+    pub k: usize,
+    pub region: RegionSpec,
+    /// EMA momentum in [0, 1): 0 = exact running min/max.
+    pub momentum: f32,
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+    observed: usize,
+}
+
+impl RangeObserver {
+    pub fn new(k: usize, region: RegionSpec, momentum: f32) -> RangeObserver {
+        assert!((0.0..1.0).contains(&momentum));
+        let rpr = region.regions_per_row(k);
+        RangeObserver {
+            k,
+            region,
+            momentum,
+            mins: vec![f32::INFINITY; rpr],
+            maxs: vec![f32::NEG_INFINITY; rpr],
+            observed: 0,
+        }
+    }
+
+    /// Feed one batch.
+    pub fn observe(&mut self, x: &Tensor) {
+        assert_eq!(x.dim(1), self.k);
+        let g = self.region.group_len(self.k);
+        let rpr = self.region.regions_per_row(self.k);
+        for row in 0..x.dim(0) {
+            let xr = x.row(row);
+            for r in 0..rpr {
+                let seg = &xr[r * g..((r + 1) * g).min(self.k)];
+                let mn = seg.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+                let mx = seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                if self.observed == 0 || self.momentum == 0.0 {
+                    self.mins[r] = self.mins[r].min(mn);
+                    self.maxs[r] = self.maxs[r].max(mx);
+                } else {
+                    let a = self.momentum;
+                    self.mins[r] = a * self.mins[r] + (1.0 - a) * mn;
+                    self.maxs[r] = a * self.maxs[r] + (1.0 - a) * mx;
+                }
+            }
+        }
+        self.observed += x.dim(0);
+    }
+
+    /// Freeze into a calibrated quantizer.
+    pub fn freeze(&self, bits: u8) -> CalibratedQuantizer {
+        assert!(self.observed > 0, "freeze() before any observation");
+        CalibratedQuantizer {
+            k: self.k,
+            region: self.region,
+            bits,
+            mins: self.mins.clone(),
+            maxs: self.maxs.clone(),
+        }
+    }
+}
+
+/// Quantizes with frozen per-region ranges (no runtime min/max pass).
+/// Out-of-range values saturate to the code range.
+#[derive(Debug, Clone)]
+pub struct CalibratedQuantizer {
+    pub k: usize,
+    pub region: RegionSpec,
+    pub bits: u8,
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+}
+
+impl CalibratedQuantizer {
+    pub fn quantize(&self, x: &Tensor) -> QuantizedMatrix {
+        assert_eq!(x.dim(1), self.k);
+        let rows = x.dim(0);
+        let g = self.region.group_len(self.k);
+        let rpr = self.region.regions_per_row(self.k);
+        let levels = ((1u32 << self.bits) - 1) as f32;
+        let mut codes = vec![0u8; rows * self.k];
+        let mut scales = vec![0.0f32; rows * rpr];
+        let mut mins = vec![0.0f32; rows * rpr];
+        let mut code_sums = vec![0.0f32; rows * rpr];
+        for row in 0..rows {
+            let xr = x.row(row);
+            for r in 0..rpr {
+                let span = self.maxs[r] - self.mins[r];
+                let s = if span > 0.0 { span / levels } else { 1.0 };
+                scales[row * rpr + r] = s;
+                mins[row * rpr + r] = self.mins[r];
+                let start = r * g;
+                let end = ((r + 1) * g).min(self.k);
+                let mut sum = 0u32;
+                for j in start..end {
+                    let q = round_half_even((xr[j] - self.mins[r]) / s).clamp(0.0, levels) as u8;
+                    codes[row * self.k + j] = q;
+                    sum += q as u32;
+                }
+                code_sums[row * rpr + r] = sum as f32;
+            }
+        }
+        QuantizedMatrix {
+            rows,
+            k: self.k,
+            bits: self.bits,
+            region: self.region,
+            codes,
+            scales,
+            mins,
+            code_sums,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn batch(rng: &mut Rng, rows: usize, k: usize) -> Tensor {
+        Tensor::new(&[rows, k], rng.normal_vec(rows * k))
+    }
+
+    #[test]
+    fn exact_observer_covers_stream() {
+        let mut rng = Rng::new(1);
+        let mut obs = RangeObserver::new(16, RegionSpec::Size(4), 0.0);
+        let batches: Vec<Tensor> = (0..5).map(|_| batch(&mut rng, 8, 16)).collect();
+        for b in &batches {
+            obs.observe(b);
+        }
+        let q = obs.freeze(8);
+        // Every element quantizes without saturating the code range badly:
+        // reconstruct within one step of the original.
+        for b in &batches {
+            let qm = q.quantize(b);
+            let dq = qm.dequantize();
+            let max_step = qm.scales.iter().cloned().fold(0.0f32, f32::max);
+            assert!(dq.max_abs_diff(b) <= max_step / 2.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn unseen_outliers_saturate() {
+        let mut obs = RangeObserver::new(4, RegionSpec::Size(4), 0.0);
+        obs.observe(&Tensor::new(&[1, 4], vec![0.0, 0.5, 1.0, 0.2]));
+        let q = obs.freeze(8);
+        let wild = Tensor::new(&[1, 4], vec![-5.0, 0.5, 10.0, 0.2]);
+        let qm = q.quantize(&wild);
+        assert_eq!(qm.codes[0], 0, "below-range saturates to code 0");
+        assert_eq!(qm.codes[2], 255, "above-range saturates to max code");
+    }
+
+    #[test]
+    fn ema_tracks_shifting_range() {
+        let mut obs = RangeObserver::new(4, RegionSpec::PerRow, 0.9);
+        for i in 0..200 {
+            let v = 1.0 + i as f32 * 0.01;
+            obs.observe(&Tensor::new(&[1, 4], vec![-v, 0.0, v, 0.1]));
+        }
+        let q = obs.freeze(8);
+        // EMA should have converged near the final range (~3.0 wide), not
+        // stuck at the first batch (~2.0 wide).
+        let qm = q.quantize(&Tensor::new(&[1, 4], vec![-2.9, 0.0, 2.9, 0.0]));
+        let dq = qm.dequantize();
+        assert!(dq.max_abs_diff(&Tensor::new(&[1, 4], vec![-2.9, 0.0, 2.9, 0.0])) < 0.2);
+    }
+
+    #[test]
+    fn calibrated_worse_than_runtime_minmax() {
+        // The ablation: frozen shared ranges cannot beat the paper's
+        // per-row runtime pass (which adapts to each patch).
+        let mut rng = Rng::new(3);
+        let train: Vec<Tensor> = (0..4).map(|_| batch(&mut rng, 16, 32)).collect();
+        let mut obs = RangeObserver::new(32, RegionSpec::Size(8), 0.0);
+        for b in &train {
+            obs.observe(b);
+        }
+        let calib = obs.freeze(2);
+        let test = batch(&mut rng, 32, 32);
+        let e_calib = calib.quantize(&test).dequantize().max_abs_diff(&test);
+        let e_runtime = crate::quant::fake_quant(&test, 2, RegionSpec::Size(8)).max_abs_diff(&test);
+        assert!(
+            e_runtime <= e_calib,
+            "runtime min/max ({e_runtime}) should beat frozen calibration ({e_calib})"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Dense bit-packing of quantization codes (1..8 bits per code).
+//!
+//! The paper's memory/bandwidth saving comes from shipping n-bit codes, not
+//! bytes. Codes are packed little-endian into a contiguous `u64` stream —
+//! code i occupies bits [i*n, (i+1)*n) of the stream. 6-bit codes straddle
+//! word boundaries; the codec handles splits transparently. The packed GEMM
+//! (`fixedpoint::gemm_packed`) reads this format directly.
+
+/// Packed code stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packed {
+    pub bits: u8,
+    pub len: usize,
+    pub words: Vec<u64>,
+}
+
+/// Pack `codes` (each < 2^bits) into a dense bitstream.
+pub fn pack(codes: &[u8], bits: u8) -> Packed {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u8;
+    let total_bits = codes.len() * bits as usize;
+    let mut words = vec![0u64; total_bits.div_ceil(64)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c & !mask == 0, "code {c} exceeds {bits} bits");
+        let bit = i * bits as usize;
+        let word = bit / 64;
+        let off = bit % 64;
+        words[word] |= (c as u64) << off;
+        if off + bits as usize > 64 {
+            words[word + 1] |= (c as u64) >> (64 - off);
+        }
+    }
+    Packed { bits, len: codes.len(), words }
+}
+
+/// Unpack back to one-code-per-byte.
+pub fn unpack(p: &Packed) -> Vec<u8> {
+    let bits = p.bits as usize;
+    let mask = ((1u16 << bits) - 1) as u64;
+    let mut out = vec![0u8; p.len];
+    for (i, o) in out.iter_mut().enumerate() {
+        let bit = i * bits;
+        let word = bit / 64;
+        let off = bit % 64;
+        let mut v = p.words[word] >> off;
+        if off + bits > 64 {
+            v |= p.words[word + 1] << (64 - off);
+        }
+        *o = (v & mask) as u8;
+    }
+    out
+}
+
+impl Packed {
+    /// Read code `i` without unpacking the stream.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        let bits = self.bits as usize;
+        let mask = ((1u16 << bits) - 1) as u64;
+        let bit = i * bits;
+        let word = bit / 64;
+        let off = bit % 64;
+        let mut v = self.words[word] >> off;
+        if off + bits > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        (v & mask) as u8
+    }
+
+    /// Storage bytes of the packed stream.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        prop::check("codec-roundtrip", 0x9ACC, |rng, _| {
+            let bits = prop::gen_bits(rng) as u8;
+            let n = rng.index(0, 300);
+            let mask = ((1u16 << bits) - 1) as u8;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.below(256) as u8) & mask).collect();
+            let p = pack(&codes, bits);
+            assert_eq!(unpack(&p), codes);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(p.get(i), c, "random access mismatch at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn word_straddle_6bit() {
+        // 6-bit codes: code 10 starts at bit 60 and straddles the word edge.
+        let codes: Vec<u8> = (0..32).map(|i| (i * 7 % 64) as u8).collect();
+        let p = pack(&codes, 6);
+        assert_eq!(unpack(&p), codes);
+    }
+
+    #[test]
+    fn density() {
+        let codes = vec![1u8; 64];
+        assert_eq!(pack(&codes, 1).words.len(), 1); // 64 bits exactly
+        assert_eq!(pack(&codes, 2).words.len(), 2);
+        assert_eq!(pack(&codes, 8).words.len(), 8);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let p = pack(&[], 4);
+        assert_eq!(p.words.len(), 0);
+        assert_eq!(unpack(&p), Vec::<u8>::new());
+    }
+}

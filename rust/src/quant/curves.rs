@@ -1,0 +1,129 @@
+//! Paper Fig. 2 — fixed-point quantization transfer curves and error curves.
+//!
+//! Generates the staircase `Q^-1(Q(x))` transfer function and the sawtooth
+//! error `x - Q^-1(Q(x))` over a swept input range, for any bit width —
+//! the illustration behind eq. (3)-(5) — plus the derived summary the rest
+//! of the paper builds on: max error == step/2 == span / (2 (2^n - 1)).
+
+/// One sampled point of the transfer/error curves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub x: f32,
+    /// Quantize-dequantize reconstruction of x.
+    pub q: f32,
+    /// Error x - q.
+    pub err: f32,
+}
+
+/// Sample the quantization curves for inputs in [lo, hi] with `n` points,
+/// quantized to `bits` over the same [lo, hi] range (the paper normalizes
+/// the region's [x_min, x_max] to the full code range).
+pub fn quant_curve(lo: f32, hi: f32, bits: u8, n: usize) -> Vec<CurvePoint> {
+    assert!(hi > lo && n >= 2 && (1..=16).contains(&bits));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let s = (hi - lo) / levels;
+    (0..n)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f32 / (n - 1) as f32;
+            let code = ((x - lo) / s).round_ties_even().clamp(0.0, levels);
+            let q = code * s + lo;
+            CurvePoint { x, q, err: x - q }
+        })
+        .collect()
+}
+
+/// The step size eq. (5): s = (max - min) / (2^n - 1).
+pub fn step(lo: f32, hi: f32, bits: u8) -> f32 {
+    (hi - lo) / ((1u32 << bits) - 1) as f32
+}
+
+/// Render the curves as a fixed-width ASCII table (the bench prints this).
+pub fn render_curve_table(bits_list: &[u8], n: usize) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "Fig. 2 — quantization transfer + error curves over [-1, 1]").unwrap();
+    writeln!(out, "{:>8} {}", "x", bits_list.iter().map(|b| format!("{:>10} {:>10}", format!("Q{b}(x)"), format!("err{b}"))).collect::<Vec<_>>().join(" ")).unwrap();
+    for i in 0..n {
+        let x = -1.0 + 2.0 * i as f32 / (n - 1) as f32;
+        write!(out, "{x:>8.3}").unwrap();
+        for &b in bits_list {
+            let p = quant_curve(-1.0, 1.0, b, n)[i];
+            write!(out, " {:>10.4} {:>10.4}", p.q, p.err).unwrap();
+        }
+        out.push('\n');
+    }
+    for &b in bits_list {
+        writeln!(
+            out,
+            "bits={b}: step={:.5}  max|err|={:.5}  (= step/2: {})",
+            step(-1.0, 1.0, b),
+            quant_curve(-1.0, 1.0, b, 2001)
+                .iter()
+                .map(|p| p.err.abs())
+                .fold(0.0f32, f32::max),
+            step(-1.0, 1.0, b) / 2.0
+        )
+        .unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staircase_is_monotone_and_bounded() {
+        for bits in [1u8, 2, 4, 8] {
+            let pts = quant_curve(-1.0, 1.0, bits, 501);
+            let s = step(-1.0, 1.0, bits);
+            for w in pts.windows(2) {
+                assert!(w[1].q >= w[0].q, "staircase must be monotone");
+            }
+            for p in &pts {
+                assert!(
+                    p.err.abs() <= s / 2.0 + 1e-6,
+                    "bits={bits}: err {} > step/2 {}",
+                    p.err,
+                    s / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn endpoints_exact() {
+        // The code range is anchored at x_min and x_max: both reconstruct
+        // exactly (Fig. 2's curves pass through the corners).
+        for bits in [2u8, 4, 8] {
+            let pts = quant_curve(-1.0, 1.0, bits, 101);
+            assert_eq!(pts[0].q, -1.0);
+            assert_eq!(pts.last().unwrap().q, 1.0);
+        }
+    }
+
+    #[test]
+    fn error_sawtooth_period_is_step() {
+        // Adjacent error-zero crossings are one step apart.
+        let bits = 3u8;
+        let s = step(0.0, 7.0, bits); // = 1.0 exactly
+        assert_eq!(s, 1.0);
+        let pts = quant_curve(0.0, 7.0, bits, 701);
+        let zeros: Vec<f32> = pts.iter().filter(|p| p.err.abs() < 1e-3).map(|p| p.x).collect();
+        // Zeros at 0, 1, 2, ..., 7.
+        assert!(zeros.iter().any(|&z| (z - 3.0).abs() < 0.02));
+        assert!(zeros.iter().any(|&z| (z - 4.0).abs() < 0.02));
+    }
+
+    #[test]
+    fn more_bits_halve_the_step() {
+        assert!((step(-1.0, 1.0, 4) / step(-1.0, 1.0, 5) - 2.0).abs() < 0.07);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = render_curve_table(&[2, 4], 9);
+        assert!(t.contains("Fig. 2"));
+        assert!(t.contains("bits=2"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Quantization-error analysis (paper §IV.A, Fig. 2).
+//!
+//! Quantifies how the error shrinks as regions shrink — the mechanism behind
+//! every accuracy result in §VI — and feeds the ablation bench.
+
+use crate::quant::{quantize_matrix, RegionSpec};
+use crate::tensor::Tensor;
+
+/// Error statistics of a quantize-dequantize round trip.
+#[derive(Debug, Clone)]
+pub struct QuantErrorStats {
+    pub bits: u8,
+    pub region: RegionSpec,
+    /// Largest |x - Q^-1(Q(x))|.
+    pub max_abs: f32,
+    /// Root mean squared error.
+    pub rmse: f32,
+    /// Largest quantization step across regions (error bound = step/2).
+    pub max_step: f32,
+    /// Signal-to-quantization-noise ratio in dB (10 log10 E[x^2]/E[e^2]).
+    pub sqnr_db: f32,
+}
+
+impl QuantErrorStats {
+    pub fn measure(x: &Tensor, bits: u8, region: RegionSpec) -> QuantErrorStats {
+        let q = quantize_matrix(x, bits, region);
+        let dq = q.dequantize();
+        let n = x.len() as f64;
+        let mut max_abs = 0.0f32;
+        let mut se = 0.0f64;
+        let mut sx = 0.0f64;
+        for (a, b) in x.data().iter().zip(dq.data()) {
+            let e = a - b;
+            max_abs = max_abs.max(e.abs());
+            se += (e * e) as f64;
+            sx += (a * a) as f64;
+        }
+        let rmse = (se / n).sqrt() as f32;
+        let sqnr_db = if se > 0.0 { (10.0 * (sx / se).log10()) as f32 } else { f32::INFINITY };
+        let max_step = q.scales.iter().cloned().fold(0.0f32, f32::max);
+        QuantErrorStats { bits, region, max_abs, rmse, max_step, sqnr_db }
+    }
+
+    /// The theoretical per-element bound: half the largest step.
+    pub fn bound(&self) -> f32 {
+        self.max_step / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian(rows: usize, k: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::new(&[rows, k], rng.normal_vec(rows * k))
+    }
+
+    #[test]
+    fn error_within_bound() {
+        let x = gaussian(16, 64, 1);
+        for bits in [2u8, 4, 8] {
+            let s = QuantErrorStats::measure(&x, bits, RegionSpec::Size(8));
+            assert!(s.max_abs <= s.bound() * 1.0001, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let x = gaussian(16, 64, 2);
+        let e2 = QuantErrorStats::measure(&x, 2, RegionSpec::PerRow).rmse;
+        let e4 = QuantErrorStats::measure(&x, 4, RegionSpec::PerRow).rmse;
+        let e8 = QuantErrorStats::measure(&x, 8, RegionSpec::PerRow).rmse;
+        assert!(e8 < e4 && e4 < e2, "rmse should fall with bits: {e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn smaller_regions_less_error() {
+        // Fig. 10's mechanism: shrinking g shrinks the realized error.
+        let x = gaussian(8, 128, 3);
+        let bits = 2;
+        let e_dq = QuantErrorStats::measure(&x, bits, RegionSpec::PerTensor).rmse;
+        let e_row = QuantErrorStats::measure(&x, bits, RegionSpec::PerRow).rmse;
+        let e_16 = QuantErrorStats::measure(&x, bits, RegionSpec::Size(16)).rmse;
+        let e_4 = QuantErrorStats::measure(&x, bits, RegionSpec::Size(4)).rmse;
+        assert!(e_row <= e_dq + 1e-7);
+        assert!(e_16 <= e_row + 1e-7);
+        assert!(e_4 <= e_16 + 1e-7);
+    }
+
+    #[test]
+    fn sqnr_improves_6db_per_bit_roughly() {
+        // Classic result: +1 bit ~ +6 dB SQNR on smooth data.
+        let x = gaussian(32, 256, 4);
+        let s4 = QuantErrorStats::measure(&x, 4, RegionSpec::PerRow).sqnr_db;
+        let s5 = QuantErrorStats::measure(&x, 5, RegionSpec::PerRow).sqnr_db;
+        let gain = s5 - s4;
+        assert!((3.0..9.0).contains(&gain), "per-bit SQNR gain {gain} dB");
+    }
+}

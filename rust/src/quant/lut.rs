@@ -1,0 +1,125 @@
+//! §V — look-up-table scheme: replace multiply-accumulate with table-indexed
+//! adds when activation precision is extremely low (<= 4 bits; the paper
+//! demonstrates 2 bits).
+//!
+//! Two equivalent formulations are provided, both exactly equal to the
+//! integer dot product `sum_k qa_k * qw_k`:
+//!
+//! 1. **Code bucketing** ([`bucketed_dot`]): one pass over the region adds
+//!    each weight code into the bucket of its paired activation code
+//!    (adds/selects only), then `sum_c c * B_c` — `2^bits - 2` multiplies
+//!    per region instead of K (c = 0 contributes nothing, c = 1 is free).
+//!    This is what Figure 5's datapath computes.
+//! 2. **Weight tables** ([`WeightLut`]): offline, per weight position, store
+//!    `w * c` for every code c (the "indexed values ... stored in one
+//!    look-up table"); runtime indexes by the activation code and adds.
+//!    Multiplies happen once at table-build time and amortize across every
+//!    reuse of the weights (conv kernels are reused per output position).
+//!
+//! Op-count accounting that regenerates Table 3 lives in `nn::opcount` and
+//! references the constants of formulation 1.
+
+/// Exact integer dot product via code bucketing.
+///
+/// `qa` are activation codes in [0, 2^bits); `qw` are weight codes (any i32
+/// range — typically dequant-pending 8-bit codes).
+pub fn bucketed_dot(qa: &[u8], qw: &[i32], bits: u8) -> i64 {
+    assert_eq!(qa.len(), qw.len());
+    assert!((1..=4).contains(&bits), "LUT scheme needs <= 4-bit activations");
+    let levels = 1usize << bits;
+    let mut buckets = [0i64; 16];
+    for (&a, &w) in qa.iter().zip(qw) {
+        buckets[a as usize] += w as i64; // add-only inner loop
+    }
+    let mut acc = 0i64;
+    for (c, &b) in buckets.iter().enumerate().take(levels).skip(1) {
+        acc += (c as i64) * b; // 2^bits - 1 multiplies (c=1 free in hardware)
+    }
+    acc
+}
+
+/// Offline weight table: `table[k][c] = qw[k] * c` for c in [0, 2^bits).
+/// Row-major `(k, levels)`; built once per weight region, reused across all
+/// activations that contract with it.
+#[derive(Debug, Clone)]
+pub struct WeightLut {
+    pub bits: u8,
+    pub k: usize,
+    table: Vec<i32>,
+}
+
+impl WeightLut {
+    pub fn build(qw: &[i32], bits: u8) -> WeightLut {
+        assert!((1..=4).contains(&bits));
+        let levels = 1usize << bits;
+        let mut table = Vec::with_capacity(qw.len() * levels);
+        for &w in qw {
+            for c in 0..levels {
+                table.push(w * c as i32); // the only multiplies in the scheme
+            }
+        }
+        WeightLut { bits, k: qw.len(), table }
+    }
+
+    /// Runtime dot product: pure table lookups + adds, zero multiplies.
+    pub fn dot(&self, qa: &[u8]) -> i64 {
+        assert_eq!(qa.len(), self.k);
+        let levels = 1usize << self.bits;
+        let mut acc = 0i64;
+        for (k, &a) in qa.iter().enumerate() {
+            acc += self.table[k * levels + a as usize] as i64;
+        }
+        acc
+    }
+
+    /// Table footprint in bytes (paper: "the table size is relatively small
+    /// if the quantization precision is low enough").
+    pub fn bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<i32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn ref_dot(qa: &[u8], qw: &[i32]) -> i64 {
+        qa.iter().zip(qw).map(|(&a, &w)| a as i64 * w as i64).sum()
+    }
+
+    #[test]
+    fn bucketed_equals_reference() {
+        prop::check("lut-bucketed-exact", 0x1007, |rng, _| {
+            let bits = [1u8, 2, 3, 4][rng.below(4) as usize];
+            let n = rng.index(0, 400);
+            let qa: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let qw: Vec<i32> = (0..n).map(|_| rng.below(256) as i32 - 128).collect();
+            assert_eq!(bucketed_dot(&qa, &qw, bits), ref_dot(&qa, &qw));
+        });
+    }
+
+    #[test]
+    fn weight_table_equals_reference() {
+        prop::check("lut-table-exact", 0x1008, |rng, _| {
+            let bits = [1u8, 2, 4][rng.below(3) as usize];
+            let n = rng.index(1, 200);
+            let qw: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+            let lut = WeightLut::build(&qw, bits);
+            let qa: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            assert_eq!(lut.dot(&qa), ref_dot(&qa, &qw));
+        });
+    }
+
+    #[test]
+    fn table_size_scales_with_bits() {
+        let qw = vec![1i32; 100];
+        assert_eq!(WeightLut::build(&qw, 2).bytes(), 100 * 4 * 4);
+        assert_eq!(WeightLut::build(&qw, 4).bytes(), 100 * 16 * 4);
+    }
+
+    #[test]
+    fn empty_dot() {
+        assert_eq!(bucketed_dot(&[], &[], 2), 0);
+    }
+}

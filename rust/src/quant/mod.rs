@@ -1,0 +1,28 @@
+//! S1/S2 — the paper's contribution: local-based quantization (LQ).
+//!
+//! A 2-D operand `(rows, K)` is quantized along K in *regions* of `g`
+//! consecutive elements; each region gets its own step
+//! `s_k = (max_k - min_k)/(2^n - 1)` (paper eq. 5/7). Dynamic fixed point
+//! (DQ, the prior scheme of §IV.B) is the degenerate case of one region
+//! spanning the whole tensor. Semantics mirror `python/compile/quant.py`
+//! element-for-element (including round-half-to-even, numpy's rounding).
+//!
+//! - [`scheme`] — quantize / dequantize / fake-quant, [`QuantizedMatrix`].
+//! - [`region`] — region geometry ([`RegionSpec`]).
+//! - [`codec`] — dense bit-packing of codes (1..8 bits) for storage and the
+//!   packed GEMMs; reproduces the paper's memory-footprint savings.
+//! - [`lut`] — §V look-up-table scheme: code-bucketed dot products that
+//!   replace multiply-accumulate with table-indexed adds.
+//! - [`error`] — quantization-error analysis (bound check, RMSE, SQNR).
+pub mod calib;
+pub mod codec;
+pub mod curves;
+pub mod error;
+pub mod lut;
+pub mod region;
+pub mod scheme;
+pub mod serialize;
+
+pub use error::QuantErrorStats;
+pub use region::RegionSpec;
+pub use scheme::{fake_quant, quantize_matrix, QuantizedMatrix};

@@ -1,0 +1,89 @@
+//! Region geometry for local quantization.
+
+/// How a `(rows, K)` operand is split into quantization regions along K.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionSpec {
+    /// One region spanning the entire tensor — dynamic fixed point (DQ),
+    /// the prior per-layer scheme of paper §IV.B.
+    PerTensor,
+    /// One region per row spanning all of K (per-kernel / per-patch scale —
+    /// the paper's LQ default, where the region is the conv kernel size).
+    PerRow,
+    /// Regions of `g` consecutive elements along K within each row
+    /// (§VI.F "smaller local quantization region").
+    Size(usize),
+}
+
+impl RegionSpec {
+    /// Effective region length for reduction dimension `k`.
+    pub fn group_len(&self, k: usize) -> usize {
+        match *self {
+            RegionSpec::PerTensor | RegionSpec::PerRow => k,
+            RegionSpec::Size(g) => g.clamp(1, k.max(1)),
+        }
+    }
+
+    /// Number of regions per row for reduction dimension `k`.
+    pub fn regions_per_row(&self, k: usize) -> usize {
+        let g = self.group_len(k);
+        k.div_ceil(g)
+    }
+
+    /// True if scales are shared across rows (DQ).
+    pub fn per_tensor(&self) -> bool {
+        matches!(self, RegionSpec::PerTensor)
+    }
+
+    /// Length of region `r` (the tail region may be short).
+    pub fn region_len(&self, k: usize, r: usize) -> usize {
+        let g = self.group_len(k);
+        (k - r * g).min(g)
+    }
+
+    /// Parse "dq", "row", or a number.
+    pub fn parse(s: &str) -> Option<RegionSpec> {
+        match s {
+            "dq" | "tensor" => Some(RegionSpec::PerTensor),
+            "row" | "kernel" | "0" => Some(RegionSpec::PerRow),
+            _ => s.parse::<usize>().ok().filter(|&g| g > 0).map(RegionSpec::Size),
+        }
+    }
+}
+
+impl std::fmt::Display for RegionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegionSpec::PerTensor => write!(f, "dq"),
+            RegionSpec::PerRow => write!(f, "kernel"),
+            RegionSpec::Size(g) => write!(f, "{g}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_len_clamps() {
+        assert_eq!(RegionSpec::Size(1000).group_len(75), 75);
+        assert_eq!(RegionSpec::Size(16).group_len(75), 16);
+        assert_eq!(RegionSpec::PerRow.group_len(75), 75);
+    }
+
+    #[test]
+    fn region_counts() {
+        assert_eq!(RegionSpec::Size(16).regions_per_row(75), 5);
+        assert_eq!(RegionSpec::Size(16).region_len(75, 4), 11); // tail region
+        assert_eq!(RegionSpec::PerRow.regions_per_row(75), 1);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(RegionSpec::parse("dq"), Some(RegionSpec::PerTensor));
+        assert_eq!(RegionSpec::parse("kernel"), Some(RegionSpec::PerRow));
+        assert_eq!(RegionSpec::parse("32"), Some(RegionSpec::Size(32)));
+        assert_eq!(RegionSpec::parse("x"), None);
+        assert_eq!(RegionSpec::parse("0"), Some(RegionSpec::PerRow));
+    }
+}

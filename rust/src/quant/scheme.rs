@@ -1,0 +1,279 @@
+//! Quantize / dequantize with local regions (paper eq. 3–7).
+//!
+//! Mirrors `python/compile/quant.py` exactly, including numpy's
+//! round-half-to-even, so codes computed here match the build-time python
+//! side bit-for-bit (pinned by `rust/tests/quant_parity.rs`).
+
+use crate::quant::region::RegionSpec;
+use crate::tensor::Tensor;
+
+/// numpy-compatible rounding: round half to even (IEEE roundTiesToEven —
+/// a single `roundps` on x86, and exactly what `jnp.round` does).
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// A quantized `(rows, K)` operand: integer codes plus per-region affine
+/// parameters. Codes are stored one-per-byte here (`u8`, bits <= 8); the
+/// packed form for storage/footprint accounting lives in [`crate::quant::codec`].
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub k: usize,
+    pub bits: u8,
+    pub region: RegionSpec,
+    /// rows * k codes in [0, 2^bits - 1], row-major.
+    pub codes: Vec<u8>,
+    /// Per-region scale s_k. Layout: rows * regions_per_row (PerTensor stores
+    /// the single shared value replicated per row for uniform indexing).
+    pub scales: Vec<f32>,
+    /// Per-region minimum x_min.
+    pub mins: Vec<f32>,
+    /// Precomputed per-region code sums (sum of codes in the region) —
+    /// the `S_qw` term of eq. 7, built offline for weights.
+    pub code_sums: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    pub fn regions_per_row(&self) -> usize {
+        self.region.regions_per_row(self.k)
+    }
+
+    pub fn group_len(&self) -> usize {
+        self.region.group_len(self.k)
+    }
+
+    #[inline]
+    pub fn scale(&self, row: usize, r: usize) -> f32 {
+        self.scales[row * self.regions_per_row() + r]
+    }
+
+    #[inline]
+    pub fn min(&self, row: usize, r: usize) -> f32 {
+        self.mins[row * self.regions_per_row() + r]
+    }
+
+    /// Reconstruct the f32 tensor (error <= s_k/2 per element).
+    pub fn dequantize(&self) -> Tensor {
+        let g = self.group_len();
+        let rpr = self.regions_per_row();
+        let mut out = vec![0.0f32; self.rows * self.k];
+        for row in 0..self.rows {
+            for r in 0..rpr {
+                let s = self.scales[row * rpr + r];
+                let m = self.mins[row * rpr + r];
+                let start = r * g;
+                let end = ((r + 1) * g).min(self.k);
+                for j in start..end {
+                    out[row * self.k + j] = self.codes[row * self.k + j] as f32 * s + m;
+                }
+            }
+        }
+        Tensor::new(&[self.rows, self.k], out)
+    }
+
+    /// Bytes needed for the packed representation (codes bit-packed +
+    /// f32 scale/min pairs per region) — the paper's memory-saving claim.
+    pub fn packed_bytes(&self) -> usize {
+        let code_bits = self.rows * self.k * self.bits as usize;
+        let side = if self.region.per_tensor() { 1 } else { self.rows * self.regions_per_row() };
+        code_bits.div_ceil(8) + side * 8
+    }
+}
+
+/// Quantize a rank-2 tensor along its last axis with `region` granularity.
+pub fn quantize_matrix(x: &Tensor, bits: u8, region: RegionSpec) -> QuantizedMatrix {
+    assert!(x.rank() == 2, "quantize_matrix needs rank-2, got {:?}", x.shape());
+    assert!((1..=8).contains(&bits), "bits must be 1..=8, got {bits}");
+    let rows = x.dim(0);
+    let k = x.dim(1);
+    let levels = ((1u32 << bits) - 1) as f32;
+
+    // PerTensor (DQ): single min/max over everything, then same code path.
+    let (global_min, global_max) = if region.per_tensor() {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in x.data() {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        (mn, mx)
+    } else {
+        (0.0, 0.0)
+    };
+
+    let g = region.group_len(k);
+    let rpr = region.regions_per_row(k);
+    let mut codes = vec![0u8; rows * k];
+    let mut scales = vec![0.0f32; rows * rpr];
+    let mut mins = vec![0.0f32; rows * rpr];
+    let mut code_sums = vec![0.0f32; rows * rpr];
+
+    for row in 0..rows {
+        let xr = x.row(row);
+        let crow = &mut codes[row * k..(row + 1) * k];
+        for r in 0..rpr {
+            let start = r * g;
+            let end = ((r + 1) * g).min(k);
+            let seg = &xr[start..end];
+            // Pass 1: region min/max (two separate folds — each vectorizes
+            // to vminps/vmaxps reductions; a tuple fold would not).
+            let (mn, mx) = if region.per_tensor() {
+                (global_min, global_max)
+            } else {
+                (
+                    seg.iter().fold(f32::INFINITY, |m, &v| m.min(v)),
+                    seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)),
+                )
+            };
+            let span = mx - mn;
+            let s = if span > 0.0 { span / levels } else { 1.0 };
+            let idx = row * rpr + r;
+            scales[idx] = s;
+            mins[idx] = mn;
+            // Pass 2: codes (roundps + clamp, vectorizes to u8 stores).
+            // NB: true division, not reciprocal-multiply — bit-exact parity
+            // with the python reference is pinned by rust/tests/quant_parity.
+            for (c, &v) in crow[start..end].iter_mut().zip(seg) {
+                *c = round_half_even((v - mn) / s).clamp(0.0, levels) as u8;
+            }
+            // Pass 3: integer code sum (u8 -> u32 reduction, vectorizes).
+            code_sums[idx] = crow[start..end].iter().map(|&c| c as u32).sum::<u32>() as f32;
+        }
+    }
+    QuantizedMatrix { rows, k, bits, region, codes, scales, mins, code_sums }
+}
+
+/// Quantize-dequantize round trip — the value the fixed-point pipeline sees.
+pub fn fake_quant(x: &Tensor, bits: u8, region: RegionSpec) -> Tensor {
+    quantize_matrix(x, bits, region).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // numpy: round(0.5)=0, round(1.5)=2, round(2.5)=2, round(-0.5)=-0
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.4), 1.0);
+        assert_eq!(round_half_even(1.6), 2.0);
+    }
+
+    #[test]
+    fn constant_region_is_exact() {
+        let x = Tensor::filled(&[2, 8], 3.25);
+        let fq = fake_quant(&x, 2, RegionSpec::Size(4));
+        assert_eq!(fq.max_abs_diff(&x), 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        // |x - Q^-1(Q(x))| <= s/2 for every element, every bits/region combo.
+        prop::check("quant-roundtrip-bound", 0xA11CE, |rng, _| {
+            let (rows, k) = prop::gen_dims(rng, 24);
+            let x = Tensor::new(&[rows, k], prop::gen_values(rng, rows * k));
+            let bits = prop::gen_bits(rng) as u8;
+            let region = match rng.below(3) {
+                0 => RegionSpec::PerTensor,
+                1 => RegionSpec::PerRow,
+                _ => RegionSpec::Size(rng.index(1, k + 1)),
+            };
+            let q = quantize_matrix(&x, bits, region);
+            let dq = q.dequantize();
+            let g = q.group_len();
+            let rpr = q.regions_per_row();
+            for row in 0..rows {
+                for j in 0..k {
+                    let s = q.scales[row * rpr + j / g];
+                    let err = (x.at2(row, j) - dq.at2(row, j)).abs();
+                    assert!(
+                        err <= s / 2.0 + 1e-5 * s.max(1.0),
+                        "err {err} > s/2 ({s}) at ({row},{j}) bits={bits} region={region}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn lq_never_worse_than_dq() {
+        // Smaller regions => smaller (or equal) max error. The paper's core claim.
+        prop::check("lq-beats-dq", 0xBEEF, |rng, _| {
+            let (rows, k) = prop::gen_dims(rng, 24);
+            let x = Tensor::new(&[rows, k], prop::gen_values(rng, rows * k));
+            let bits = prop::gen_bits(rng) as u8;
+            // Per-element *effective* error bound: s/2 for live regions, 0
+            // for flat regions (the sentinel scale 1.0 reconstructs exactly).
+            let bound = |q: &QuantizedMatrix, x: &Tensor, row: usize, j: usize| -> f32 {
+                let g = q.group_len();
+                let rpr = q.regions_per_row();
+                let r = j / g;
+                let start = r * g;
+                let end = ((r + 1) * g).min(q.k);
+                let xr = x.row(row);
+                let span = xr[start..end].iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+                    - xr[start..end].iter().cloned().fold(f32::INFINITY, f32::min);
+                if span > 0.0 {
+                    q.scales[row * rpr + r] / 2.0
+                } else {
+                    0.0
+                }
+            };
+            let dq_q = quantize_matrix(&x, bits, RegionSpec::PerTensor);
+            let lq_q = quantize_matrix(&x, bits, RegionSpec::Size(4));
+            let lq_fq = lq_q.dequantize();
+            for row in 0..rows {
+                for j in 0..k {
+                    // LQ's bound never exceeds DQ's bound: sub-region span
+                    // <= global span.
+                    let bl = bound(&lq_q, &x, row, j);
+                    let bd = bound(&dq_q, &x, row, j);
+                    assert!(bl <= bd + 1e-6 * bd.max(1e-20), "LQ bound {bl} > DQ bound {bd}");
+                    // Realized LQ error respects its own bound.
+                    let e = (x.at2(row, j) - lq_fq.at2(row, j)).abs();
+                    assert!(e <= bl + 1e-5 * bl.max(1e-30) + f32::EPSILON * x.at2(row, j).abs());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn codes_within_levels() {
+        prop::check("codes-in-range", 0xC0DE, |rng, _| {
+            let (rows, k) = prop::gen_dims(rng, 16);
+            let x = Tensor::new(&[rows, k], prop::gen_values(rng, rows * k));
+            let bits = prop::gen_bits(rng) as u8;
+            let q = quantize_matrix(&x, bits, RegionSpec::Size(5));
+            let max_code = (1u16 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| (c as u16) <= max_code));
+        });
+    }
+
+    #[test]
+    fn code_sums_match_codes() {
+        let x = Tensor::new(&[1, 6], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let q = quantize_matrix(&x, 2, RegionSpec::Size(3));
+        let rpr = q.regions_per_row();
+        assert_eq!(rpr, 2);
+        for r in 0..rpr {
+            let s: f32 = (r * 3..(r + 1) * 3).map(|j| q.codes[j] as f32).sum();
+            assert_eq!(s, q.code_sums[r]);
+        }
+    }
+
+    #[test]
+    fn packed_bytes_shrink_with_bits() {
+        let x = Tensor::from_fn(&[8, 64], |i| (i as f32).sin());
+        let b8 = quantize_matrix(&x, 8, RegionSpec::PerRow).packed_bytes();
+        let b2 = quantize_matrix(&x, 2, RegionSpec::PerRow).packed_bytes();
+        assert!(b2 < b8, "2-bit {b2} should be smaller than 8-bit {b8}");
+    }
+}

@@ -1,0 +1,231 @@
+//! `.lqz` — the packed deployment format (the paper's §VI.C workflow:
+//! "deep neural networks are supplied and quantified offline").
+//!
+//! A `.lqz` file holds every layer of a network quantized offline with LQ:
+//! bit-packed codes + per-region scale/min side-cars. This is what actually
+//! ships to the IoT device — the f32 npz never leaves the build host. The
+//! rust engine reconstructs a [`QuantizedMatrix`] per layer with zero
+//! recomputation (codes and side-cars are stored, not re-derived).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "LQZ1" | u32 n_entries
+//! per entry:
+//!   u16 name_len | name bytes
+//!   u8 bits | u8 region_tag (0=per-tensor, 1=per-row, 2=size) | u32 region_g
+//!   u32 rows | u32 k
+//!   u32 n_words | n_words x u64 packed codes
+//!   (rows*regions) x f32 scales | (rows*regions) x f32 mins
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::codec::{pack, unpack, Packed};
+use crate::quant::region::RegionSpec;
+use crate::quant::scheme::QuantizedMatrix;
+
+const MAGIC: &[u8; 4] = b"LQZ1";
+
+/// One named quantized operand.
+#[derive(Debug, Clone)]
+pub struct LqzEntry {
+    pub name: String,
+    pub matrix: QuantizedMatrix,
+}
+
+fn region_tag(r: RegionSpec) -> (u8, u32) {
+    match r {
+        RegionSpec::PerTensor => (0, 0),
+        RegionSpec::PerRow => (1, 0),
+        RegionSpec::Size(g) => (2, g as u32),
+    }
+}
+
+fn tag_region(tag: u8, g: u32) -> Result<RegionSpec> {
+    Ok(match tag {
+        0 => RegionSpec::PerTensor,
+        1 => RegionSpec::PerRow,
+        2 => RegionSpec::Size(g as usize),
+        t => bail!("bad region tag {t}"),
+    })
+}
+
+/// Serialize entries to a `.lqz` file.
+pub fn write_lqz(path: impl AsRef<Path>, entries: &[LqzEntry]) -> Result<()> {
+    let mut w =
+        std::io::BufWriter::new(std::fs::File::create(&path).context("create lqz")?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for e in entries {
+        let q = &e.matrix;
+        let name = e.name.as_bytes();
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name)?;
+        let (tag, g) = region_tag(q.region);
+        w.write_all(&[q.bits, tag])?;
+        w.write_all(&g.to_le_bytes())?;
+        w.write_all(&(q.rows as u32).to_le_bytes())?;
+        w.write_all(&(q.k as u32).to_le_bytes())?;
+        let packed = pack(&q.codes, q.bits);
+        w.write_all(&(packed.words.len() as u32).to_le_bytes())?;
+        for word in &packed.words {
+            w.write_all(&word.to_le_bytes())?;
+        }
+        for s in &q.scales {
+            w.write_all(&s.to_le_bytes())?;
+        }
+        for m in &q.mins {
+            w.write_all(&m.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn rd<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut b = [0u8; N];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+/// Load a `.lqz` file.
+pub fn read_lqz(path: impl AsRef<Path>) -> Result<Vec<LqzEntry>> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("open {}", path.as_ref().display()))?,
+    );
+    if &rd::<4>(&mut r)? != MAGIC {
+        bail!("not an lqz file");
+    }
+    let n = u32::from_le_bytes(rd::<4>(&mut r)?) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = u16::from_le_bytes(rd::<2>(&mut r)?) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("entry name not utf8")?;
+        let [bits, tag] = rd::<2>(&mut r)?;
+        let g = u32::from_le_bytes(rd::<4>(&mut r)?);
+        let rows = u32::from_le_bytes(rd::<4>(&mut r)?) as usize;
+        let k = u32::from_le_bytes(rd::<4>(&mut r)?) as usize;
+        let region = tag_region(tag, g)?;
+        let n_words = u32::from_le_bytes(rd::<4>(&mut r)?) as usize;
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            words.push(u64::from_le_bytes(rd::<8>(&mut r)?));
+        }
+        let codes = unpack(&Packed { bits, len: rows * k, words });
+        let rpr = region.regions_per_row(k);
+        let side = rows * rpr;
+        let mut scales = Vec::with_capacity(side);
+        for _ in 0..side {
+            scales.push(f32::from_le_bytes(rd::<4>(&mut r)?));
+        }
+        let mut mins = Vec::with_capacity(side);
+        for _ in 0..side {
+            mins.push(f32::from_le_bytes(rd::<4>(&mut r)?));
+        }
+        // Recompute code sums (cheap; keeps the file format minimal).
+        let gl = region.group_len(k);
+        let mut code_sums = vec![0.0f32; side];
+        for row in 0..rows {
+            for rr in 0..rpr {
+                let start = rr * gl;
+                let end = ((rr + 1) * gl).min(k);
+                code_sums[row * rpr + rr] = codes[row * k + start..row * k + end]
+                    .iter()
+                    .map(|&c| c as u32)
+                    .sum::<u32>() as f32;
+            }
+        }
+        out.push(LqzEntry {
+            name,
+            matrix: QuantizedMatrix { rows, k, bits, region, codes, scales, mins, code_sums },
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_matrix;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lqr_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn roundtrip_all_configs() {
+        let mut rng = Rng::new(0xF11E);
+        let mut entries = Vec::new();
+        for (i, (bits, region)) in [
+            (8u8, RegionSpec::PerRow),
+            (2, RegionSpec::Size(5)),
+            (4, RegionSpec::PerTensor),
+            (1, RegionSpec::Size(3)),
+            (6, RegionSpec::Size(16)),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let rows = 3 + i;
+            let k = 17 + 3 * i;
+            let x = Tensor::new(&[rows, k], rng.normal_vec(rows * k));
+            entries.push(LqzEntry {
+                name: format!("layer{i}.w"),
+                matrix: quantize_matrix(&x, *bits, *region),
+            });
+        }
+        let path = tmp("roundtrip.lqz");
+        write_lqz(&path, &entries).unwrap();
+        let back = read_lqz(&path).unwrap();
+        assert_eq!(back.len(), entries.len());
+        for (a, b) in entries.iter().zip(&back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.matrix.codes, b.matrix.codes, "{}", a.name);
+            assert_eq!(a.matrix.scales, b.matrix.scales);
+            assert_eq!(a.matrix.mins, b.matrix.mins);
+            assert_eq!(a.matrix.code_sums, b.matrix.code_sums);
+            assert_eq!(a.matrix.region, b.matrix.region);
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn file_size_tracks_bits() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::new(&[16, 256], rng.normal_vec(16 * 256));
+        let sizes: Vec<u64> = [8u8, 2]
+            .iter()
+            .map(|&bits| {
+                let path = tmp(&format!("size{bits}.lqz"));
+                write_lqz(
+                    &path,
+                    &[LqzEntry {
+                        name: "w".into(),
+                        matrix: quantize_matrix(&x, bits, RegionSpec::PerRow),
+                    }],
+                )
+                .unwrap();
+                let s = std::fs::metadata(&path).unwrap().len();
+                std::fs::remove_file(path).unwrap();
+                s
+            })
+            .collect();
+        let ratio = sizes[0] as f64 / sizes[1] as f64;
+        assert!(ratio > 3.0, "8-bit/2-bit file ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.lqz");
+        std::fs::write(&path, b"definitely not lqz").unwrap();
+        assert!(read_lqz(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,165 @@
+//! `artifacts/manifest.json` — the contract between `python -m compile.aot`
+//! and the rust runtime. Parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    /// "f32" or "lq".
+    pub variant: String,
+    /// Activation bits for lq variants (0 for f32).
+    pub bits: usize,
+    pub batch: usize,
+}
+
+/// Per-model metadata: weight file + parameter order/shapes.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub weights_file: String,
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    /// (C, H, W).
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).context("manifest: artifacts[]")? {
+            artifacts.push(ArtifactMeta {
+                name: a.get("name").and_then(Json::as_str).context("artifact.name")?.into(),
+                file: a.get("file").and_then(Json::as_str).context("artifact.file")?.into(),
+                model: a.get("model").and_then(Json::as_str).context("artifact.model")?.into(),
+                variant: a.get("variant").and_then(Json::as_str).context("variant")?.into(),
+                bits: a.get("bits").and_then(Json::as_usize).unwrap_or(0),
+                batch: a.get("batch").and_then(Json::as_usize).context("artifact.batch")?,
+            });
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).context("manifest: models{}")? {
+            let order: Vec<String> = m
+                .get("param_order")
+                .and_then(Json::as_arr)
+                .context("param_order")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+            let mut shapes = BTreeMap::new();
+            if let Some(obj) = m.get("param_shapes").and_then(Json::as_obj) {
+                for (k, v) in obj {
+                    let dims = v
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    shapes.insert(k.clone(), dims);
+                }
+            }
+            let ishape = m.get("input_shape").and_then(Json::as_arr).context("input_shape")?;
+            anyhow::ensure!(ishape.len() == 3, "input_shape must be CHW");
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    weights_file: m.get("weights").and_then(Json::as_str).context("weights")?.into(),
+                    param_order: order,
+                    param_shapes: shapes,
+                    input_shape: (
+                        ishape[0].as_usize().unwrap(),
+                        ishape[1].as_usize().unwrap(),
+                        ishape[2].as_usize().unwrap(),
+                    ),
+                    num_classes: m.get("num_classes").and_then(Json::as_usize).unwrap_or(0),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts, models })
+    }
+
+    /// Artifacts for a given model + variant, sorted by batch size.
+    pub fn variants(&self, model: &str, variant: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.variant == variant)
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+
+    /// Find one artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    pub fn weights_path(&self, m: &ModelMeta) -> PathBuf {
+        self.dir.join(&m.weights_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("lqr_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                 {"name": "m_f32_b1", "file": "m_f32_b1.hlo.txt", "model": "m",
+                  "variant": "f32", "bits": 0, "batch": 1},
+                 {"name": "m_f32_b8", "file": "m_f32_b8.hlo.txt", "model": "m",
+                  "variant": "f32", "bits": 0, "batch": 8}
+               ],
+               "models": {"m": {"weights": "w.npz", "param_order": ["a.w"],
+                 "param_shapes": {"a.w": [2, 3]},
+                 "input_shape": [3, 32, 32], "num_classes": 16}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.variants("m", "f32").len(), 2);
+        assert_eq!(m.variants("m", "f32")[1].batch, 8);
+        assert_eq!(m.models["m"].input_shape, (3, 32, 32));
+        assert_eq!(m.models["m"].param_shapes["a.w"], vec![2, 3]);
+        assert!(m.by_name("m_f32_b1").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let e = Manifest::load("/nonexistent_dir_xyz").unwrap_err();
+        assert!(format!("{e:#}").contains("make artifacts"));
+    }
+}

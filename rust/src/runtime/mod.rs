@@ -1,0 +1,17 @@
+//! S7 — PJRT runtime: load AOT artifacts and execute them on the hot path.
+//!
+//! The build-time python side (`make artifacts`) lowers each model variant to
+//! HLO text; this module loads the text (`HloModuleProto::from_text_file`, the
+//! only interchange that works with xla_extension 0.5.1 — see DESIGN.md),
+//! compiles it on a PJRT CPU client and executes it with the npz weights as
+//! runtime parameters.
+//!
+//! Thread model: `PjRtClient` (and everything derived from it) is
+//! reference-counted and **not Send** — a [`Session`] must be created and
+//! used on one thread. The coordinator gives each worker thread its own
+//! session (see `coordinator::worker`).
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
+pub use session::{ModelRunner, Session};

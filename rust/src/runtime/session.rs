@@ -1,0 +1,155 @@
+//! PJRT session: one client + compiled executables + device-resident weights.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest, ModelMeta};
+use crate::tensor::{read_npz, Tensor};
+
+/// A PJRT CPU client plus everything compiled on it. **Not Send** — create
+/// one per worker thread.
+pub struct Session {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Weights per model, uploaded once as device buffers in param order.
+    weights: HashMap<String, Vec<xla::PjRtBuffer>>,
+}
+
+/// One compiled model variant, ready to run.
+pub struct ModelRunner {
+    pub meta: ArtifactMeta,
+    pub input_elems: usize,
+    pub num_classes: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of weight parameters preceding the input parameter.
+    n_params: usize,
+    model: String,
+}
+
+impl Session {
+    /// Create a CPU session over an artifacts directory.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Session> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::from)?;
+        Ok(Session { client, manifest, weights: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Upload a model's npz weights to device buffers (once, in param order).
+    fn ensure_weights(&mut self, model: &ModelMeta) -> Result<()> {
+        if self.weights.contains_key(&model.name) {
+            return Ok(());
+        }
+        let path = self.manifest.weights_path(model);
+        let entries = read_npz(&path)?;
+        let by_name: HashMap<String, Tensor> =
+            entries.into_iter().map(|e| (e.name.clone(), e.to_tensor())).collect();
+        let mut bufs = Vec::with_capacity(model.param_order.len());
+        for name in &model.param_order {
+            let t = by_name
+                .get(name)
+                .with_context(|| format!("{}: weight {name} missing", path.display()))?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                    .map_err(anyhow::Error::from)?,
+            );
+        }
+        self.weights.insert(model.name.clone(), bufs);
+        Ok(())
+    }
+
+    /// Replace one weight tensor for a model (e.g. a rust-side dequantized
+    /// variant) — used by the quantization experiments over the PJRT path.
+    pub fn override_weight(&mut self, model: &str, name: &str, t: &Tensor) -> Result<()> {
+        let meta = self.manifest.models.get(model).context("unknown model")?.clone();
+        self.ensure_weights(&meta)?;
+        let idx = meta
+            .param_order
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("unknown weight {name}"))?;
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+            .map_err(anyhow::Error::from)?;
+        self.weights.get_mut(model).unwrap()[idx] = buf;
+        Ok(())
+    }
+
+    /// Compile one artifact (HLO text -> executable) and bind its weights.
+    pub fn load(&mut self, artifact_name: &str) -> Result<ModelRunner> {
+        let meta = self
+            .manifest
+            .by_name(artifact_name)
+            .with_context(|| format!("artifact {artifact_name} not in manifest"))?
+            .clone();
+        let model = self
+            .manifest
+            .models
+            .get(&meta.model)
+            .with_context(|| format!("model {} not in manifest", meta.model))?
+            .clone();
+        self.ensure_weights(&model)?;
+
+        let t0 = Instant::now();
+        let path = self.manifest.hlo_path(&meta);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(anyhow::Error::from)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow::Error::from)?;
+        log::info!(
+            "compiled {artifact_name} ({}) in {:.2}s",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        let (c, h, w) = model.input_shape;
+        Ok(ModelRunner {
+            input_elems: meta.batch * c * h * w,
+            num_classes: model.num_classes,
+            n_params: model.param_order.len(),
+            model: meta.model.clone(),
+            meta,
+            exe,
+        })
+    }
+
+    /// Execute a runner on a `(batch, C, H, W)` input tensor; returns logits
+    /// `(batch, num_classes)`.
+    pub fn run(&self, runner: &ModelRunner, input: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            input.len() == runner.input_elems,
+            "input has {} elems, artifact {} wants {}",
+            input.len(),
+            runner.meta.name,
+            runner.input_elems
+        );
+        let weights = &self.weights[&runner.model];
+        debug_assert_eq!(weights.len(), runner.n_params);
+        let input_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(input.data(), input.shape(), None)
+            .map_err(anyhow::Error::from)?;
+        let mut args: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        args.push(&input_buf);
+        let result = runner.exe.execute_b(&args).map_err(anyhow::Error::from)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow::Error::from)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(anyhow::Error::from)?;
+        let data = out.to_vec::<f32>().map_err(anyhow::Error::from)?;
+        anyhow::ensure!(
+            data.len() == runner.meta.batch * runner.num_classes,
+            "unexpected output size {}",
+            data.len()
+        );
+        Ok(Tensor::new(&[runner.meta.batch, runner.num_classes], data))
+    }
+}
+
+// Integration tests that need real artifacts live in rust/tests/runtime_e2e.rs
+// (they require `make artifacts` to have run).

@@ -1,0 +1,11 @@
+//! Minimal dense-tensor substrate (row-major f32 / i32) with npy/npz I/O.
+//!
+//! Deliberately small: the quantization library, the rust-native NN forward
+//! engine and the fixed-point GEMMs only need shaped, contiguous, row-major
+//! buffers plus a couple of views. The npz loaders interoperate with the
+//! build-time python side (numpy `savez`) and the `xla` crate's `Literal`.
+mod npz;
+mod tensorf;
+
+pub use npz::{read_npz, read_npz_names, NpzEntry};
+pub use tensorf::Tensor;

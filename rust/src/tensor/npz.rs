@@ -1,0 +1,261 @@
+//! npy/npz reader (subset): the interchange format between build-time python
+//! (`np.savez`) and the rust runtime.
+//!
+//! Supports the exact encoding numpy's `savez` emits — a STORED (and, for
+//! `savez_compressed`, DEFLATE — rejected here) zip archive of `.npy` members
+//! with v1/v2 headers — for little-endian f32/f64/i32/i64 C-order arrays.
+//! Implemented from the npy-format spec + zip appnote rather than pulling a
+//! zip crate so the tensor substrate stays dependency-free.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+/// One named array from an npz archive.
+#[derive(Debug, Clone)]
+pub struct NpzEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: NpzData,
+}
+
+#[derive(Debug, Clone)]
+pub enum NpzData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NpzEntry {
+    /// View as an f32 [`Tensor`] (i32 data is converted).
+    pub fn to_tensor(&self) -> Tensor {
+        match &self.data {
+            NpzData::F32(v) => Tensor::new(&self.shape, v.clone()),
+            NpzData::I32(v) => {
+                Tensor::new(&self.shape, v.iter().map(|&x| x as f32).collect())
+            }
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            NpzData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn rd_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Parse the npy header dict: "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }".
+fn parse_npy_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
+    let get = |key: &str| -> Result<&str> {
+        let pat = format!("'{key}':");
+        let at = h.find(&pat).with_context(|| format!("npy header missing {key}"))?;
+        Ok(h[at + pat.len()..].trim_start())
+    };
+    let descr_rest = get("descr")?;
+    if !descr_rest.starts_with('\'') {
+        bail!("structured npy dtypes unsupported");
+    }
+    let descr: String = descr_rest[1..]
+        .chars()
+        .take_while(|&c| c != '\'')
+        .collect();
+    let fortran = get("fortran_order")?.starts_with("True");
+    let shape_rest = get("shape")?;
+    if !shape_rest.starts_with('(') {
+        bail!("bad shape in npy header");
+    }
+    let close = shape_rest.find(')').context("bad shape")?;
+    let dims: Vec<usize> = shape_rest[1..close]
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("bad dim"))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, dims))
+}
+
+fn parse_npy(bytes: &[u8]) -> Result<(Vec<usize>, NpzData)> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let (major, header_len, body_at) = match bytes[6] {
+        1 => (1u8, rd_u16(bytes, 8) as usize, 10),
+        2 => (2u8, rd_u32(bytes, 8) as usize, 12),
+        v => bail!("npy version {v} unsupported"),
+    };
+    let _ = major;
+    let header = std::str::from_utf8(&bytes[body_at..body_at + header_len])
+        .context("npy header not utf8")?;
+    let (descr, fortran, shape) = parse_npy_header(header)?;
+    if fortran {
+        bail!("fortran-order arrays unsupported");
+    }
+    let n: usize = shape.iter().product();
+    let body = &bytes[body_at + header_len..];
+    let data = match descr.as_str() {
+        "<f4" => {
+            if body.len() < n * 4 {
+                bail!("npy body too short");
+            }
+            NpzData::F32(
+                body[..n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<f8" => NpzData::F32(
+            body[..n * 8]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect(),
+        ),
+        "<i4" => NpzData::I32(
+            body[..n * 4]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        "<i8" => NpzData::I32(
+            body[..n * 8]
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
+                .collect(),
+        ),
+        d => bail!("npy dtype {d} unsupported"),
+    };
+    Ok((shape, data))
+}
+
+const EOCD_SIG: u32 = 0x0605_4b50;
+const CDIR_SIG: u32 = 0x0201_4b50;
+const LOCAL_SIG: u32 = 0x0403_4b50;
+
+/// Read every array from an npz archive.
+pub fn read_npz(path: impl AsRef<Path>) -> Result<Vec<NpzEntry>> {
+    let path = path.as_ref();
+    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let size = f.metadata()?.len();
+    // Find the end-of-central-directory record (no zip comment expected, but
+    // scan the tail to be safe).
+    let tail_len = size.min(66_000);
+    f.seek(SeekFrom::End(-(tail_len as i64)))?;
+    let mut tail = vec![0u8; tail_len as usize];
+    f.read_exact(&mut tail)?;
+    let eocd_at = (0..tail.len().saturating_sub(21))
+        .rev()
+        .find(|&i| rd_u32(&tail, i) == EOCD_SIG)
+        .context("zip end-of-central-directory not found")?;
+    let n_entries = rd_u16(&tail, eocd_at + 10) as usize;
+    let cdir_off = rd_u32(&tail, eocd_at + 16) as u64;
+    let cdir_size = rd_u32(&tail, eocd_at + 12) as usize;
+
+    let mut cdir = vec![0u8; cdir_size];
+    f.seek(SeekFrom::Start(cdir_off))?;
+    f.read_exact(&mut cdir)?;
+
+    let mut entries = Vec::with_capacity(n_entries);
+    let mut at = 0usize;
+    for _ in 0..n_entries {
+        if rd_u32(&cdir, at) != CDIR_SIG {
+            bail!("bad central directory entry");
+        }
+        let method = rd_u16(&cdir, at + 10);
+        let csize = rd_u32(&cdir, at + 20) as usize;
+        let name_len = rd_u16(&cdir, at + 28) as usize;
+        let extra_len = rd_u16(&cdir, at + 30) as usize;
+        let comment_len = rd_u16(&cdir, at + 32) as usize;
+        let local_off = rd_u32(&cdir, at + 42) as u64;
+        let name = String::from_utf8_lossy(&cdir[at + 46..at + 46 + name_len]).to_string();
+        at += 46 + name_len + extra_len + comment_len;
+        if method != 0 {
+            bail!("{name}: compressed npz members unsupported (use np.savez, not savez_compressed)");
+        }
+        // Local header: sizes may differ (extra field), re-read lengths.
+        let mut lh = [0u8; 30];
+        f.seek(SeekFrom::Start(local_off))?;
+        f.read_exact(&mut lh)?;
+        if rd_u32(&lh, 0) != LOCAL_SIG {
+            bail!("bad local header for {name}");
+        }
+        let lh_name = rd_u16(&lh, 26) as u64;
+        let lh_extra = rd_u16(&lh, 28) as u64;
+        let mut body = vec![0u8; csize];
+        f.seek(SeekFrom::Start(local_off + 30 + lh_name + lh_extra))?;
+        f.read_exact(&mut body)?;
+
+        let member = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+        let (shape, data) = parse_npy(&body).with_context(|| format!("member {name}"))?;
+        entries.push(NpzEntry { name: member, shape, data });
+    }
+    Ok(entries)
+}
+
+/// Member names in an npz archive (cheap: central directory only).
+pub fn read_npz_names(path: impl AsRef<Path>) -> Result<Vec<String>> {
+    Ok(read_npz(path)?.into_iter().map(|e| e.name).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_parse() {
+        let (d, f, s) =
+            parse_npy_header("{'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }")
+                .unwrap();
+        assert_eq!(d, "<f4");
+        assert!(!f);
+        assert_eq!(s, vec![2, 3]);
+    }
+
+    #[test]
+    fn header_scalar_and_1d() {
+        let (_, _, s) =
+            parse_npy_header("{'descr': '<i4', 'fortran_order': False, 'shape': (), }").unwrap();
+        assert!(s.is_empty());
+        let (_, _, s) =
+            parse_npy_header("{'descr': '<i4', 'fortran_order': False, 'shape': (5,), }")
+                .unwrap();
+        assert_eq!(s, vec![5]);
+    }
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        // Hand-build a v1 npy: magic, ver, hlen, header, payload.
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 2), }";
+        let mut h = header.to_string();
+        while (10 + h.len() + 1) % 64 != 0 {
+            h.push(' ');
+        }
+        h.push('\n');
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend((h.len() as u16).to_le_bytes());
+        bytes.extend(h.as_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.5] {
+            bytes.extend(v.to_le_bytes());
+        }
+        let (shape, data) = parse_npy(&bytes).unwrap();
+        assert_eq!(shape, vec![2, 2]);
+        match data {
+            NpzData::F32(v) => assert_eq!(v, vec![1.0, 2.0, 3.0, 4.5]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    // Reading real numpy-written npz files is covered by the integration test
+    // rust/tests/npz_interop.rs against artifacts/ produced by `make artifacts`.
+}

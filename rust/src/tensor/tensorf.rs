@@ -1,0 +1,179 @@
+//! Row-major f32 tensor with the handful of ops the stack needs.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor of arbitrary rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size of dimension `d`.
+    pub fn dim(&self, d: usize) -> usize {
+        self.shape[d]
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {shape:?}: element count mismatch", self.shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// 2-D element accessor (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row view of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// 2-D transpose (copying).
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2, "transpose2 on rank {}", self.rank());
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: out }
+    }
+
+    /// Elementwise maximum with a scalar (ReLU when s = 0).
+    pub fn max_scalar(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| x.max(s)).collect(),
+        }
+    }
+
+    /// Largest absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Largest absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).fold(0.0f32, f32::max)
+    }
+
+    /// Slice of the first `n` rows of a rank-2 tensor (copying).
+    pub fn take_rows(&self, n: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(n <= self.shape[0]);
+        Tensor::new(&[n, self.shape[1]], self.data[..n * self.shape[1]].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.dim(1), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_fn(&[3, 4], |i| i as f32);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+        assert_eq!(t.transpose2().at2(2, 1), t.at2(1, 2));
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert!(t.reshape(&[2, 4]).is_ok());
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::new(&[3], vec![1., 2., 3.]);
+        let b = Tensor::new(&[3], vec![1., 2.5, 2.]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Declarative command-line flag parser (the vendor set has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults, and
+//! generated `--help`. Used by the `lqr` binary, the examples and benches.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    boolean: bool,
+}
+
+/// A small builder-style argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Declare a flag with a default value.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            boolean: false,
+        });
+        self
+    }
+
+    /// Declare a required flag (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            boolean: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (`--name` sets true).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some("false".into()),
+            boolean: true,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.boolean) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse from an explicit token list. Returns Err(message) on bad input;
+    /// the message for `--help` is the usage text.
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i).cloned().ok_or(format!("--{name} needs a value"))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for spec in &self.specs {
+            if !self.values.contains_key(&spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        self.values.insert(spec.name.clone(), d.clone());
+                    }
+                    None => return Err(format!("missing required --{}\n\n{}", spec.name, self.usage())),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+
+    /// Parse from the process arguments; exits the process on error/help.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.contains("FLAGS:") { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+/// Parsed flag values with typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("undeclared flag {name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of usize, e.g. "8,6,4,2".
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad list")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t", "test")
+            .flag("bits", "8", "bit width")
+            .switch("verbose", "chatty")
+            .parse_from(&argv(&["--bits", "4"]))
+            .unwrap();
+        assert_eq!(p.get_usize("bits"), 4);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_and_switch() {
+        let p = Args::new("t", "test")
+            .flag("model", "a", "")
+            .switch("fast", "")
+            .parse_from(&argv(&["--model=vgg", "--fast", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "vgg");
+        assert!(p.get_bool("fast"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let e = Args::new("t", "test").required("out", "").parse_from(&argv(&[])).unwrap_err();
+        assert!(e.contains("missing required --out"));
+    }
+
+    #[test]
+    fn unknown_flag() {
+        let e = Args::new("t", "test").parse_from(&argv(&["--nope"])).unwrap_err();
+        assert!(e.contains("unknown flag"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = Args::new("t", "test")
+            .flag("bits", "8,6,4,2", "")
+            .parse_from(&argv(&[]))
+            .unwrap();
+        assert_eq!(p.get_usize_list("bits"), vec![8, 6, 4, 2]);
+    }
+}

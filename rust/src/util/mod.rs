@@ -1,0 +1,20 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no clap / serde / criterion / proptest / rayon / tokio), so the support
+//! machinery a framework normally pulls from crates.io is implemented here:
+//!
+//! - [`rng`] — deterministic SplitMix64 PRNG (uniforms, normals, shuffles).
+//! - [`json`] — minimal JSON parser/serializer (manifest + config files).
+//! - [`cli`] — declarative flag parser for the `lqr` binary and examples.
+//! - [`stats`] — timers, latency histograms, summary statistics.
+//! - [`threadpool`] — fixed-size worker pool (coordinator workers).
+//! - [`prop`] — tiny property-testing harness (deterministic, seed-logged).
+//! - [`logging`] — env-filtered logger for the `log` facade.
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,117 @@
+//! Tiny property-testing harness (the vendor set has no proptest).
+//!
+//! Deterministic: every case derives from a fixed master seed, and a failing
+//! case reports its case-seed so it can be replayed exactly with
+//! [`check_one`]. No shrinking — generators are kept small enough that raw
+//! failures are readable.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with LQR_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("LQR_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop(rng, case_index)` for `cases` deterministic cases; panics with
+/// the failing seed on error.
+pub fn check_named(name: &str, master_seed: u64, cases: usize, prop: impl Fn(&mut Rng, usize)) {
+    for case in 0..cases {
+        let case_seed = master_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64 + 1);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay: check_one({case_seed:#x}, ..)):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Run the default number of cases.
+pub fn check(name: &str, master_seed: u64, prop: impl Fn(&mut Rng, usize)) {
+    check_named(name, master_seed, default_cases(), prop);
+}
+
+/// Replay a single case from its reported seed.
+pub fn check_one(case_seed: u64, prop: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(case_seed);
+    prop(&mut rng);
+}
+
+// ---- common generators ----------------------------------------------------
+
+/// Random tensor dims: (rows, cols) with both in [1, max].
+pub fn gen_dims(rng: &mut Rng, max: usize) -> (usize, usize) {
+    (rng.index(1, max + 1), rng.index(1, max + 1))
+}
+
+/// Random f32 data with occasionally-nasty distributions: normal, constant,
+/// tiny-range, large-range — the cases quantization must survive.
+pub fn gen_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+    match rng.below(4) {
+        0 => rng.normal_vec(n),
+        1 => {
+            let c = rng.range(-5.0, 5.0);
+            vec![c; n] // constant region: span == 0 edge case
+        }
+        2 => rng.uniform_vec(n, -1e-4, 1e-4),
+        _ => rng.uniform_vec(n, -1e3, 1e3),
+    }
+}
+
+/// Random bit width from the paper's set {1, 2, 4, 6, 8}.
+pub fn gen_bits(rng: &mut Rng) -> usize {
+    [1usize, 2, 4, 6, 8][rng.below(5) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_named("add-commutes", 1, 16, |rng, _| {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure_with_seed() {
+        check_named("always-fails", 1, 4, |_, _| panic!("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |seed| {
+            let out = std::sync::Mutex::new(Vec::new());
+            check_named("collect", seed, 8, |rng, _| out.lock().unwrap().push(rng.next_u64()));
+            out.into_inner().unwrap()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check_named("gen-bounds", 3, 32, |rng, _| {
+            let (m, k) = gen_dims(rng, 17);
+            assert!((1..=17).contains(&m) && (1..=17).contains(&k));
+            let v = gen_values(rng, m * k);
+            assert_eq!(v.len(), m * k);
+            assert!(v.iter().all(|x| x.is_finite()));
+            assert!([1, 2, 4, 6, 8].contains(&gen_bits(rng)));
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Timing + summary statistics for benches and the coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure wall time of `f`, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations then `iters` measured,
+/// returning per-iteration durations.
+pub fn bench_iters<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<Duration> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect()
+}
+
+/// Summary statistics over a sample of durations or values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "Summary::of(empty)");
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: sorted[n - 1],
+        }
+    }
+
+    pub fn of_durations(ds: &[Duration]) -> Summary {
+        let vals: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
+        Summary::of(&vals)
+    }
+
+    /// Render with a unit scale, e.g. `fmt(1e3, "ms")`.
+    pub fn fmt(&self, scale: f64, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} min={:.3}{u} max={:.3}{u}",
+            self.n,
+            self.mean * scale,
+            self.p50 * scale,
+            self.p95 * scale,
+            self.p99 * scale,
+            self.min * scale,
+            self.max * scale,
+            u = unit
+        )
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (lock-free-ish: callers own it or
+/// wrap in a mutex; the coordinator keeps one per stream).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket i counts samples in [2^i, 2^{i+1}) microseconds; 64 buckets.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; 64], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(63);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1).min(63));
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn histogram_records() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 4);
+        assert!(h.mean() >= Duration::from_micros(2000));
+        assert!(h.quantile(0.5) >= Duration::from_micros(100));
+        assert!(h.quantile(1.0) >= Duration::from_micros(10_000));
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_micros(500));
+    }
+
+    #[test]
+    fn bench_iters_runs() {
+        let mut calls = 0;
+        let ds = bench_iters(2, 5, || calls += 1);
+        assert_eq!(ds.len(), 5);
+        assert_eq!(calls, 7);
+    }
+}

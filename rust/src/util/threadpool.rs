@@ -1,0 +1,168 @@
+//! Fixed-size thread pool (no rayon/tokio in the vendor set).
+//!
+//! Two primitives:
+//! - [`ThreadPool`]: long-lived workers consuming boxed jobs from a shared
+//!   queue — used by the coordinator's worker runtime.
+//! - [`scope_chunks`]: data-parallel helper that splits an index range into
+//!   contiguous chunks across threads — used by the fixed-point GEMMs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A classic shared-queue thread pool. Jobs are executed FIFO; `join` blocks
+/// until every submitted job has finished.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Run(job)) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx, handles, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool shut down");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `0..n` into `threads` contiguous chunks and run `f(start, end)` on
+/// scoped threads. `f` runs on the caller thread when `threads <= 1` or the
+/// range is tiny — keeping the hot path allocation-free for small work.
+pub fn scope_chunks(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
+    if threads <= 1 || n < 2 * threads {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn join_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                thread::sleep(std::time::Duration::from_millis(20));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scope_chunks_covers_range() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        scope_chunks(100, 7, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_single_thread() {
+        let sum = AtomicUsize::new(0);
+        scope_chunks(10, 1, |s, e| {
+            sum.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+}

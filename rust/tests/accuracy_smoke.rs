@@ -1,0 +1,88 @@
+//! Accuracy-protocol smoke tests over the real weights (requires artifacts):
+//! small-subset versions of Tables 1–2 / Figs. 9–10, checking the paper's
+//! qualitative shape so regressions in the pipeline are caught in `cargo
+//! test` without running the full benches.
+
+use lqr::dataset::Dataset;
+use lqr::eval::evaluate;
+use lqr::nn::forward::Scheme;
+use lqr::nn::{Arch, Engine, Precision};
+use lqr::quant::RegionSpec;
+
+fn setup(model: &str) -> Option<(Engine, Dataset)> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return None;
+    }
+    let engine = Engine::from_npz(
+        Arch::by_name(model).unwrap(),
+        format!("{dir}/weights_{model}.npz"),
+    )
+    .unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap().take(256);
+    Some((engine, ds))
+}
+
+#[test]
+fn table1_shape_8bit_lq_no_drop() {
+    let Some((engine, ds)) = setup("minialexnet") else { return };
+    let f32_acc = evaluate(&engine, &ds, Precision::F32, 32, None);
+    let lq8_acc = evaluate(&engine, &ds, Precision::lq(8), 32, None);
+    assert!(f32_acc.top1 > 0.95, "baseline top-1 {}", f32_acc.top1);
+    assert!(
+        (f32_acc.top1 - lq8_acc.top1).abs() <= 0.02,
+        "8-bit LQ should not drop: f32={} lq8={}",
+        f32_acc.top1,
+        lq8_acc.top1
+    );
+}
+
+#[test]
+fn table2_shape_lq_beats_dq_at_2bit() {
+    let Some((engine, ds)) = setup("minivgg") else { return };
+    let lq2 = evaluate(&engine, &ds, Precision::lq(2), 32, None);
+    let dq2 = evaluate(&engine, &ds, Precision::dq(2), 32, None);
+    assert!(
+        lq2.top1 > dq2.top1 + 0.05,
+        "LQ must clearly beat DQ at 2-bit: lq={} dq={}",
+        lq2.top1,
+        dq2.top1
+    );
+}
+
+#[test]
+fn fig10_shape_smaller_region_helps_at_2bit() {
+    let Some((engine, ds)) = setup("minivgg") else { return };
+    let kernel_sized = evaluate(&engine, &ds, Precision::lq(2), 32, None);
+    let small = Precision::Quant {
+        scheme: Scheme::Lq,
+        bits_a: 2,
+        bits_w: 8,
+        region: RegionSpec::Size(9),
+        lut: false,
+    };
+    let small_acc = evaluate(&engine, &ds, small, 32, None);
+    assert!(
+        small_acc.top1 >= kernel_sized.top1,
+        "smaller regions should not hurt at 2-bit: small={} kernel={}",
+        small_acc.top1,
+        kernel_sized.top1
+    );
+}
+
+#[test]
+fn lut_path_accuracy_identical() {
+    let Some((engine, ds)) = setup("minialexnet") else { return };
+    let ds = ds.take(64);
+    let no_lut = Precision::Quant {
+        scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::PerRow, lut: false,
+    };
+    let with_lut = Precision::Quant {
+        scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::PerRow, lut: true,
+    };
+    let a = evaluate(&engine, &ds, no_lut, 32, None);
+    let b = evaluate(&engine, &ds, with_lut, 32, None);
+    assert_eq!(a.top1, b.top1, "LUT changes accuracy");
+    assert_eq!(a.top5, b.top5);
+}

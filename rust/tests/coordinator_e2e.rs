@@ -1,0 +1,89 @@
+//! Coordinator end-to-end over the real PJRT backend (requires artifacts):
+//! the full serving path — submit → batch → PJRT execute → response.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lqr::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::dataset::Dataset;
+use lqr::nn::{Arch, Engine, Precision};
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing");
+        None
+    }
+}
+
+#[test]
+fn serve_pjrt_f32_batch_correctness() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Arc::new(Dataset::load(format!("{dir}/data"), "val").unwrap());
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_millis(4),
+        queue_capacity: 256,
+    };
+    let d2 = dir.clone();
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || {
+            Ok(Box::new(PjrtBackend::open(&d2, "minialexnet", "f32")?) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+
+    // Submit 40 images, check predictions mostly match labels (99% model).
+    let n = 40;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.image(i)).unwrap()).collect();
+    let mut hits = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(resp.logits.len(), 16);
+        if resp.predicted as i32 == ds.labels[i] {
+            hits += 1;
+        }
+    }
+    assert!(hits >= n * 9 / 10, "served accuracy {hits}/{n}");
+    let m = coord.shutdown();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), n as u64);
+    assert!(m.mean_batch_size() > 1.0, "no batching happened");
+}
+
+#[test]
+fn serve_native_lq2_still_classifies() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Arc::new(Dataset::load(format!("{dir}/data"), "val").unwrap());
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 64,
+    };
+    let d2 = dir.clone();
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || {
+            let engine =
+                Engine::from_npz(Arch::minivgg(), format!("{d2}/weights_minivgg.npz"))?;
+            Ok(Box::new(NativeBackend::new(engine, Precision::lq(2))) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+    let n = 16;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.image(i)).unwrap()).collect();
+    let mut hits = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        if resp.predicted as i32 == ds.labels[i] {
+            hits += 1;
+        }
+    }
+    // 2-bit LQ drops accuracy but must stay far above chance (1/16).
+    assert!(hits >= n / 2, "2-bit LQ served accuracy {hits}/{n}");
+}

@@ -1,0 +1,79 @@
+//! Deployment-format round trip: quantize the trained model offline to
+//! `.lqz`, reload with no f32 weights, and verify the quantized engine
+//! serves the same accuracy (requires `make artifacts`).
+
+use lqr::dataset::Dataset;
+use lqr::eval::evaluate;
+use lqr::nn::{Arch, Engine, Precision};
+use lqr::quant::serialize::{read_lqz, write_lqz};
+use lqr::quant::RegionSpec;
+
+fn setup() -> Option<(Engine, Dataset, String)> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return None;
+    }
+    let engine = Engine::from_npz(
+        Arch::minialexnet(),
+        format!("{dir}/weights_minialexnet.npz"),
+    )
+    .unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap().take(128);
+    Some((engine, ds, dir))
+}
+
+#[test]
+fn lqz_deploy_preserves_quantized_accuracy() {
+    let Some((engine, ds, _)) = setup() else { return };
+    let tmp = std::env::temp_dir().join(format!("lqr_deploy_{}.lqz", std::process::id()));
+    write_lqz(&tmp, &engine.to_lqz_entries(8, RegionSpec::PerRow)).unwrap();
+
+    let deployed = Engine::from_lqz(Arch::minialexnet(), &tmp).unwrap();
+    let a = evaluate(&engine, &ds, Precision::lq(8), 32, None);
+    let b = evaluate(&deployed, &ds, Precision::lq(8), 32, None);
+    // The deployed engine re-quantizes activations at runtime but uses the
+    // *shipped* weight codes; accuracy must match the build-host run.
+    assert_eq!(a.top1, b.top1, "deployed {} vs build-host {}", b.top1, a.top1);
+    std::fs::remove_file(&tmp).unwrap();
+}
+
+#[test]
+fn lqz_file_much_smaller_than_npz() {
+    let Some((engine, _, dir)) = setup() else { return };
+    let npz = std::fs::metadata(format!("{dir}/weights_minialexnet.npz")).unwrap().len();
+    let size_of = |bits: u8, region: RegionSpec| -> u64 {
+        let tmp = std::env::temp_dir()
+            .join(format!("lqr_size_{}_{bits}_{region}.lqz", std::process::id()));
+        write_lqz(&tmp, &engine.to_lqz_entries(bits, region)).unwrap();
+        let s = std::fs::metadata(&tmp).unwrap().len();
+        std::fs::remove_file(&tmp).unwrap();
+        s
+    };
+    // Kernel-sized regions: side-car (scale+min per region) is negligible,
+    // so the file shrinks ~bits/32.
+    let perrow2 = size_of(2, RegionSpec::PerRow);
+    assert!(
+        perrow2 * 8 < npz,
+        "2-bit kernel-region lqz ({perrow2}) should be >8x smaller than npz ({npz})"
+    );
+    // Small regions trade footprint for accuracy (Fig. 10): 8 bytes of
+    // side-car per 9 codes at g=9 dominates 2-bit codes. The deploy format
+    // makes that trade visible rather than hiding it.
+    let g9 = size_of(2, RegionSpec::Size(9));
+    assert!(g9 > perrow2 * 2, "g=9 side-car overhead should show: {g9} vs {perrow2}");
+    assert!(g9 < npz, "even g=9 beats shipping f32");
+}
+
+#[test]
+fn lqz_entries_enumerate_all_layers() {
+    let Some((engine, _, _)) = setup() else { return };
+    let tmp = std::env::temp_dir().join(format!("lqr_enum_{}.lqz", std::process::id()));
+    write_lqz(&tmp, &engine.to_lqz_entries(4, RegionSpec::PerRow)).unwrap();
+    let names: Vec<String> = read_lqz(&tmp).unwrap().into_iter().map(|e| e.name).collect();
+    for l in ["conv1", "conv2", "conv3", "fc1", "fc2"] {
+        assert!(names.contains(&format!("{l}.w")), "{l}.w missing");
+        assert!(names.contains(&format!("{l}.b")), "{l}.b missing");
+    }
+    std::fs::remove_file(&tmp).unwrap();
+}

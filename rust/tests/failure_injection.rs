@@ -1,0 +1,183 @@
+//! Failure injection: the coordinator must degrade cleanly when a backend
+//! misbehaves — failed batches drop their reply senders (receivers see a
+//! disconnect, not a hang), healthy workers keep serving, and metrics stay
+//! consistent.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use lqr::coordinator::backend::{Backend, MockBackend};
+use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::tensor::Tensor;
+
+/// Backend that fails every `fail_every`-th batch.
+struct FlakyBackend {
+    inner: MockBackend,
+    calls: u64,
+    fail_every: u64,
+}
+
+impl Backend for FlakyBackend {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        self.calls += 1;
+        if self.calls % self.fail_every == 0 {
+            anyhow::bail!("injected failure on call {}", self.calls);
+        }
+        self.inner.run_batch(batch)
+    }
+
+    fn describe(&self) -> String {
+        "flaky-mock".into()
+    }
+}
+
+fn img(v: f32) -> Tensor {
+    Tensor::filled(&[1, 1, 2, 2], v)
+}
+
+#[test]
+fn failed_batches_disconnect_not_hang() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1, // one request per batch -> deterministic failure mapping
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| {
+            Ok(Box::new(FlakyBackend {
+                inner: MockBackend {
+                    classes: 4,
+                    delay: Duration::ZERO,
+                    calls: Arc::new(AtomicU64::new(0)),
+                },
+                calls: 0,
+                fail_every: 3,
+            }) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+
+    let n = 30;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(img(i as f32)).unwrap()).collect();
+    let mut ok = 0;
+    let mut failed = 0;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1, // disconnect == injected failure
+        }
+    }
+    assert_eq!(ok + failed, n);
+    assert_eq!(failed, n / 3, "every 3rd single-request batch fails");
+    let m = coord.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+}
+
+#[test]
+fn broken_backend_factory_degrades_to_error_not_panic() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 8,
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| anyhow::bail!("backend init exploded")),
+    )
+    .unwrap();
+    // The worker exits at init; requests get disconnects, not hangs.
+    let rx = coord.submit(img(1.0)).unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+}
+
+#[test]
+fn healthy_worker_carries_flaky_peer() {
+    // Two workers: one whose backend always fails, one healthy. Every
+    // request must eventually succeed or disconnect — and a majority
+    // succeed because the healthy worker keeps draining.
+    let flaky_first = Arc::new(AtomicU64::new(0));
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+    };
+    let ff = Arc::clone(&flaky_first);
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || {
+            if ff.fetch_add(1, Ordering::SeqCst) == 0 {
+                Ok(Box::new(FlakyBackend {
+                    inner: MockBackend {
+                        classes: 4,
+                        delay: Duration::ZERO,
+                        calls: Arc::new(AtomicU64::new(0)),
+                    },
+                    calls: 0,
+                    fail_every: 1, // always fails
+                }) as Box<dyn Backend>)
+            } else {
+                Ok(Box::new(MockBackend {
+                    classes: 4,
+                    delay: Duration::from_micros(100),
+                    calls: Arc::new(AtomicU64::new(0)),
+                }) as Box<dyn Backend>)
+            }
+        }),
+    )
+    .unwrap();
+    let n = 40;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(img(i as f32)).unwrap()).collect();
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| rx.recv_timeout(Duration::from_secs(10)).is_ok())
+        .count();
+    assert!(ok > 0, "healthy worker should complete some requests");
+    let m = coord.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+}
+
+#[test]
+fn oversized_then_normal_requests_keep_serving() {
+    // A mixed-shape batch would be a caller bug; the worker asserts shapes
+    // only in debug builds, so the coordinator contract is "one route = one
+    // shape". This test pins the *documented* behaviour that single-shape
+    // streams keep flowing after queue-full rejections.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 2,
+        max_wait: Duration::from_millis(5),
+        queue_capacity: 2,
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| {
+            Ok(Box::new(MockBackend {
+                classes: 2,
+                delay: Duration::from_millis(20),
+                calls: Arc::new(AtomicU64::new(0)),
+            }) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for i in 0..20 {
+        match coord.submit(img(i as f32)) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => {
+                rejected += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    assert!(rejected > 0, "expected backpressure");
+    for rx in accepted {
+        assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+    }
+}

@@ -1,0 +1,57 @@
+//! npz interop: the hand-rolled reader vs real numpy-written archives
+//! (requires `make artifacts`).
+
+use lqr::dataset::Dataset;
+use lqr::tensor::read_npz;
+
+fn dir() -> Option<String> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing");
+        None
+    }
+}
+
+#[test]
+fn weights_npz_loads_with_expected_shapes() {
+    let Some(dir) = dir() else { return };
+    let entries = read_npz(format!("{dir}/weights_minialexnet.npz")).unwrap();
+    let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+    for want in ["conv1.w", "conv1.b", "conv2.w", "conv3.w", "fc1.w", "fc2.w"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+    let c1 = entries.iter().find(|e| e.name == "conv1.w").unwrap();
+    assert_eq!(c1.shape, vec![32, 3, 5, 5]);
+    let t = c1.to_tensor();
+    assert!(t.data().iter().all(|v| v.is_finite()));
+    assert!(t.max_abs() > 0.0, "weights are all zero?");
+}
+
+#[test]
+fn val_dataset_loads_and_is_balanced() {
+    let Some(dir) = dir() else { return };
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap();
+    assert_eq!(ds.len(), 2000);
+    assert_eq!(ds.image_shape(), (3, 32, 32));
+    // Pixel range sanity.
+    assert!(ds.images.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    // Balanced classes (exactly n/16 each by construction).
+    let mut counts = [0usize; 16];
+    for &l in &ds.labels {
+        counts[l as usize] += 1;
+    }
+    for (c, &n) in counts.iter().enumerate() {
+        assert_eq!(n, 125, "class {c} has {n} examples");
+    }
+}
+
+#[test]
+fn int_labels_decode_correctly() {
+    let Some(dir) = dir() else { return };
+    let entries = read_npz(format!("{dir}/data/val.npz")).unwrap();
+    let y = entries.iter().find(|e| e.name == "y").unwrap();
+    let labels = y.as_i32().expect("y should be an integer array");
+    assert!(labels.iter().all(|&l| (0..16).contains(&l)));
+}

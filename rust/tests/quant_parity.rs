@@ -1,0 +1,73 @@
+//! Cross-language parity: the rust `quant` module vs the python reference
+//! (`python/compile/quant.py`) over fixtures dumped by `make artifacts`.
+//!
+//! Codes must match **bit-exactly** (same rounding, same region geometry);
+//! scales/mins/GEMM outputs to f32 tolerance.
+
+use lqr::fixedpoint::gemm_quantized;
+use lqr::quant::{quantize_matrix, RegionSpec};
+use lqr::tensor::{read_npz, NpzEntry, Tensor};
+
+fn fixtures() -> Option<Vec<NpzEntry>> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let path = std::path::Path::new(&dir).join("fixtures.npz");
+    if !path.exists() {
+        eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+        return None;
+    }
+    Some(read_npz(path).unwrap())
+}
+
+fn by_name<'a>(entries: &'a [NpzEntry], name: &str) -> &'a NpzEntry {
+    entries.iter().find(|e| e.name == name).unwrap_or_else(|| panic!("missing {name}"))
+}
+
+#[test]
+fn codes_match_python_bit_exactly() {
+    let Some(entries) = fixtures() else { return };
+    let meta = by_name(&entries, "meta");
+    let cases = meta.shape[0];
+    let m = meta.as_i32().unwrap();
+    for i in 0..cases {
+        let (bits, g) = (m[i * 4 + 2] as u8, m[i * 4 + 3] as usize);
+        let x = by_name(&entries, &format!("case{i}_x")).to_tensor();
+        let want_codes = by_name(&entries, &format!("case{i}_codes"));
+        let want_scales = by_name(&entries, &format!("case{i}_scales")).to_tensor();
+        let want_mins = by_name(&entries, &format!("case{i}_mins")).to_tensor();
+
+        let q = quantize_matrix(&x, bits, RegionSpec::Size(g));
+        let got_codes: Vec<i32> = q.codes.iter().map(|&c| c as i32).collect();
+        assert_eq!(
+            got_codes,
+            want_codes.as_i32().unwrap(),
+            "case {i} (bits={bits} g={g}): codes differ from python"
+        );
+        let scales = Tensor::new(&want_scales.shape().to_vec(), q.scales.clone());
+        let mins = Tensor::new(&want_mins.shape().to_vec(), q.mins.clone());
+        assert!(scales.max_abs_diff(&want_scales) <= 1e-6 * want_scales.max_abs().max(1e-20));
+        assert!(mins.max_abs_diff(&want_mins) <= 1e-6 * want_mins.max_abs().max(1e-20));
+    }
+}
+
+#[test]
+fn gemm_matches_python_reference() {
+    let Some(entries) = fixtures() else { return };
+    let meta = by_name(&entries, "meta");
+    let m = meta.as_i32().unwrap();
+    for i in 0..meta.shape[0] {
+        let (bits, g) = (m[i * 4 + 2] as u8, m[i * 4 + 3] as usize);
+        let x = by_name(&entries, &format!("case{i}_x")).to_tensor();
+        let w = by_name(&entries, &format!("case{i}_w")).to_tensor();
+        let want = by_name(&entries, &format!("case{i}_gemm")).to_tensor();
+
+        let aq = quantize_matrix(&x, bits, RegionSpec::Size(g));
+        let wq = quantize_matrix(&w.transpose2(), 8, RegionSpec::Size(g));
+        let got = gemm_quantized(&aq, &wq, 1);
+        let tol = 1e-3 * want.max_abs().max(1.0);
+        assert!(
+            got.max_abs_diff(&want) <= tol,
+            "case {i} (bits={bits} g={g}): gemm diff {} > {tol}",
+            got.max_abs_diff(&want)
+        );
+    }
+}

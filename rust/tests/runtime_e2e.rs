@@ -1,0 +1,103 @@
+//! End-to-end runtime tests over the real artifacts (require `make artifacts`).
+//!
+//! These pin the full AOT contract: python-lowered HLO text loads, compiles
+//! and executes through the rust PJRT session, and its numerics agree with
+//! the rust-native engine over the same npz weights.
+
+use lqr::dataset::Dataset;
+use lqr::eval::topk_hit;
+use lqr::nn::{Arch, Engine, Precision};
+use lqr::runtime::Session;
+use lqr::tensor::Tensor;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: {dir}/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn f32_artifact_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::open(&dir).unwrap();
+    let runner = session.load("minialexnet_f32_b8").unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap();
+    let x = ds.batch(0, 8);
+    let pjrt_logits = session.run(&runner, &x).unwrap();
+
+    let engine = Engine::from_npz(
+        Arch::minialexnet(),
+        format!("{dir}/weights_minialexnet.npz"),
+    )
+    .unwrap();
+    let native_logits = engine.forward(&x, Precision::F32);
+
+    assert_eq!(pjrt_logits.shape(), native_logits.shape());
+    let scale = native_logits.max_abs().max(1.0);
+    let diff = pjrt_logits.max_abs_diff(&native_logits);
+    assert!(
+        diff <= 2e-3 * scale,
+        "PJRT vs native f32 forward diverge: {diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn lq8_artifact_classifies_val_set() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::open(&dir).unwrap();
+    let runner = session.load("minivgg_lq8_b8").unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap();
+    let n = 64;
+    let mut hits = 0;
+    for start in (0..n).step_by(8) {
+        let x = ds.batch(start, 8);
+        let logits = session.run(&runner, &x).unwrap();
+        for r in 0..8 {
+            if topk_hit(logits.row(r), ds.labels[start + r], 1) {
+                hits += 1;
+            }
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    // The Pallas 8-bit LQ artifact should track the ~99% f32 model closely.
+    assert!(acc > 0.9, "lq8 artifact top-1 over {n} val images = {acc}");
+}
+
+#[test]
+fn batch1_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::open(&dir).unwrap();
+    let runner = session.load("minialexnet_f32_b1").unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap();
+    let logits = session.run(&runner, &ds.image(0)).unwrap();
+    assert_eq!(logits.shape(), &[1, 16]);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn weight_override_changes_output() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::open(&dir).unwrap();
+    let runner = session.load("minialexnet_f32_b1").unwrap();
+    let ds = Dataset::load(format!("{dir}/data"), "val").unwrap();
+    let x = ds.image(0);
+    let before = session.run(&runner, &x).unwrap();
+    // Zeroing fc2 weights must zero the logits (bias only remains).
+    let zero = Tensor::zeros(&[256, 16]);
+    session.override_weight("minialexnet", "fc2.w", &zero).unwrap();
+    let after = session.run(&runner, &x).unwrap();
+    assert!(before.max_abs_diff(&after) > 1e-3, "override had no effect");
+}
+
+#[test]
+fn wrong_input_size_is_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut session = Session::open(&dir).unwrap();
+    let runner = session.load("minialexnet_f32_b1").unwrap();
+    let bad = Tensor::zeros(&[1, 3, 16, 16]);
+    assert!(session.run(&runner, &bad).is_err());
+}
