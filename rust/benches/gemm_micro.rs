@@ -1,16 +1,24 @@
 //! Micro-benchmarks of the GEMM ladder — the §Perf profiling tool.
 //!
-//! Times f32 / eq.7-i8 / packed / LUT GEMMs on layer-shaped problems and
-//! reports effective GMAC/s, plus the runtime activation-quantization pass.
+//! Times f32 / naive-i8 / panel-i8 / packed / LUT GEMMs on layer-shaped
+//! problems and reports effective GMAC/s, plus the runtime activation-
+//! quantization pass and the one-off weight-panel prep the engine caches.
 //! `LQR_BENCH_ITERS` overrides the per-case iteration count (default 5).
+//!
+//! Besides the table on stdout, writes `BENCH_gemm.json` at the repo root
+//! so the perf trajectory is machine-readable across PRs: one record per
+//! (case, kernel) with ms, GMAC/s, speedup vs the blocked f32 baseline and
+//! speedup vs the seed's naive general-region i8 path.
 
 use std::time::Instant;
 
 use lqr::fixedpoint::gemm_lut::gemm_lut;
-use lqr::fixedpoint::gemm_packed::{gemm_packed, PackedMatrix};
-use lqr::fixedpoint::{gemm_f32, gemm_quantized};
+use lqr::fixedpoint::gemm_packed::PackedMatrix;
+use lqr::fixedpoint::panel::{gemm_lut_panel, gemm_panel, gemm_panel_packed, WeightPanel};
+use lqr::fixedpoint::{gemm_f32, gemm_quantized_naive};
 use lqr::quant::{quantize_matrix, RegionSpec};
 use lqr::tensor::Tensor;
+use lqr::util::json::Json;
 use lqr::util::rng::Rng;
 
 fn gmacs(m: usize, k: usize, n: usize, secs: f64) -> f64 {
@@ -26,6 +34,59 @@ fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+struct Record {
+    case: &'static str,
+    kernel: String,
+    /// Seconds per call (serialized as milliseconds).
+    secs: f64,
+    gmacs: f64,
+    speedup_vs_f32: f64,
+    /// vs the seed naive general-region i8 path at the same activation bits
+    /// (0.0 when not applicable, e.g. the f32 / naive rows themselves).
+    speedup_vs_naive: f64,
+}
+
+fn print_row(r: &Record) {
+    println!(
+        "{:<34} {:>10.3} {:>10.2} {:>9.2}x {:>9}",
+        format!("{} {}", r.case, r.kernel),
+        r.secs * 1e3,
+        r.gmacs,
+        r.speedup_vs_f32,
+        if r.speedup_vs_naive > 0.0 {
+            format!("{:.2}x", r.speedup_vs_naive)
+        } else {
+            "-".to_string()
+        }
+    );
+}
+
+fn write_json(path: &str, threads: usize, iters: usize, records: &[Record]) {
+    let cases: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("case", Json::str(r.case)),
+                ("kernel", Json::str(r.kernel.clone())),
+                ("ms", Json::num(r.secs * 1e3)),
+                ("gmacs", Json::num(r.gmacs)),
+                ("speedup_vs_f32", Json::num(r.speedup_vs_f32)),
+                ("speedup_vs_naive", Json::num(r.speedup_vs_naive)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("gemm_micro")),
+        ("threads", Json::num(threads as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let iters: usize = std::env::var("LQR_BENCH_ITERS")
         .ok()
@@ -33,9 +94,13 @@ fn main() {
         .unwrap_or(5);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
     println!("gemm micro-bench (iters={iters}, threads={threads})");
-    println!("{:<28} {:>10} {:>10} {:>10}", "case", "ms", "GMAC/s", "vs f32");
+    println!(
+        "{:<34} {:>10} {:>10} {:>10} {:>9}",
+        "case", "ms", "GMAC/s", "vs f32", "vs naive"
+    );
 
     let mut rng = Rng::new(1);
+    let mut records: Vec<Record> = Vec::new();
     // Layer-shaped cases: (label, M, K, N) from the mini models' conv GEMMs.
     for &(label, m, k, n) in &[
         ("conv1 1024x75x32", 1024usize, 75usize, 32usize),
@@ -49,63 +114,128 @@ fn main() {
         let t_f32 = time(iters, || {
             std::hint::black_box(gemm_f32(&a, &w, threads));
         });
-        println!(
-            "{:<28} {:>10.3} {:>10.2} {:>10}",
-            format!("{label} f32"),
-            t_f32 * 1e3,
-            gmacs(m, k, n, t_f32),
-            "1.00x"
-        );
+        records.push(Record {
+            case: label,
+            kernel: "f32".into(),
+            secs: t_f32,
+            gmacs: gmacs(m, k, n, t_f32),
+            speedup_vs_f32: 1.0,
+            speedup_vs_naive: 0.0,
+        });
+        print_row(records.last().unwrap());
 
+        let wq = quantize_matrix(&w_t, 8, RegionSpec::PerRow);
+        let wpanel = WeightPanel::from_quantized(&wq);
         for bits in [8u8, 2] {
             let aq = quantize_matrix(&a, bits, RegionSpec::PerRow);
-            let wq = quantize_matrix(&w_t, 8, RegionSpec::PerRow);
-            let t_q = time(iters, || {
-                std::hint::black_box(gemm_quantized(&aq, &wq, threads));
+
+            // Seed baseline: scalar dot per (i, j, region).
+            let t_naive = time(iters, || {
+                std::hint::black_box(gemm_quantized_naive(&aq, &wq, threads));
             });
-            println!(
-                "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
-                format!("{label} i8(a{bits})"),
-                t_q * 1e3,
-                gmacs(m, k, n, t_q),
-                t_f32 / t_q
-            );
+            records.push(Record {
+                case: label,
+                kernel: format!("i8-naive(a{bits})"),
+                secs: t_naive,
+                gmacs: gmacs(m, k, n, t_naive),
+                speedup_vs_f32: t_f32 / t_naive,
+                speedup_vs_naive: 0.0,
+            });
+            print_row(records.last().unwrap());
+
+            // Panel core over a cached panel — the engine's steady state.
+            let t_panel = time(iters, || {
+                std::hint::black_box(gemm_panel(&aq, &wpanel, threads));
+            });
+            records.push(Record {
+                case: label,
+                kernel: format!("i8-panel(a{bits})"),
+                secs: t_panel,
+                gmacs: gmacs(m, k, n, t_panel),
+                speedup_vs_f32: t_f32 / t_panel,
+                speedup_vs_naive: t_naive / t_panel,
+            });
+            print_row(records.last().unwrap());
+
             if bits == 2 {
                 let t_lut = time(iters, || {
+                    std::hint::black_box(gemm_lut_panel(&aq, &wpanel, threads));
+                });
+                records.push(Record {
+                    case: label,
+                    kernel: "lut-panel(a2)".into(),
+                    secs: t_lut,
+                    gmacs: gmacs(m, k, n, t_lut),
+                    speedup_vs_f32: t_f32 / t_lut,
+                    speedup_vs_naive: t_naive / t_lut,
+                });
+                print_row(records.last().unwrap());
+                // Legacy entry point (panel built per call) for reference.
+                let t_lut_entry = time(iters, || {
                     std::hint::black_box(gemm_lut(&aq, &wq, threads));
                 });
-                println!(
-                    "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
-                    format!("{label} lut(a2)"),
-                    t_lut * 1e3,
-                    gmacs(m, k, n, t_lut),
-                    t_f32 / t_lut
-                );
-                let ap = PackedMatrix::from_quantized(&aq);
-                let wp = PackedMatrix::from_quantized(&wq);
-                let t_p = time(iters, || {
-                    std::hint::black_box(gemm_packed(&ap, &wp, threads));
+                records.push(Record {
+                    case: label,
+                    kernel: "lut(a2,prep incl)".into(),
+                    secs: t_lut_entry,
+                    gmacs: gmacs(m, k, n, t_lut_entry),
+                    speedup_vs_f32: t_f32 / t_lut_entry,
+                    speedup_vs_naive: t_naive / t_lut_entry,
                 });
-                println!(
-                    "{:<28} {:>10.3} {:>10.2} {:>9.2}x",
-                    format!("{label} packed(a2)"),
-                    t_p * 1e3,
-                    gmacs(m, k, n, t_p),
-                    t_f32 / t_p
-                );
+                print_row(records.last().unwrap());
+
+                let ap = PackedMatrix::from_quantized(&aq);
+                let wp_packed = WeightPanel::from_packed(&PackedMatrix::from_quantized(&wq));
+                let t_p = time(iters, || {
+                    std::hint::black_box(gemm_panel_packed(&ap, &wp_packed, threads));
+                });
+                records.push(Record {
+                    case: label,
+                    kernel: "packed-panel(a2)".into(),
+                    secs: t_p,
+                    gmacs: gmacs(m, k, n, t_p),
+                    speedup_vs_f32: t_f32 / t_p,
+                    speedup_vs_naive: t_naive / t_p,
+                });
+                print_row(records.last().unwrap());
             }
         }
 
-        // Runtime activation quantization cost (the paper's overhead term).
+        // One-off costs the engine amortizes: panel prep (cached per layer)
+        // and the runtime activation-quantization pass (per batch).
+        let t_prep = time(iters, || {
+            std::hint::black_box(WeightPanel::from_quantized(&wq));
+        });
+        records.push(Record {
+            case: label,
+            kernel: "panel-prep(w)".into(),
+            secs: t_prep,
+            gmacs: 0.0,
+            speedup_vs_f32: 0.0,
+            speedup_vs_naive: 0.0,
+        });
+        print_row(records.last().unwrap());
         let t_quant = time(iters, || {
             std::hint::black_box(quantize_matrix(&a, 8, RegionSpec::PerRow));
         });
         println!(
-            "{:<28} {:>10.3} {:>10} {:>10}",
+            "{:<34} {:>10.3} {:>10} {:>10} {:>9}",
             format!("{label} quantize(a)"),
             t_quant * 1e3,
             "-",
-            format!("{:.1}%", 100.0 * t_quant / t_f32)
+            format!("{:.1}%", 100.0 * t_quant / t_f32),
+            "-"
         );
+        records.push(Record {
+            case: label,
+            kernel: "quantize(a8)".into(),
+            secs: t_quant,
+            gmacs: 0.0,
+            speedup_vs_f32: 0.0,
+            speedup_vs_naive: 0.0,
+        });
     }
+
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
+    write_json(json_path, threads, iters, &records);
 }

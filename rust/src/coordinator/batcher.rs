@@ -20,13 +20,22 @@ pub enum FlushReason {
     Shutdown,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    #[error("queue full (capacity {0})")]
     QueueFull(usize),
-    #[error("coordinator shut down")]
     ShutDown,
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(cap) => write!(f, "queue full (capacity {cap})"),
+            SubmitError::ShutDown => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy)]

@@ -10,6 +10,14 @@
 //!                       + sw_jr*ma_ir*S_qw + len_r*ma_ir*mw_jr ]
 //! ```
 //!
+//! [`gemm_quantized`] runs on the shared packed weight-panel core
+//! ([`super::panel`]): the weight codes are widened once into `NR`-wide
+//! K-major tiles and the integer MACs run in an `MR`x`NR` register tile, for
+//! any regions-per-row and any K (the seed's `rpr == 1 && k <= 128` axpy
+//! special case is subsumed). [`gemm_quantized_naive`] preserves the seed's
+//! scalar dot-per-output formulation as the bit-exactness oracle and the
+//! perf baseline `benches/gemm_micro.rs` measures speedups against.
+//!
 //! Bit-exact vs the python oracle `quant.lq_matmul_reference` (pinned by
 //! `rust/tests/quant_parity.rs`) up to f32 summation order.
 
@@ -17,11 +25,31 @@ use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::scope_chunks;
 
-/// Compute `A_q (M,K) x W_q^T (N,K) -> (M,N)`.
+use super::panel::{gemm_panel, WeightPanel};
+
+/// Compute `A_q (M,K) x W_q^T (N,K) -> (M,N)` on the panel core.
 ///
 /// `wq` holds the weights transposed — row j is output channel j — matching
 /// the offline layout the paper uses (kernels quantized per region offline).
+/// The weight panel is built per call here; callers that reuse a weight
+/// matrix (every model layer) should build a [`WeightPanel`] once and call
+/// [`gemm_panel`] directly — `nn::forward::Engine` caches panels that way.
 pub fn gemm_quantized(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize) -> Tensor {
+    assert_eq!(aq.k, wq.k, "reduction dims differ: {} vs {}", aq.k, wq.k);
+    assert_eq!(
+        aq.group_len(),
+        wq.group_len(),
+        "operands must share the region size along K"
+    );
+    let wp = WeightPanel::from_quantized(wq);
+    gemm_panel(aq, &wp, threads)
+}
+
+/// The seed scalar formulation: one u8 dot product per `(i, j, region)`.
+///
+/// Kept as (a) the oracle the panel kernels are property-tested against and
+/// (b) the baseline `benches/gemm_micro.rs` reports panel speedups over.
+pub fn gemm_quantized_naive(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize) -> Tensor {
     assert_eq!(aq.k, wq.k, "reduction dims differ: {} vs {}", aq.k, wq.k);
     assert_eq!(
         aq.group_len(),
@@ -31,97 +59,32 @@ pub fn gemm_quantized(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize
     let m = aq.rows;
     let n = wq.rows;
     let k = aq.k;
-    let g = aq.group_len();
     let rpr = aq.regions_per_row();
     let mut out = vec![0.0f32; m * n];
 
-    // Fast path for the paper's default configuration (one region per row,
-    // i.e. kernel-sized regions): the integer GEMM runs axpy-style over an
-    // i32-widened W panel — no per-element reduction, so the compiler
-    // vectorizes the full N width — and the affine correction collapses to
-    // one vectorized pass per output row.
-    // Short reductions can't amortize the SIMD prologue of the dot-product
-    // formulation; the axpy path wins there. Long reductions prefer the
-    // dot path (pmaddubsw-style u8 reduction, no W-panel widening cost).
-    if rpr == 1 && k <= 128 {
-        return gemm_rpr1(aq, wq, threads, out);
-    }
-
     let out_ptr = SyncPtr(out.as_mut_ptr());
     scope_chunks(m, threads, |i0, i1| {
         let out_ptr = &out_ptr;
         for i in i0..i1 {
             // SAFETY: row i is written by exactly one chunk.
             let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-            let arow = &aq.codes[i * k..(i + 1) * k];
+            let arow = aq.row_codes(i);
+            let (sa_r, ma_r, sqa_r) = aq.affine_row(i);
             for (j, o) in orow.iter_mut().enumerate() {
-                let wrow = &wq.codes[j * k..(j + 1) * k];
+                let wrow = wq.row_codes(j);
+                let (sw_r, mw_r, sqw_r) = wq.affine_row(j);
                 let mut acc = 0.0f32;
                 for r in 0..rpr {
-                    let start = r * g;
-                    let end = ((r + 1) * g).min(k);
+                    let (start, end) = aq.region_bounds(r);
                     // Integer MAC over the region (the fixed-point datapath).
                     let qq = dot_u8(&arow[start..end], &wrow[start..end]);
-                    let sa = aq.scale(i, r);
-                    let ma = aq.min(i, r);
-                    let sw = wq.scale(j, r);
-                    let mw = wq.min(j, r);
-                    let s_qa = aq.code_sums[i * rpr + r];
-                    let s_qw = wq.code_sums[j * rpr + r];
                     let len = (end - start) as f32;
-                    acc += sa * sw * qq as f32 + sa * mw * s_qa + sw * ma * s_qw + len * ma * mw;
+                    acc += sa_r[r] * sw_r[r] * qq as f32
+                        + sa_r[r] * mw_r[r] * sqa_r[r]
+                        + sw_r[r] * ma_r[r] * sqw_r[r]
+                        + len * ma_r[r] * mw_r[r];
                 }
                 *o = acc;
-            }
-        }
-    });
-    Tensor::new(&[m, n], out)
-}
-
-/// rpr == 1 fast path: axpy-formulated integer GEMM + fused correction.
-fn gemm_rpr1(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize, mut out: Vec<f32>) -> Tensor {
-    let m = aq.rows;
-    let n = wq.rows;
-    let k = aq.k;
-    // Widen W^T (N, K) codes into a (K, N) i32 panel once per call.
-    let mut wpanel = vec![0i32; k * n];
-    for j in 0..n {
-        let wrow = &wq.codes[j * k..(j + 1) * k];
-        for (p, &c) in wrow.iter().enumerate() {
-            wpanel[p * n + j] = c as i32;
-        }
-    }
-    let out_ptr = SyncPtr(out.as_mut_ptr());
-    scope_chunks(m, threads, |i0, i1| {
-        let out_ptr = &out_ptr;
-        let mut acc = vec![0i32; n];
-        for i in i0..i1 {
-            // SAFETY: row i is written by exactly one chunk.
-            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-            let arow = &aq.codes[i * k..(i + 1) * k];
-            acc.fill(0);
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0 {
-                    continue; // ReLU-sparse activations quantize to code 0 often
-                }
-                let av = a as i32;
-                let wrow = &wpanel[p * n..(p + 1) * n];
-                for (dst, &w) in acc.iter_mut().zip(wrow) {
-                    *dst += av * w;
-                }
-            }
-            // Correction (eq. 7, single region): fused vectorized pass.
-            let sa = aq.scales[i];
-            let ma = aq.mins[i];
-            let s_qa = aq.code_sums[i];
-            let len = k as f32;
-            for (j, o) in orow.iter_mut().enumerate() {
-                let sw = wq.scales[j];
-                let mw = wq.mins[j];
-                *o = sa * sw * acc[j] as f32
-                    + sa * mw * s_qa
-                    + sw * ma * wq.code_sums[j]
-                    + len * ma * mw;
             }
         }
     });
@@ -208,6 +171,30 @@ mod tests {
         let exact = super::super::gemm_f32::gemm_naive(&a, &w.transpose2());
         let rel = got.max_abs_diff(&exact) / exact.max_abs();
         assert!(rel < 0.01, "8-bit LQ relative error {rel}");
+    }
+
+    #[test]
+    fn naive_matches_panel() {
+        // The seed formulation and the panel core are the same math; pin
+        // them together tightly (f32 association differs, hence the epsilon).
+        prop::check_named("gemm-naive-vs-panel", 0x18, 32, |rng, _| {
+            let m = rng.index(1, 20);
+            let n = rng.index(1, 40); // cross NR tile boundaries
+            let k = rng.index(1, 60);
+            let bits = prop::gen_bits(rng) as u8;
+            let region = RegionSpec::Size(rng.index(1, k + 1));
+            let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let aq = quantize_matrix(&a, bits, region);
+            let wq = quantize_matrix(&w, bits, region);
+            let want = gemm_quantized_naive(&aq, &wq, 1);
+            let got = gemm_quantized(&aq, &wq, 2);
+            assert!(
+                got.max_abs_diff(&want) <= 1e-5 * want.max_abs().max(1.0),
+                "m={m} n={n} k={k} bits={bits} diff={}",
+                got.max_abs_diff(&want)
+            );
+        });
     }
 
     #[test]

@@ -5,57 +5,28 @@
 //! [`crate::quant::lut`]): the per-region integer sum `S_qq` needs **zero**
 //! multiplies in the inner loop — the paper's Table 3 claim — and the affine
 //! correction adds the usual handful of per-region multiplies.
+//!
+//! Runs on the shared weight-panel core ([`super::panel`]): the weight codes
+//! are widened once at panel build, and bucketing covers an `NR`-wide tile
+//! of output channels per pass (the seed re-widened the full weight row and
+//! re-bucketed per `(i, j)` pair — `N`x more passes over the same bytes).
 
-use crate::quant::lut::bucketed_dot;
 use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
-use crate::util::threadpool::scope_chunks;
 
-use super::gemm_i8::SyncPtr;
+use super::panel::{gemm_lut_panel, WeightPanel};
 
 /// `A_q (M,K) x W_q^T (N,K) -> (M,N)` with the bucketed (LUT) inner loop.
 /// `aq.bits` must be <= 4. Numerically identical to `gemm_quantized`.
+///
+/// Builds the weight panel per call; layer-reusing callers should cache a
+/// [`WeightPanel`] and call [`gemm_lut_panel`] directly (the engine does).
 pub fn gemm_lut(aq: &QuantizedMatrix, wq: &QuantizedMatrix, threads: usize) -> Tensor {
     assert!(aq.bits <= 4, "LUT GEMM needs <= 4-bit activations, got {}", aq.bits);
     assert_eq!(aq.k, wq.k);
     assert_eq!(aq.group_len(), wq.group_len());
-    let (m, n, k) = (aq.rows, wq.rows, aq.k);
-    let g = aq.group_len();
-    let rpr = aq.regions_per_row();
-    let mut out = vec![0.0f32; m * n];
-
-    let out_ptr = SyncPtr(out.as_mut_ptr());
-    scope_chunks(m, threads, |i0, i1| {
-        let out_ptr = &out_ptr;
-        // Per-thread scratch: weight codes widened once per (j, region) pass.
-        let mut wbuf = vec![0i32; k];
-        for i in i0..i1 {
-            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-            let arow = &aq.codes[i * k..(i + 1) * k];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let wrow = &wq.codes[j * k..(j + 1) * k];
-                for (dst, &w) in wbuf.iter_mut().zip(wrow) {
-                    *dst = w as i32;
-                }
-                let mut acc = 0.0f32;
-                for r in 0..rpr {
-                    let start = r * g;
-                    let end = ((r + 1) * g).min(k);
-                    let qq = bucketed_dot(&arow[start..end], &wbuf[start..end], aq.bits);
-                    let sa = aq.scale(i, r);
-                    let ma = aq.min(i, r);
-                    let sw = wq.scale(j, r);
-                    let mw = wq.min(j, r);
-                    acc += sa * sw * qq as f32
-                        + sa * mw * aq.code_sums[i * rpr + r]
-                        + sw * ma * wq.code_sums[j * rpr + r]
-                        + (end - start) as f32 * ma * mw;
-                }
-                *o = acc;
-            }
-        }
-    });
-    Tensor::new(&[m, n], out)
+    let wp = WeightPanel::from_quantized(wq);
+    gemm_lut_panel(aq, &wp, threads)
 }
 
 #[cfg(test)]

@@ -3,15 +3,17 @@
 //! The paper's bandwidth argument (§III.C): SIMD/memory throughput scales
 //! inversely with operand width, so 2-bit codes move 16x more elements per
 //! load than f32. This kernel consumes [`crate::quant::codec::Packed`]
-//! streams directly, unpacking one 64-bit word at a time in registers —
-//! matching how an IoT-class core would stream packed weights from flash.
+//! streams — matching how an IoT-class core would stream packed weights from
+//! flash — and runs on the shared weight-panel core ([`super::panel`]):
+//! each weight stream is unpacked exactly **once** at panel build (the seed
+//! re-unpacked every weight row for every one of the M activation rows), and
+//! each activation stream unpacks once per GEMM into its row-block scratch.
 
 use crate::quant::codec::Packed;
 use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
-use crate::util::threadpool::scope_chunks;
 
-use super::gemm_i8::SyncPtr;
+use super::panel::{gemm_panel_packed, WeightPanel};
 
 /// A [`QuantizedMatrix`] with its codes bit-packed.
 #[derive(Debug, Clone)]
@@ -31,7 +33,7 @@ pub struct PackedMatrix {
 impl PackedMatrix {
     pub fn from_quantized(q: &QuantizedMatrix) -> PackedMatrix {
         let rows_packed = (0..q.rows)
-            .map(|i| crate::quant::codec::pack(&q.codes[i * q.k..(i + 1) * q.k], q.bits))
+            .map(|i| crate::quant::codec::pack(q.row_codes(i), q.bits))
             .collect();
         PackedMatrix {
             rows: q.rows,
@@ -54,48 +56,14 @@ impl PackedMatrix {
 
 /// `A_packed (M,K) x W_packed^T (N,K) -> (M,N)` with per-region correction.
 ///
-/// Unpacks codes on the fly into a per-row scratch buffer once per row pair
-/// panel (A row reused across all N columns), so unpack cost amortizes.
+/// Builds the weight panel (one unpack pass over W) per call; callers that
+/// reuse packed weights should build a [`WeightPanel`] via
+/// [`WeightPanel::from_packed`] once and call [`gemm_panel_packed`].
 pub fn gemm_packed(aq: &PackedMatrix, wq: &PackedMatrix, threads: usize) -> Tensor {
     assert_eq!(aq.k, wq.k);
     assert_eq!(aq.group, wq.group, "operands must share the region size");
-    let (m, n, k) = (aq.rows, wq.rows, aq.k);
-    let g = aq.group;
-    let rpr = aq.regions_per_row;
-    let mut out = vec![0.0f32; m * n];
-
-    let out_ptr = SyncPtr(out.as_mut_ptr());
-    scope_chunks(m, threads, |i0, i1| {
-        let out_ptr = &out_ptr;
-        let mut abuf = vec![0u8; k];
-        let mut wbuf = vec![0u8; k];
-        for i in i0..i1 {
-            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-            abuf.copy_from_slice(&crate::quant::codec::unpack(&aq.rows_packed[i]));
-            for (j, o) in orow.iter_mut().enumerate() {
-                wbuf.copy_from_slice(&crate::quant::codec::unpack(&wq.rows_packed[j]));
-                let mut acc = 0.0f32;
-                for r in 0..rpr {
-                    let start = r * g;
-                    let end = ((r + 1) * g).min(k);
-                    let mut qq: i32 = 0;
-                    for (a, w) in abuf[start..end].iter().zip(&wbuf[start..end]) {
-                        qq += (*a as i32) * (*w as i32);
-                    }
-                    let sa = aq.scales[i * rpr + r];
-                    let ma = aq.mins[i * rpr + r];
-                    let sw = wq.scales[j * rpr + r];
-                    let mw = wq.mins[j * rpr + r];
-                    acc += sa * sw * qq as f32
-                        + sa * mw * aq.code_sums[i * rpr + r]
-                        + sw * ma * wq.code_sums[j * rpr + r]
-                        + (end - start) as f32 * ma * mw;
-                }
-                *o = acc;
-            }
-        }
-    });
-    Tensor::new(&[m, n], out)
+    let wp = WeightPanel::from_packed(wq);
+    gemm_panel_packed(aq, &wp, threads)
 }
 
 #[cfg(test)]

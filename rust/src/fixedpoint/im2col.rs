@@ -25,17 +25,30 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, (usiz
         for oy in 0..ho {
             for ox in 0..wo {
                 let row = ((bi * ho + oy) * wo + ox) * patch;
+                // Horizontal clip shared by every (ci, ky): source columns
+                // are ix = ox*stride + kx - pad, valid for kx in
+                // [kx_lo, kx_hi). Interior positions clip to the full
+                // [0, k) span, so each (ci, ky) line is one memcpy; padded
+                // edge positions copy the clipped sub-span and leave the
+                // zero-initialized padding untouched.
+                let xbase = ox * stride;
+                let kx_lo = pad.saturating_sub(xbase);
+                let kx_hi = k.min((w + pad).saturating_sub(xbase));
+                if kx_lo >= kx_hi {
+                    continue; // patch entirely left/right of the image
+                }
+                let span = kx_hi - kx_lo;
+                let ix0 = xbase + kx_lo - pad;
                 for ci in 0..c {
+                    let plane = &xd[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
                     for ky in 0..k {
                         let iy = (oy * stride + ky) as isize - pad as isize;
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            let dst = row + (ci * k + ky) * k + kx;
-                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                                out[dst] =
-                                    xd[((bi * c + ci) * h + iy as usize) * w + ix as usize];
-                            }
+                        if iy < 0 || iy as usize >= h {
+                            continue; // vertical padding row stays zero
                         }
+                        let src = iy as usize * w + ix0;
+                        let dst = row + (ci * k + ky) * k + kx_lo;
+                        out[dst..dst + span].copy_from_slice(&plane[src..src + span]);
                     }
                 }
             }
@@ -131,6 +144,55 @@ mod tests {
         assert_eq!(conv_output_size(32, 5, 1, 2), 32);
         assert_eq!(conv_output_size(224, 11, 4, 0), 54); // AlexNet conv1 (paper Fig. 7)
         assert_eq!(conv_output_size(32, 2, 2, 0), 16);
+    }
+
+    /// Per-element reference (the seed's branchy formulation) — pins the
+    /// span-copy rewrite byte-for-byte, including heavy-padding clips.
+    fn im2col_reference(x: &Tensor, k: usize, stride: usize, pad: usize) -> Vec<f32> {
+        let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+        let ho = conv_output_size(h, k, stride, pad);
+        let wo = conv_output_size(w, k, stride, pad);
+        let patch = c * k * k;
+        let mut out = vec![0.0f32; b * ho * wo * patch];
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((bi * ho + oy) * wo + ox) * patch;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                    out[row + (ci * k + ky) * k + kx] = x.data()
+                                        [((bi * c + ci) * h + iy as usize) * w + ix as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn span_copy_matches_per_element_reference() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        // Includes pad >= k/2 and pad = k-1 cases where every border patch clips.
+        for &(c, h, k, stride, pad) in &[
+            (1usize, 4usize, 3usize, 1usize, 2usize),
+            (2, 6, 5, 2, 4),
+            (3, 7, 3, 3, 0),
+            (1, 5, 5, 1, 1),
+            (2, 8, 1, 1, 0),
+        ] {
+            let b = 2;
+            let x = Tensor::new(&[b, c, h, h], rng.normal_vec(b * c * h * h));
+            let (cols, _) = im2col(&x, k, stride, pad);
+            assert_eq!(cols.data(), &im2col_reference(&x, k, stride, pad)[..],
+                "c={c} h={h} k={k} s={stride} p={pad}");
+        }
     }
 
     #[test]

@@ -2,23 +2,39 @@
 //!
 //! The paper's Fig. 8 speedup comes from replacing the f32 GEMM (offloaded to
 //! MKL on the Edison board) with integer GEMMs over quantized operands. This
-//! module provides the same ladder on the host CPU:
+//! module provides the same ladder on the host CPU, and every quantized rung
+//! shares one packed weight-panel core ([`panel`]).
 //!
-//! - [`gemm_f32`]   — blocked, multi-threaded f32 baseline (the MKL stand-in).
-//! - [`gemm_i8`]    — eq. 7: integer accumulation over 8-bit codes with
-//!   per-region affine correction (the LQ hot path, any bits <= 8).
-//! - [`gemm_packed`] — the same pipeline reading *bit-packed* 4/2-bit code
-//!   streams (the paper's bandwidth claim: codes travel packed).
-//! - [`gemm_lut`]   — §V look-up-table GEMM: multiplies replaced by
-//!   table-indexed adds for <= 4-bit activations.
-//! - [`im2col`]     — conv lowering; layout matches `python/compile/model.py`
-//!   so one row = one receptive field = one LQ region.
+//! # The kernel ladder, and when each rung wins
+//!
+//! | kernel | operands | inner loop | wins when |
+//! |---|---|---|---|
+//! | [`gemm_f32`] | f32 | blocked f32 axpy | baseline (the MKL stand-in); accuracy reference |
+//! | [`gemm_quantized`] / [`panel::gemm_panel`] | u8 codes | `MR`x`NR` register tile of u8 x u8 -> i32 MACs | the default quantized path, any bits <= 8; ~4x the f32 element throughput per SIMD load |
+//! | [`gemm_lut`] / [`panel::gemm_lut_panel`] | <= 4-bit act codes | §V code bucketing: add-only pass + `2^bits - 2` multiplies per region-tile | multiply-starved targets (the FPGA CUs, MCU cores); on SIMD CPUs it trades multiplies for a data-dependent bucket index, so it wins on op *count*, not wall clock |
+//! | [`gemm_packed`] / [`panel::gemm_panel_packed`] | bit-packed streams | same integer tile after one unpack per stream | memory-bound shapes: codes travel packed (the §III.C bandwidth claim), unpack cost is O(M*K + N*K), amortized over O(M*N*K) MACs |
+//!
+//! # The shared panel core
+//!
+//! [`panel::WeightPanel`] widens / bit-unpacks weight codes **once** into
+//! N-tiles of [`panel::NR`] output channels stored K-major, with the
+//! per-region scales / mins / code-sums transposed alongside, K blocked on
+//! quantization-region boundaries (the panel layout matches the LQ
+//! granularity). All three quantized entry points run the same microkernel
+//! over that layout; build the panel once per weight matrix and the prep
+//! cost amortizes across every batch (`nn::forward::Engine` caches panels).
+//!
+//! - [`im2col`] — conv lowering; layout matches `python/compile/model.py`
+//!   so one row = one receptive field = one LQ region. Interior rows copy as
+//!   whole row spans (pad-free fast path); padded edges copy clipped spans.
 pub mod gemm_f32;
 pub mod gemm_i8;
 pub mod gemm_lut;
 pub mod gemm_packed;
 pub mod im2col;
+pub mod panel;
 
 pub use gemm_f32::gemm_f32;
-pub use gemm_i8::gemm_quantized;
+pub use gemm_i8::{gemm_quantized, gemm_quantized_naive};
 pub use im2col::{conv_output_size, im2col};
+pub use panel::{gemm_lut_panel, gemm_panel, gemm_panel_packed, WeightPanel};

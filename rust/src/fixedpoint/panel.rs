@@ -1,0 +1,438 @@
+//! Shared packed weight-panel GEMM core.
+//!
+//! Every quantized GEMM in the ladder (`gemm_quantized`, `gemm_lut`,
+//! `gemm_packed`) reduces to the same computation: an integer dot product
+//! over u8 codes per quantization region, followed by the eq. 7 affine
+//! correction. This module factors that computation into one cache-friendly
+//! core so the three entry points share a single hot loop:
+//!
+//! - [`WeightPanel`] widens / bit-unpacks the weight codes **once** into
+//!   N-tiles of [`NR`] output channels stored K-major (`[tile][p][jj]`), so
+//!   the microkernel reads one contiguous `NR`-wide line per reduction step.
+//!   K is blocked on quantization-region boundaries — the panel layout
+//!   matches the LQ granularity, which is what lets the per-region affine
+//!   correction vectorize. Scales / mins / code-sums are stored transposed
+//!   (`[tile][region][jj]`) for the same reason.
+//! - [`gemm_panel`] / [`gemm_panel_packed`] run a register-tiled
+//!   [`MR`]x[`NR`] microkernel: `MR * NR` i32 accumulators, u8 x u8 -> i32
+//!   multiply-accumulate over the region that LLVM lowers to widening SIMD
+//!   MACs. Arbitrary regions-per-row and odd K tails are handled by the
+//!   region loop itself (the tail region is just shorter).
+//! - [`gemm_lut_panel`] replaces the inner multiply with §V code bucketing,
+//!   bucketing a whole `NR`-wide tile per activation row per region instead
+//!   of re-widening the weight row for every `(i, j)` pair.
+//!
+//! Panels are built once per weight matrix and cached by the engine
+//! (`nn::forward::Engine`), so panel prep amortizes across batches.
+
+use crate::quant::codec;
+use crate::quant::lut::{bucket_panel_segment, collapse_buckets, MAX_CODES};
+use crate::quant::scheme::QuantizedMatrix;
+use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+
+use super::gemm_i8::SyncPtr;
+use super::gemm_packed::PackedMatrix;
+
+/// Microkernel width: output channels per weight tile (one cache line of
+/// i8 codes; 16 i32 accumulator lanes = one AVX-512 / two AVX2 registers).
+pub const NR: usize = 16;
+/// Microkernel height: activation rows processed together. MR * NR = 64
+/// i32 accumulators — comfortably register-resident at AVX2 widths.
+pub const MR: usize = 4;
+
+/// Weight codes + affine parameters repacked for the panel microkernel.
+///
+/// Built once per weight matrix (offline for deployed models); all three
+/// quantized GEMM entry points consume this representation.
+#[derive(Debug, Clone)]
+pub struct WeightPanel {
+    /// Output channels (rows of the source `W^T`, columns of the result).
+    pub n: usize,
+    /// Reduction length.
+    pub k: usize,
+    pub bits: u8,
+    /// Region length along K (tail region may be shorter).
+    pub group: usize,
+    /// Regions per row.
+    pub rpr: usize,
+    /// Widened codes, `tiles * k * NR`, layout `[tile][p][jj]` — the jj-th
+    /// column of tile `t` is output channel `t*NR + jj`. Channels past `n`
+    /// are zero padding.
+    codes: Vec<u8>,
+    /// Per-region scales, `tiles * rpr * NR`, layout `[tile][r][jj]`.
+    scales: Vec<f32>,
+    /// Per-region minimums, same layout.
+    mins: Vec<f32>,
+    /// Per-region code sums (the `S_qw` term of eq. 7), same layout.
+    code_sums: Vec<f32>,
+}
+
+impl WeightPanel {
+    /// Repack a quantized weight matrix (rows = output channels) into panels.
+    pub fn from_quantized(q: &QuantizedMatrix) -> WeightPanel {
+        let rpr = q.regions_per_row();
+        let mut p = WeightPanel::empty(q.rows, q.k, q.bits, q.group_len(), rpr);
+        for j in 0..q.rows {
+            p.fill_column(j, q.row_codes(j), &q.scales, &q.mins, &q.code_sums);
+        }
+        p
+    }
+
+    /// Repack a bit-packed weight matrix, unpacking each row exactly once.
+    pub fn from_packed(q: &PackedMatrix) -> WeightPanel {
+        let mut p = WeightPanel::empty(q.rows, q.k, q.bits, q.group, q.regions_per_row);
+        let mut rowbuf = vec![0u8; q.k];
+        for j in 0..q.rows {
+            codec::unpack_into(&q.rows_packed[j], &mut rowbuf);
+            p.fill_column(j, &rowbuf, &q.scales, &q.mins, &q.code_sums);
+        }
+        p
+    }
+
+    fn empty(n: usize, k: usize, bits: u8, group: usize, rpr: usize) -> WeightPanel {
+        let tiles = n.div_ceil(NR).max(1);
+        WeightPanel {
+            n,
+            k,
+            bits,
+            group,
+            rpr,
+            codes: vec![0u8; tiles * k * NR],
+            scales: vec![0.0f32; tiles * rpr * NR],
+            mins: vec![0.0f32; tiles * rpr * NR],
+            code_sums: vec![0.0f32; tiles * rpr * NR],
+        }
+    }
+
+    /// Scatter one output channel's codes + affine params into its tile.
+    fn fill_column(&mut self, j: usize, codes: &[u8], scales: &[f32], mins: &[f32], sums: &[f32]) {
+        let (t, jj) = (j / NR, j % NR);
+        let base = t * self.k * NR;
+        for (p, &c) in codes.iter().enumerate() {
+            self.codes[base + p * NR + jj] = c;
+        }
+        for r in 0..self.rpr {
+            let dst = (t * self.rpr + r) * NR + jj;
+            let src = j * self.rpr + r;
+            self.scales[dst] = scales[src];
+            self.mins[dst] = mins[src];
+            self.code_sums[dst] = sums[src];
+        }
+    }
+
+    /// Number of `NR`-wide tiles.
+    pub fn tiles(&self) -> usize {
+        self.n.div_ceil(NR).max(1)
+    }
+
+    /// Codes of tile `t`: `k * NR` bytes, `[p][jj]`.
+    #[inline]
+    pub fn tile_codes(&self, t: usize) -> &[u8] {
+        &self.codes[t * self.k * NR..(t + 1) * self.k * NR]
+    }
+
+    /// `(scales, mins, code_sums)` of tile `t`, region `r`: `NR`-wide lines.
+    #[inline]
+    pub fn tile_affine(&self, t: usize, r: usize) -> (&[f32], &[f32], &[f32]) {
+        let o = (t * self.rpr + r) * NR;
+        (&self.scales[o..o + NR], &self.mins[o..o + NR], &self.code_sums[o..o + NR])
+    }
+
+    /// Resident bytes of the prepared panel (codes + affine params).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 4 * (self.scales.len() + self.mins.len() + self.code_sums.len())
+    }
+
+    /// `(start, end)` bounds of region `r` along K.
+    #[inline]
+    pub fn region_bounds(&self, r: usize) -> (usize, usize) {
+        let start = r * self.group;
+        (start, ((r + 1) * self.group).min(self.k))
+    }
+}
+
+/// Activation-side view shared by the flat and bit-packed entry points.
+struct ASide<'a> {
+    rows: usize,
+    k: usize,
+    rpr: usize,
+    codes: ACodes<'a>,
+    scales: &'a [f32],
+    mins: &'a [f32],
+    code_sums: &'a [f32],
+}
+
+enum ACodes<'a> {
+    /// One code per byte, row-major (`QuantizedMatrix::codes`).
+    Flat(&'a [u8]),
+    /// One packed stream per row (`PackedMatrix::rows_packed`).
+    Bits(&'a [codec::Packed]),
+}
+
+impl ASide<'_> {
+    /// Materialize `rows` activation rows starting at `i0` into `dst`
+    /// (`rows * k` bytes, row-major). Packed streams unpack here, once per
+    /// row per GEMM — never per output column.
+    fn fill_rows(&self, i0: usize, rows: usize, dst: &mut [u8]) {
+        match self.codes {
+            ACodes::Flat(c) => {
+                dst[..rows * self.k].copy_from_slice(&c[i0 * self.k..(i0 + rows) * self.k]);
+            }
+            ACodes::Bits(streams) => {
+                for (r, s) in streams[i0..i0 + rows].iter().enumerate() {
+                    codec::unpack_into(s, &mut dst[r * self.k..(r + 1) * self.k]);
+                }
+            }
+        }
+    }
+}
+
+/// Register-tiled integer microkernel: accumulate
+/// `acc[mr][jj] += a[mr][p] * w[p][jj]` over one region segment.
+///
+/// `wseg` is the K-major tile slice for `p in start..end` (`len * NR`
+/// bytes). The jj loop is a fixed-width u8 x u8 -> i32 MAC that LLVM lowers
+/// to widening SIMD multiplies; products are at most `255 * 255 * len`,
+/// which fits i32 for any region shorter than 2^15 (all model layers here).
+#[inline]
+fn micro_kernel(
+    abuf: &[u8],
+    k: usize,
+    rows: usize,
+    start: usize,
+    end: usize,
+    wseg: &[u8],
+    acc: &mut [[i32; NR]; MR],
+) {
+    debug_assert_eq!(wseg.len(), (end - start) * NR);
+    for (pi, p) in (start..end).enumerate() {
+        let wline = &wseg[pi * NR..(pi + 1) * NR];
+        for mr in 0..rows {
+            let av = abuf[mr * k + p] as i32;
+            if av == 0 {
+                continue; // ReLU-sparse activations quantize to code 0 often
+            }
+            let lane = &mut acc[mr];
+            for (dst, &w) in lane.iter_mut().zip(wline) {
+                *dst += av * w as i32;
+            }
+        }
+    }
+}
+
+/// The shared panel GEMM: `A (M,K) x panel(W^T) -> (M,N)` with per-region
+/// affine correction. Parallel over `MR`-row blocks.
+fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize) -> Tensor {
+    assert_eq!(a.k, wp.k, "reduction dims differ: {} vs {}", a.k, wp.k);
+    assert_eq!(a.rpr, wp.rpr, "operands must share the region size along K");
+    let (m, n, k) = (a.rows, wp.n, a.k);
+    let rpr = wp.rpr;
+    let tiles = wp.tiles();
+    let mut out = vec![0.0f32; m * n];
+
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    let nblocks = m.div_ceil(MR);
+    scope_chunks(nblocks, threads, |b0, b1| {
+        let out_ptr = &out_ptr;
+        let mut abuf = vec![0u8; MR * k];
+        for blk in b0..b1 {
+            let i0 = blk * MR;
+            let rows = MR.min(m - i0);
+            a.fill_rows(i0, rows, &mut abuf);
+            // SAFETY: rows [i0, i0+rows) are written by exactly one chunk.
+            let oblock =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), rows * n) };
+            for t in 0..tiles {
+                let j0 = t * NR;
+                let nr_eff = NR.min(n - j0);
+                let tcodes = wp.tile_codes(t);
+                for r in 0..rpr {
+                    let (start, end) = wp.region_bounds(r);
+                    let lenf = (end - start) as f32;
+                    let mut acc = [[0i32; NR]; MR];
+                    micro_kernel(
+                        &abuf,
+                        k,
+                        rows,
+                        start,
+                        end,
+                        &tcodes[start * NR..end * NR],
+                        &mut acc,
+                    );
+                    // Eq. 7 correction, vectorized over the NR tile columns.
+                    let (sw, mw, sqw) = wp.tile_affine(t, r);
+                    for mr in 0..rows {
+                        let i = i0 + mr;
+                        let sa = a.scales[i * rpr + r];
+                        let ma = a.mins[i * rpr + r];
+                        let sqa = a.code_sums[i * rpr + r];
+                        let lane = &acc[mr];
+                        let orow = &mut oblock[mr * n + j0..mr * n + j0 + nr_eff];
+                        for jj in 0..nr_eff {
+                            orow[jj] += sa * sw[jj] * lane[jj] as f32
+                                + sa * mw[jj] * sqa
+                                + ma * sw[jj] * sqw[jj]
+                                + lenf * ma * mw[jj];
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+/// Panel GEMM over byte-per-code activations (`A_q (M,K) x W^T -> (M,N)`).
+pub fn gemm_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    assert_eq!(
+        aq.group_len(),
+        wp.group,
+        "operands must share the region size along K"
+    );
+    let a = ASide {
+        rows: aq.rows,
+        k: aq.k,
+        rpr: aq.regions_per_row(),
+        codes: ACodes::Flat(&aq.codes),
+        scales: &aq.scales,
+        mins: &aq.mins,
+        code_sums: &aq.code_sums,
+    };
+    gemm_panel_core(&a, wp, threads)
+}
+
+/// Panel GEMM over bit-packed activations: each activation row unpacks once
+/// per GEMM (in its row block), each weight row unpacked once at panel
+/// build — never inside the inner loop.
+pub fn gemm_panel_packed(aq: &PackedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    assert_eq!(aq.group, wp.group, "operands must share the region size along K");
+    let a = ASide {
+        rows: aq.rows,
+        k: aq.k,
+        rpr: aq.regions_per_row,
+        codes: ACodes::Bits(&aq.rows_packed),
+        scales: &aq.scales,
+        mins: &aq.mins,
+        code_sums: &aq.code_sums,
+    };
+    gemm_panel_core(&a, wp, threads)
+}
+
+/// §V LUT panel GEMM: multiply-free inner loop for <= 4-bit activations.
+///
+/// Buckets one `NR`-wide weight tile per `(row, region)` — a single add-only
+/// pass over the tile — then collapses buckets with `2^bits - 2` multiplies
+/// per lane. Numerically identical to [`gemm_panel`].
+pub fn gemm_lut_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    assert!(aq.bits <= 4, "LUT GEMM needs <= 4-bit activations, got {}", aq.bits);
+    assert_eq!(aq.k, wp.k, "reduction dims differ: {} vs {}", aq.k, wp.k);
+    assert_eq!(
+        aq.group_len(),
+        wp.group,
+        "operands must share the region size along K"
+    );
+    let (m, n) = (aq.rows, wp.n);
+    let rpr = wp.rpr;
+    assert_eq!(aq.regions_per_row(), rpr, "operands must share the region size along K");
+    let levels = 1usize << aq.bits;
+    let tiles = wp.tiles();
+    let mut out = vec![0.0f32; m * n];
+
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    scope_chunks(m, threads, |i0, i1| {
+        let out_ptr = &out_ptr;
+        for i in i0..i1 {
+            let arow = aq.row_codes(i);
+            // SAFETY: row i is written by exactly one chunk.
+            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            for t in 0..tiles {
+                let j0 = t * NR;
+                let nr_eff = NR.min(n - j0);
+                let tcodes = wp.tile_codes(t);
+                for r in 0..rpr {
+                    let (start, end) = wp.region_bounds(r);
+                    let lenf = (end - start) as f32;
+                    let mut buckets = [[0i32; NR]; MAX_CODES];
+                    bucket_panel_segment::<NR>(
+                        &arow[start..end],
+                        &tcodes[start * NR..end * NR],
+                        &mut buckets,
+                    );
+                    let qq = collapse_buckets::<NR>(&buckets, levels);
+                    let (sw, mw, sqw) = wp.tile_affine(t, r);
+                    let sa = aq.scale(i, r);
+                    let ma = aq.min(i, r);
+                    let sqa = aq.code_sums[i * rpr + r];
+                    let oseg = &mut orow[j0..j0 + nr_eff];
+                    for jj in 0..nr_eff {
+                        oseg[jj] += sa * sw[jj] * qq[jj] as f32
+                            + sa * mw[jj] * sqa
+                            + ma * sw[jj] * sqw[jj]
+                            + lenf * ma * mw[jj];
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_matrix, RegionSpec};
+    use crate::util::prop;
+
+    #[test]
+    fn panel_roundtrips_columns() {
+        // Every (channel, position) code and every (channel, region) affine
+        // triple must land in the right tile slot.
+        prop::check_named("panel-layout", 0x9A41, 24, |rng, _| {
+            let n = rng.index(1, 40);
+            let k = rng.index(1, 30);
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let region = RegionSpec::Size(rng.index(1, k + 1));
+            let q = quantize_matrix(&w, 8, region);
+            let p = WeightPanel::from_quantized(&q);
+            let rpr = q.regions_per_row();
+            assert_eq!(p.rpr, rpr);
+            for j in 0..n {
+                let (t, jj) = (j / NR, j % NR);
+                let tc = p.tile_codes(t);
+                for pos in 0..k {
+                    assert_eq!(tc[pos * NR + jj], q.codes[j * k + pos], "code ({j},{pos})");
+                }
+                for r in 0..rpr {
+                    let (sw, mw, sqw) = p.tile_affine(t, r);
+                    assert_eq!(sw[jj], q.scale(j, r));
+                    assert_eq!(mw[jj], q.min(j, r));
+                    assert_eq!(sqw[jj], q.code_sums[j * rpr + r]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packed_panel_equals_quantized_panel() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let w = Tensor::new(&[13, 29], rng.normal_vec(13 * 29));
+        for bits in [2u8, 4, 8] {
+            let q = quantize_matrix(&w, bits, RegionSpec::Size(7));
+            let from_q = WeightPanel::from_quantized(&q);
+            let from_p = WeightPanel::from_packed(&PackedMatrix::from_quantized(&q));
+            assert_eq!(from_q.codes, from_p.codes, "bits={bits}");
+            assert_eq!(from_q.scales, from_p.scales);
+            assert_eq!(from_q.code_sums, from_p.code_sums);
+        }
+    }
+
+    #[test]
+    fn region_bounds_cover_k_with_tail() {
+        let q = quantize_matrix(&Tensor::zeros(&[1, 75]), 8, RegionSpec::Size(16));
+        let p = WeightPanel::from_quantized(&q);
+        assert_eq!(p.rpr, 5);
+        assert_eq!(p.region_bounds(0), (0, 16));
+        assert_eq!(p.region_bounds(4), (64, 75)); // short tail region
+    }
+}

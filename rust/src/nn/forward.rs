@@ -18,7 +18,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fixedpoint::{gemm_f32, gemm_lut::gemm_lut, gemm_quantized, im2col};
+use crate::fixedpoint::{gemm_f32, gemm_lut_panel, gemm_panel, im2col, WeightPanel};
 use crate::fixedpoint::im2col::col2im_output;
 use crate::nn::arch::{Arch, Layer};
 use crate::quant::{quantize_matrix, QuantizedMatrix, RegionSpec};
@@ -67,8 +67,12 @@ impl Precision {
 pub struct Engine {
     pub arch: Arch,
     params: HashMap<String, Tensor>,
-    /// Offline weight quantization cache keyed by (layer, bits_w, region).
-    wq_cache: std::sync::Mutex<HashMap<(String, u8, String), std::sync::Arc<QuantizedMatrix>>>,
+    /// Offline weight preparation cache keyed by (layer, bits_w, region):
+    /// the shared GEMM weight panel (`fixedpoint::panel`), built once per
+    /// config and reused across every forward pass, so panel prep amortizes
+    /// over batches and sweep images. The intermediate `QuantizedMatrix` is
+    /// not retained — the panel carries everything the kernels consume.
+    wq_cache: std::sync::Mutex<HashMap<(String, u8, String), std::sync::Arc<WeightPanel>>>,
     pub threads: usize,
 }
 
@@ -162,7 +166,7 @@ impl Engine {
         let by_name: HashMap<String, crate::quant::serialize::LqzEntry> =
             entries.into_iter().map(|e| (e.name.clone(), e)).collect();
         let mut params = HashMap::new();
-        let mut cache: HashMap<(String, u8, String), std::sync::Arc<QuantizedMatrix>> =
+        let mut cache: HashMap<(String, u8, String), std::sync::Arc<WeightPanel>> =
             HashMap::new();
         for l in &arch.layers {
             let wname = format!("{}.w", l.name());
@@ -182,7 +186,7 @@ impl Engine {
             params.insert(bname, b.reshape(&[b.len()]).unwrap());
             cache.insert(
                 (l.name().to_string(), we.matrix.bits, we.matrix.region.to_string()),
-                std::sync::Arc::new(we.matrix.clone()),
+                std::sync::Arc::new(WeightPanel::from_quantized(&we.matrix)),
             );
         }
         let eng = Engine {
@@ -195,13 +199,14 @@ impl Engine {
         Ok(eng)
     }
 
-    /// Offline weight quantization (cached): rows = output channels.
+    /// Offline weight preparation (cached): quantize (rows = output
+    /// channels) and repack into the shared GEMM weight panel.
     fn quantized_weights(
         &self,
         layer: &Layer,
         bits_w: u8,
         region: RegionSpec,
-    ) -> std::sync::Arc<QuantizedMatrix> {
+    ) -> std::sync::Arc<WeightPanel> {
         let key = (layer.name().to_string(), bits_w, region.to_string());
         if let Some(q) = self.wq_cache.lock().unwrap().get(&key) {
             return q.clone();
@@ -218,9 +223,26 @@ impl Engine {
             RegionSpec::PerTensor => RegionSpec::PerRow,
             r => r,
         };
-        let q = std::sync::Arc::new(quantize_matrix(&wmat, bits_w, wregion));
-        self.wq_cache.lock().unwrap().insert(key, q.clone());
-        q
+        let wq = quantize_matrix(&wmat, bits_w, wregion);
+        let panel = std::sync::Arc::new(WeightPanel::from_quantized(&wq));
+        self.wq_cache.lock().unwrap().insert(key, panel.clone());
+        panel
+    }
+
+    /// The cached weight panel for a layer, if a forward pass (or `.lqz`
+    /// load) has prepared it. Exposed so tests can pin cache reuse by
+    /// pointer identity.
+    pub fn cached_panel(
+        &self,
+        layer_name: &str,
+        bits_w: u8,
+        region: RegionSpec,
+    ) -> Option<std::sync::Arc<WeightPanel>> {
+        // Same key scheme as `quantized_weights`: the *requested* region
+        // (PerTensor requests still quantize weights PerRow, but cache under
+        // the requested key).
+        let key = (layer_name.to_string(), bits_w, region.to_string());
+        self.wq_cache.lock().unwrap().get(&key).cloned()
     }
 
     /// Quantize activations at runtime per the scheme.
@@ -252,12 +274,14 @@ impl Engine {
                 gemm_f32(a, &wmat, self.threads)
             }
             Precision::Quant { scheme, bits_a, bits_w, region, lut } => {
-                let wq = self.quantized_weights(layer, bits_w, region);
+                let wp = self.quantized_weights(layer, bits_w, region);
                 let aq = Self::quantize_acts(a, scheme, bits_a, region);
+                // Both paths consume the cached panel — weight prep cost is
+                // paid once per (layer, bits, region), not per GEMM call.
                 if lut {
-                    gemm_lut(&aq, &wq, self.threads)
+                    gemm_lut_panel(&aq, &wp, self.threads)
                 } else {
-                    gemm_quantized(&aq, &wq, self.threads)
+                    gemm_panel(&aq, &wp, self.threads)
                 }
             }
         };

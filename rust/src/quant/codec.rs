@@ -35,10 +35,18 @@ pub fn pack(codes: &[u8], bits: u8) -> Packed {
 
 /// Unpack back to one-code-per-byte.
 pub fn unpack(p: &Packed) -> Vec<u8> {
+    let mut out = vec![0u8; p.len];
+    unpack_into(p, &mut out);
+    out
+}
+
+/// Unpack into a caller-provided buffer (first `p.len` bytes) — the
+/// allocation-free variant the panel GEMM scratch buffers use.
+pub fn unpack_into(p: &Packed, out: &mut [u8]) {
+    assert!(out.len() >= p.len, "unpack_into: buffer {} < {} codes", out.len(), p.len);
     let bits = p.bits as usize;
     let mask = ((1u16 << bits) - 1) as u64;
-    let mut out = vec![0u8; p.len];
-    for (i, o) in out.iter_mut().enumerate() {
+    for (i, o) in out[..p.len].iter_mut().enumerate() {
         let bit = i * bits;
         let word = bit / 64;
         let off = bit % 64;
@@ -48,7 +56,6 @@ pub fn unpack(p: &Packed) -> Vec<u8> {
         }
         *o = (v & mask) as u8;
     }
-    out
 }
 
 impl Packed {

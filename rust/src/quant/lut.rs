@@ -38,6 +38,50 @@ pub fn bucketed_dot(qa: &[u8], qw: &[i32], bits: u8) -> i64 {
     acc
 }
 
+/// Upper bound on `2^bits` for the LUT scheme (bits <= 4): bucket arrays are
+/// sized statically so they live in registers / L1.
+pub const MAX_CODES: usize = 16;
+
+/// Tile-wide code bucketing for the panel GEMM (`fixedpoint::panel`).
+///
+/// One add-only pass over a region segment of an `NR`-wide K-major weight
+/// tile (`wseg[p][jj]`, `qa.len() * NR` bytes): each weight line is added
+/// into the bucket of its paired activation code. Together with
+/// [`collapse_buckets`] this equals [`bucketed_dot`] per tile column, but
+/// buckets `NR` output channels in a single pass instead of one `(i, j)`
+/// pair at a time.
+pub fn bucket_panel_segment<const NR: usize>(
+    qa: &[u8],
+    wseg: &[u8],
+    buckets: &mut [[i32; NR]; MAX_CODES],
+) {
+    debug_assert_eq!(qa.len() * NR, wseg.len());
+    for (pi, &c) in qa.iter().enumerate() {
+        let wline = &wseg[pi * NR..(pi + 1) * NR];
+        let bucket = &mut buckets[c as usize];
+        for (dst, &w) in bucket.iter_mut().zip(wline) {
+            *dst += w as i32; // add-only inner loop (paper Fig. 5 datapath)
+        }
+    }
+}
+
+/// Collapse buckets to the integer dot product per lane:
+/// `qq[jj] = sum_c c * buckets[c][jj]` — `2^bits - 2` multiplies per lane
+/// (c = 0 contributes nothing, c = 1 is free in hardware).
+pub fn collapse_buckets<const NR: usize>(
+    buckets: &[[i32; NR]; MAX_CODES],
+    levels: usize,
+) -> [i32; NR] {
+    let mut qq = [0i32; NR];
+    for (c, bucket) in buckets.iter().enumerate().take(levels).skip(1) {
+        let cf = c as i32;
+        for (dst, &b) in qq.iter_mut().zip(bucket) {
+            *dst += cf * b;
+        }
+    }
+    qq
+}
+
 /// Offline weight table: `table[k][c] = qw[k] * c` for c in [0, 2^bits).
 /// Row-major `(k, levels)`; built once per weight region, reused across all
 /// activations that contract with it.
@@ -121,5 +165,28 @@ mod tests {
     #[test]
     fn empty_dot() {
         assert_eq!(bucketed_dot(&[], &[], 2), 0);
+    }
+
+    #[test]
+    fn tile_bucketing_equals_bucketed_dot_per_column() {
+        const NR: usize = 8;
+        prop::check("lut-tile-bucketing", 0x1009, |rng, _| {
+            let bits = [1u8, 2, 4][rng.below(3) as usize];
+            let len = rng.index(0, 120);
+            let qa: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+            // K-major NR-wide tile of u8 weight codes.
+            let wseg: Vec<u8> = (0..len * NR).map(|_| rng.below(256) as u8).collect();
+            let mut buckets = [[0i32; NR]; MAX_CODES];
+            bucket_panel_segment::<NR>(&qa, &wseg, &mut buckets);
+            let qq = collapse_buckets::<NR>(&buckets, 1 << bits);
+            for jj in 0..NR {
+                let col: Vec<i32> = (0..len).map(|p| wseg[p * NR + jj] as i32).collect();
+                assert_eq!(
+                    qq[jj] as i64,
+                    bucketed_dot(&qa, &col, bits),
+                    "bits={bits} len={len} jj={jj}"
+                );
+            }
+        });
     }
 }

@@ -54,6 +54,28 @@ impl QuantizedMatrix {
         self.mins[row * self.regions_per_row() + r]
     }
 
+    /// Codes of row `i` (`k` bytes) — panel-building / kernel accessor.
+    #[inline]
+    pub fn row_codes(&self, i: usize) -> &[u8] {
+        &self.codes[i * self.k..(i + 1) * self.k]
+    }
+
+    /// `(scales, mins, code_sums)` of row `i`: `regions_per_row`-long slices,
+    /// region-indexed — the affine triple the panel correction consumes.
+    #[inline]
+    pub fn affine_row(&self, i: usize) -> (&[f32], &[f32], &[f32]) {
+        let rpr = self.regions_per_row();
+        let o = i * rpr;
+        (&self.scales[o..o + rpr], &self.mins[o..o + rpr], &self.code_sums[o..o + rpr])
+    }
+
+    /// `(start, end)` bounds of region `r` along K (tail may be short).
+    #[inline]
+    pub fn region_bounds(&self, r: usize) -> (usize, usize) {
+        let g = self.group_len();
+        (r * g, ((r + 1) * g).min(self.k))
+    }
+
     /// Reconstruct the f32 tensor (error <= s_k/2 per element).
     pub fn dequantize(&self) -> Tensor {
         let g = self.group_len();

@@ -4,10 +4,13 @@
 //! - [`ThreadPool`]: long-lived workers consuming boxed jobs from a shared
 //!   queue — used by the coordinator's worker runtime.
 //! - [`scope_chunks`]: data-parallel helper that splits an index range into
-//!   contiguous chunks across threads — used by the fixed-point GEMMs.
+//!   contiguous chunks across threads — used by the fixed-point GEMMs. Runs
+//!   on a lazily-initialized process-wide [`shared_pool`], so per-GEMM cost
+//!   is a queue push per chunk instead of an OS thread spawn per chunk
+//!   (spawn latency dominated small conv-layer GEMMs in the seed).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -18,11 +21,13 @@ enum Msg {
 }
 
 /// A classic shared-queue thread pool. Jobs are executed FIFO; `join` blocks
-/// until every submitted job has finished.
+/// until every submitted job has finished. Workers survive panicking jobs
+/// (the panic is swallowed after the pending count is settled), so one bad
+/// job can't wedge later submitters.
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
     handles: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
 }
 
 impl ThreadPool {
@@ -30,7 +35,7 @@ impl ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let handles = (0..threads)
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -39,7 +44,11 @@ impl ThreadPool {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Msg::Run(job)) => {
-                            job();
+                            // Keep the worker alive across panicking jobs;
+                            // scoped callers re-raise on their own thread.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
                             let (lock, cv) = &*pending;
                             let mut p = lock.lock().unwrap();
                             *p -= 1;
@@ -90,26 +99,92 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Split `0..n` into `threads` contiguous chunks and run `f(start, end)` on
-/// scoped threads. `f` runs on the caller thread when `threads <= 1` or the
-/// range is tiny — keeping the hot path allocation-free for small work.
+/// The process-wide data-parallel pool backing [`scope_chunks`], created on
+/// first use and sized to the machine. Never dropped (workers park on an
+/// empty queue). Coordinator worker pools are separate `ThreadPool`
+/// instances, so a worker blocking in `scope_chunks` cannot starve itself.
+pub fn shared_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n.max(1))
+    })
+}
+
+/// Completion latch for one `scope_chunks` call: counts finished chunks and
+/// keeps the first panic payload so the caller can re-raise it with its
+/// original message (property-test counterexamples stay readable).
+struct ScopeLatch {
+    state: Mutex<(usize, Option<Box<dyn std::any::Any + Send>>)>,
+    cv: Condvar,
+}
+
+impl ScopeLatch {
+    fn chunk_done(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.0 += 1;
+        if s.1.is_none() {
+            s.1 = panic;
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, jobs: usize) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut s = self.state.lock().unwrap();
+        while s.0 < jobs {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.1.take()
+    }
+}
+
+/// Split `0..n` into up to `threads` contiguous chunks and run `f(start,
+/// end)` on the shared pool, blocking until every chunk completes. `f` runs
+/// on the caller thread when `threads <= 1` or the range is tiny — keeping
+/// the hot path allocation-free for small work. The caller always executes
+/// the first chunk itself (one fewer queue round-trip, and progress is
+/// guaranteed even when the pool is saturated by other scopes).
+///
+/// `f` must not recursively call `scope_chunks` (the kernels never do):
+/// nested scopes could occupy every worker with blocked parents.
 pub fn scope_chunks(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
     if threads <= 1 || n < 2 * threads {
         f(0, n);
         return;
     }
+    let pool = shared_pool();
+    let threads = threads.min(pool.size()).max(1);
     let chunk = n.div_ceil(threads);
-    thread::scope(|s| {
-        for t in 0..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(start, end));
-        }
-    });
+    let njobs = n.div_ceil(chunk) - 1; // chunks handed to the pool (not chunk 0)
+    if njobs == 0 {
+        f(0, n);
+        return;
+    }
+
+    let latch = Arc::new(ScopeLatch { state: Mutex::new((0, None)), cv: Condvar::new() });
+    let fref: &(dyn Fn(usize, usize) + Sync) = &f;
+    // SAFETY: the latch wait below does not return until every submitted
+    // chunk has run to completion (or panicked), so the borrow of `f` (and
+    // everything it captures) strictly outlives the forged 'static jobs.
+    let fjob: &'static (dyn Fn(usize, usize) + Sync) = unsafe { std::mem::transmute(fref) };
+    for t in 1..=njobs {
+        let start = t * chunk;
+        let end = ((t + 1) * chunk).min(n);
+        let latch = Arc::clone(&latch);
+        pool.execute(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fjob(start, end)));
+            latch.chunk_done(r.err());
+        });
+    }
+    // Caller thread works too: chunk 0 runs here, not behind the queue.
+    let r0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, chunk.min(n))));
+    let worker_panic = latch.wait(njobs);
+    if let Err(p) = r0 {
+        std::panic::resume_unwind(p);
+    }
+    if let Some(p) = worker_panic {
+        std::panic::resume_unwind(p);
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +222,21 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.execute(|| panic!("job panic"));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
     fn scope_chunks_covers_range() {
         let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
         scope_chunks(100, 7, |s, e| {
@@ -164,5 +254,63 @@ mod tests {
             sum.fetch_add(e - s, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scope_chunks_reuses_shared_pool() {
+        // Back-to-back scoped calls must not leave pending work behind and
+        // must keep covering their ranges exactly once (pool reuse).
+        for round in 0..20 {
+            let n = 64 + round;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            scope_chunks(n, 4, |s, e| {
+                for i in s..e {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_scopes_do_not_interfere() {
+        // Several threads sharing the pool at once: each scope's latch is
+        // private, so completions must not cross wires.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                thread::spawn(|| {
+                    let hits: Vec<AtomicUsize> = (0..200).map(|_| AtomicUsize::new(0)).collect();
+                    scope_chunks(200, 3, |s, e| {
+                        for i in s..e {
+                            hits[i].fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap());
+        }
+    }
+
+    #[test]
+    fn scope_chunks_propagates_worker_panic() {
+        if shared_pool().size() < 2 {
+            return; // single-core host: everything runs inline on the caller
+        }
+        let caught = std::panic::catch_unwind(|| {
+            scope_chunks(100, 4, |s, _e| {
+                if s > 0 {
+                    panic!("chunk failure s={s}");
+                }
+            });
+        });
+        let payload = caught.expect_err("worker panic must surface to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("chunk failure"), "original payload preserved, got {msg}");
     }
 }

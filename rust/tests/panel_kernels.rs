@@ -1,0 +1,183 @@
+//! Property tests pinning the shared weight-panel GEMM core bit-close to the
+//! seed's naive general-region formulation, across every axis the panel
+//! layout complicates: multiple regions per row, odd K tails (K not a
+//! multiple of the region or the NR tile), bit widths 1/2/4/8, thread counts
+//! 1/3, and N crossing tile boundaries. Plus the engine-level regression
+//! that prepared panels are cached (pointer identity across forward passes).
+
+use std::collections::HashMap;
+
+use lqr::fixedpoint::gemm_packed::PackedMatrix;
+use lqr::fixedpoint::{
+    gemm_lut_panel, gemm_panel, gemm_panel_packed, gemm_quantized_naive, WeightPanel,
+};
+use lqr::nn::forward::Scheme;
+use lqr::nn::{Arch, Engine, Layer, Precision};
+use lqr::quant::{quantize_matrix, RegionSpec};
+use lqr::tensor::Tensor;
+use lqr::util::prop;
+use lqr::util::rng::Rng;
+
+/// Random shapes that deliberately stress panel edges: M crossing MR blocks,
+/// N crossing NR tiles, K with short tail regions.
+fn gen_case(rng: &mut Rng) -> (usize, usize, usize, RegionSpec) {
+    let m = rng.index(1, 22);
+    let n = rng.index(1, 52);
+    let k = rng.index(1, 90);
+    let region = match rng.below(4) {
+        0 => RegionSpec::PerRow,
+        1 => RegionSpec::PerTensor,
+        // Sizes that rarely divide K: forces rpr > 1 with a ragged tail.
+        _ => RegionSpec::Size(rng.index(1, k + 1)),
+    };
+    (m, n, k, region)
+}
+
+fn rel_close(got: &Tensor, want: &Tensor, ctx: &str) {
+    let tol = 1e-5 * want.max_abs().max(1.0);
+    assert!(
+        got.max_abs_diff(want) <= tol,
+        "{ctx}: diff {} > tol {tol}",
+        got.max_abs_diff(want)
+    );
+}
+
+#[test]
+fn panel_gemm_matches_naive_oracle() {
+    prop::check_named("panel-vs-naive", 0xBEE5, 80, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = [1u8, 2, 4, 8][rng.below(4) as usize];
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits, region);
+        let wq = quantize_matrix(&w, bits, region);
+        let want = gemm_quantized_naive(&aq, &wq, 1);
+        let wp = WeightPanel::from_quantized(&wq);
+        for threads in [1usize, 3] {
+            let got = gemm_panel(&aq, &wp, threads);
+            let ctx = format!("m={m} n={n} k={k} bits={bits} region={region} threads={threads}");
+            rel_close(&got, &want, &ctx);
+        }
+    });
+}
+
+#[test]
+fn packed_panel_matches_naive_oracle() {
+    prop::check_named("packed-panel-vs-naive", 0xBEE6, 60, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = [2u8, 4, 8][rng.below(3) as usize];
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits, region);
+        let wq = quantize_matrix(&w, bits, region);
+        let want = gemm_quantized_naive(&aq, &wq, 1);
+        let ap = PackedMatrix::from_quantized(&aq);
+        let wp = WeightPanel::from_packed(&PackedMatrix::from_quantized(&wq));
+        for threads in [1usize, 3] {
+            let got = gemm_panel_packed(&ap, &wp, threads);
+            let ctx =
+                format!("packed m={m} n={n} k={k} bits={bits} region={region} threads={threads}");
+            rel_close(&got, &want, &ctx);
+        }
+    });
+}
+
+#[test]
+fn lut_panel_matches_naive_oracle() {
+    prop::check_named("lut-panel-vs-naive", 0xBEE7, 60, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = [1u8, 2, 4][rng.below(3) as usize];
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits, region);
+        let wq = quantize_matrix(&w, 8, region); // paper: weights stay 8-bit
+        let want = gemm_quantized_naive(&aq, &wq, 1);
+        let wp = WeightPanel::from_quantized(&wq);
+        for threads in [1usize, 3] {
+            let got = gemm_lut_panel(&aq, &wp, threads);
+            let ctx =
+                format!("lut m={m} n={n} k={k} bits={bits} region={region} threads={threads}");
+            rel_close(&got, &want, &ctx);
+        }
+    });
+}
+
+fn tiny_engine(seed: u64) -> Engine {
+    let arch = Arch {
+        name: "tiny",
+        input: (2, 8, 8),
+        num_classes: 4,
+        layers: vec![
+            Layer::Conv {
+                name: "c1", cin: 2, cout: 4, k: 3, stride: 1, pad: 1, groups: 1, pool: true,
+            },
+            Layer::Fc { name: "f1", cin: 4 * 4 * 4, cout: 4, relu: false },
+        ],
+    };
+    arch.validate().unwrap();
+    let mut rng = Rng::new(seed);
+    let mut params = HashMap::new();
+    for l in &arch.layers {
+        let (wshape, blen): (Vec<usize>, usize) = match *l {
+            Layer::Conv { cin, cout, k, .. } => (vec![cout, cin, k, k], cout),
+            Layer::Fc { cin, cout, .. } => (vec![cin, cout], cout),
+        };
+        let n: usize = wshape.iter().product();
+        params.insert(format!("{}.w", l.name()), Tensor::new(&wshape, rng.normal_vec(n)));
+        params.insert(format!("{}.b", l.name()), Tensor::new(&[blen], rng.normal_vec(blen)));
+    }
+    Engine::from_params(arch, params).unwrap()
+}
+
+#[test]
+fn engine_reuses_cached_panel_across_forward_passes() {
+    let eng = tiny_engine(21);
+    let mut rng = Rng::new(22);
+    let x = Tensor::new(&[2, 2, 8, 8], rng.uniform_vec(2 * 2 * 8 * 8, 0.0, 1.0));
+    let precision = Precision::lq(8);
+
+    assert!(
+        eng.cached_panel("c1", 8, RegionSpec::PerRow).is_none(),
+        "no panel before the first forward pass"
+    );
+    let y1 = eng.forward(&x, precision);
+    let p1 = eng
+        .cached_panel("c1", 8, RegionSpec::PerRow)
+        .expect("first forward pass must populate the panel cache");
+    let y2 = eng.forward(&x, precision);
+    let p2 = eng
+        .cached_panel("c1", 8, RegionSpec::PerRow)
+        .expect("panel cache must survive the second pass");
+    // The regression: the second pass reuses the prepared panel (pointer
+    // identity), instead of re-widening the weights per call.
+    assert!(std::sync::Arc::ptr_eq(&p1, &p2), "panel was rebuilt between passes");
+    assert_eq!(y1.data(), y2.data(), "cached panel must not change numerics");
+
+    // Different quantization config -> different panel.
+    let lq4 = Precision::Quant {
+        scheme: Scheme::Lq,
+        bits_a: 4,
+        bits_w: 4,
+        region: RegionSpec::PerRow,
+        lut: false,
+    };
+    eng.forward(&x, lq4);
+    let p4 = eng.cached_panel("c1", 4, RegionSpec::PerRow).expect("4-bit panel cached");
+    assert!(!std::sync::Arc::ptr_eq(&p1, &p4));
+}
+
+#[test]
+fn engine_lut_and_integer_paths_agree_on_panels() {
+    let eng = tiny_engine(31);
+    let mut rng = Rng::new(32);
+    let x = Tensor::new(&[2, 2, 8, 8], rng.uniform_vec(2 * 2 * 8 * 8, 0.0, 1.0));
+    let base = Precision::Quant {
+        scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::Size(9), lut: false,
+    };
+    let with_lut = Precision::Quant {
+        scheme: Scheme::Lq, bits_a: 2, bits_w: 8, region: RegionSpec::Size(9), lut: true,
+    };
+    let a = eng.forward(&x, base);
+    let b = eng.forward(&x, with_lut);
+    assert!(a.max_abs_diff(&b) <= 1e-4 * a.max_abs().max(1.0));
+}
