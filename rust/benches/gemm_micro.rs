@@ -7,15 +7,24 @@
 //!
 //! Besides the table on stdout, writes `BENCH_gemm.json` at the repo root
 //! so the perf trajectory is machine-readable across PRs: one record per
-//! (case, kernel) with ms, GMAC/s, speedup vs the blocked f32 baseline and
-//! speedup vs the seed's naive general-region i8 path.
+//! (case, kernel) with ms, GMAC/s, speedup vs the blocked f32 baseline,
+//! speedup vs the seed's naive general-region i8 path, and (for the panel
+//! rows) speedup of the dispatched SIMD kernel over the forced-scalar one.
+//! The header records the detected ISA and the dispatcher's selected kernel
+//! so results are comparable across hosts. A `conv-fwd` case times the full
+//! engine conv path (fused im2col quantization) against the f32 engine.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use lqr::fixedpoint::gemm_lut::gemm_lut;
 use lqr::fixedpoint::gemm_packed::PackedMatrix;
-use lqr::fixedpoint::panel::{gemm_lut_panel, gemm_panel, gemm_panel_packed, WeightPanel};
+use lqr::fixedpoint::panel::{
+    gemm_lut_panel, gemm_panel, gemm_panel_packed, gemm_panel_with, WeightPanel,
+};
+use lqr::fixedpoint::simd;
 use lqr::fixedpoint::{gemm_f32, gemm_quantized_naive};
+use lqr::nn::{Arch, Engine, Layer, Precision};
 use lqr::quant::{quantize_matrix, RegionSpec};
 use lqr::tensor::Tensor;
 use lqr::util::json::Json;
@@ -37,6 +46,8 @@ fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
 struct Record {
     case: &'static str,
     kernel: String,
+    /// Which inner-loop implementation ran ("-" where not applicable).
+    impl_name: String,
     /// Seconds per call (serialized as milliseconds).
     secs: f64,
     gmacs: f64,
@@ -44,6 +55,8 @@ struct Record {
     /// vs the seed naive general-region i8 path at the same activation bits
     /// (0.0 when not applicable, e.g. the f32 / naive rows themselves).
     speedup_vs_naive: f64,
+    /// Dispatched-SIMD vs forced-scalar panel kernel (0.0 when n/a).
+    speedup_vs_scalar: f64,
 }
 
 fn print_row(r: &Record) {
@@ -68,10 +81,12 @@ fn write_json(path: &str, threads: usize, iters: usize, records: &[Record]) {
             Json::obj(vec![
                 ("case", Json::str(r.case)),
                 ("kernel", Json::str(r.kernel.clone())),
+                ("impl", Json::str(r.impl_name.clone())),
                 ("ms", Json::num(r.secs * 1e3)),
                 ("gmacs", Json::num(r.gmacs)),
                 ("speedup_vs_f32", Json::num(r.speedup_vs_f32)),
                 ("speedup_vs_naive", Json::num(r.speedup_vs_naive)),
+                ("speedup_vs_scalar", Json::num(r.speedup_vs_scalar)),
             ])
         })
         .collect();
@@ -79,6 +94,8 @@ fn write_json(path: &str, threads: usize, iters: usize, records: &[Record]) {
         ("bench", Json::str("gemm_micro")),
         ("threads", Json::num(threads as f64)),
         ("iters", Json::num(iters as f64)),
+        ("isa_detected", Json::str(simd::detected_isa())),
+        ("simd_kernel", Json::str(simd::active().name)),
         ("cases", Json::Arr(cases)),
     ]);
     match std::fs::write(path, doc.to_string()) {
@@ -117,10 +134,12 @@ fn main() {
         records.push(Record {
             case: label,
             kernel: "f32".into(),
+            impl_name: "-".into(),
             secs: t_f32,
             gmacs: gmacs(m, k, n, t_f32),
             speedup_vs_f32: 1.0,
             speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
         });
         print_row(records.last().unwrap());
 
@@ -136,26 +155,62 @@ fn main() {
             records.push(Record {
                 case: label,
                 kernel: format!("i8-naive(a{bits})"),
+                impl_name: "-".into(),
                 secs: t_naive,
                 gmacs: gmacs(m, k, n, t_naive),
                 speedup_vs_f32: t_f32 / t_naive,
                 speedup_vs_naive: 0.0,
+                speedup_vs_scalar: 0.0,
             });
             print_row(records.last().unwrap());
 
-            // Panel core over a cached panel — the engine's steady state.
+            // Forced-scalar panel: the portable dispatch arm, measured so
+            // the SIMD speedup below is machine-readable.
+            let t_scalar = time(iters, || {
+                std::hint::black_box(gemm_panel_with(&aq, &wpanel, threads, simd::scalar_kernel()));
+            });
+            records.push(Record {
+                case: label,
+                kernel: format!("i8-panel-scalar(a{bits})"),
+                impl_name: "scalar".into(),
+                secs: t_scalar,
+                gmacs: gmacs(m, k, n, t_scalar),
+                speedup_vs_f32: t_f32 / t_scalar,
+                speedup_vs_naive: t_naive / t_scalar,
+                speedup_vs_scalar: 0.0,
+            });
+            print_row(records.last().unwrap());
+
+            // Panel core over a cached panel — the engine's steady state,
+            // on the dispatched SIMD kernel.
             let t_panel = time(iters, || {
                 std::hint::black_box(gemm_panel(&aq, &wpanel, threads));
             });
             records.push(Record {
                 case: label,
                 kernel: format!("i8-panel(a{bits})"),
+                impl_name: simd::active().name.into(),
                 secs: t_panel,
                 gmacs: gmacs(m, k, n, t_panel),
                 speedup_vs_f32: t_f32 / t_panel,
                 speedup_vs_naive: t_naive / t_panel,
+                speedup_vs_scalar: t_scalar / t_panel,
             });
             print_row(records.last().unwrap());
+
+            // The headline comparison row: dispatched SIMD vs forced scalar,
+            // ratio-only so aggregators don't double-count the panel timing
+            // (ms/gmacs live on the i8-panel rows above).
+            records.push(Record {
+                case: label,
+                kernel: format!("simd-vs-scalar(a{bits})"),
+                impl_name: simd::active().name.into(),
+                secs: 0.0,
+                gmacs: 0.0,
+                speedup_vs_f32: 0.0,
+                speedup_vs_naive: 0.0,
+                speedup_vs_scalar: t_scalar / t_panel,
+            });
 
             if bits == 2 {
                 let t_lut = time(iters, || {
@@ -164,10 +219,12 @@ fn main() {
                 records.push(Record {
                     case: label,
                     kernel: "lut-panel(a2)".into(),
+                    impl_name: simd::active().name.into(),
                     secs: t_lut,
                     gmacs: gmacs(m, k, n, t_lut),
                     speedup_vs_f32: t_f32 / t_lut,
                     speedup_vs_naive: t_naive / t_lut,
+                    speedup_vs_scalar: 0.0,
                 });
                 print_row(records.last().unwrap());
                 // Legacy entry point (panel built per call) for reference.
@@ -177,10 +234,12 @@ fn main() {
                 records.push(Record {
                     case: label,
                     kernel: "lut(a2,prep incl)".into(),
+                    impl_name: simd::active().name.into(),
                     secs: t_lut_entry,
                     gmacs: gmacs(m, k, n, t_lut_entry),
                     speedup_vs_f32: t_f32 / t_lut_entry,
                     speedup_vs_naive: t_naive / t_lut_entry,
+                    speedup_vs_scalar: 0.0,
                 });
                 print_row(records.last().unwrap());
 
@@ -192,10 +251,12 @@ fn main() {
                 records.push(Record {
                     case: label,
                     kernel: "packed-panel(a2)".into(),
+                    impl_name: simd::active().name.into(),
                     secs: t_p,
                     gmacs: gmacs(m, k, n, t_p),
                     speedup_vs_f32: t_f32 / t_p,
                     speedup_vs_naive: t_naive / t_p,
+                    speedup_vs_scalar: 0.0,
                 });
                 print_row(records.last().unwrap());
             }
@@ -209,10 +270,12 @@ fn main() {
         records.push(Record {
             case: label,
             kernel: "panel-prep(w)".into(),
+            impl_name: "-".into(),
             secs: t_prep,
             gmacs: 0.0,
             speedup_vs_f32: 0.0,
             speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
         });
         print_row(records.last().unwrap());
         let t_quant = time(iters, || {
@@ -229,11 +292,64 @@ fn main() {
         records.push(Record {
             case: label,
             kernel: "quantize(a8)".into(),
+            impl_name: "-".into(),
             secs: t_quant,
             gmacs: 0.0,
             speedup_vs_f32: 0.0,
             speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
         });
+    }
+
+    // Conv forward path: the engine at LQ-8 (fused im2col quantization — no
+    // f32 patch matrix on this path) vs the f32 engine baseline.
+    {
+        let arch = Arch::minialexnet();
+        let mut params = HashMap::new();
+        for l in &arch.layers {
+            let (wshape, blen): (Vec<usize>, usize) = match *l {
+                Layer::Conv { cin, cout, k, .. } => (vec![cout, cin, k, k], cout),
+                Layer::Fc { cin, cout, .. } => (vec![cin, cout], cout),
+            };
+            let nn: usize = wshape.iter().product();
+            params.insert(
+                format!("{}.w", l.name()),
+                Tensor::new(&wshape, rng.normal_vec(nn).iter().map(|v| v * 0.1).collect()),
+            );
+            params.insert(format!("{}.b", l.name()), Tensor::new(&[blen], rng.normal_vec(blen)));
+        }
+        let eng = Engine::from_params(arch, params).expect("bench engine");
+        let batch = 8usize;
+        let x = Tensor::new(&[batch, 3, 32, 32], rng.uniform_vec(batch * 3 * 32 * 32, 0.0, 1.0));
+        let label = "conv-fwd minialexnet b8";
+        let t_fwd_f32 = time(iters, || {
+            std::hint::black_box(eng.forward(&x, Precision::F32));
+        });
+        records.push(Record {
+            case: label,
+            kernel: "engine-f32".into(),
+            impl_name: "-".into(),
+            secs: t_fwd_f32,
+            gmacs: 0.0,
+            speedup_vs_f32: 1.0,
+            speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
+        });
+        print_row(records.last().unwrap());
+        let t_fwd_lq8 = time(iters, || {
+            std::hint::black_box(eng.forward(&x, Precision::lq(8)));
+        });
+        records.push(Record {
+            case: label,
+            kernel: "engine-lq8(fused-im2col)".into(),
+            impl_name: simd::active().name.into(),
+            secs: t_fwd_lq8,
+            gmacs: 0.0,
+            speedup_vs_f32: t_fwd_f32 / t_fwd_lq8,
+            speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
+        });
+        print_row(records.last().unwrap());
     }
 
     let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");

@@ -12,11 +12,13 @@
 //!
 //! [`gemm_quantized`] runs on the shared packed weight-panel core
 //! ([`super::panel`]): the weight codes are widened once into `NR`-wide
-//! K-major tiles and the integer MACs run in an `MR`x`NR` register tile, for
-//! any regions-per-row and any K (the seed's `rpr == 1 && k <= 128` axpy
-//! special case is subsumed). [`gemm_quantized_naive`] preserves the seed's
-//! scalar dot-per-output formulation as the bit-exactness oracle and the
-//! perf baseline `benches/gemm_micro.rs` measures speedups against.
+//! K-major tiles and the integer MACs run in an `MR`x`NR` register tile
+//! whose implementation the SIMD dispatcher ([`super::simd`]) selects at
+//! runtime (AVX2 / AVX-512-VNNI / portable scalar), for any regions-per-row
+//! and any K (the seed's `rpr == 1 && k <= 128` axpy special case is
+//! subsumed). [`gemm_quantized_naive`] preserves the seed's scalar
+//! dot-per-output formulation as the bit-exactness oracle and the perf
+//! baseline `benches/gemm_micro.rs` measures speedups against.
 //!
 //! Bit-exact vs the python oracle `quant.lq_matmul_reference` (pinned by
 //! `rust/tests/quant_parity.rs`) up to f32 summation order.

@@ -10,6 +10,8 @@
 //! are widened once at panel build, and bucketing covers an `NR`-wide tile
 //! of output channels per pass (the seed re-widened the full weight row and
 //! re-bucketed per `(i, j)` pair — `N`x more passes over the same bytes).
+//! The bucketing pass itself dispatches through [`super::simd`] (AVX2
+//! widening adds where available, portable otherwise).
 
 use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;

@@ -7,7 +7,9 @@
 //! flash — and runs on the shared weight-panel core ([`super::panel`]):
 //! each weight stream is unpacked exactly **once** at panel build (the seed
 //! re-unpacked every weight row for every one of the M activation rows), and
-//! each activation stream unpacks once per GEMM into its row-block scratch.
+//! each activation stream unpacks once per GEMM into its M-block scratch,
+//! after which the dispatched SIMD microkernel ([`super::simd`]) runs the
+//! same integer tile as the flat path.
 
 use crate::quant::codec::Packed;
 use crate::quant::scheme::QuantizedMatrix;

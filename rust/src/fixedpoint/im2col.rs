@@ -5,11 +5,55 @@
 //! row therefore spans exactly one "kernel-sized" LQ region (the paper's
 //! default region choice in §VI.D: 11x11x3 = 363 for AlexNet conv1).
 
+use crate::quant::scheme::{encode_region, QuantizedMatrix};
+use crate::quant::RegionSpec;
 use crate::tensor::Tensor;
 
 /// Output spatial size for a conv dimension.
 pub fn conv_output_size(h: usize, k: usize, stride: usize, pad: usize) -> usize {
     (h + 2 * pad - k) / stride + 1
+}
+
+/// Visit every contiguous source line of one receptive field: calls
+/// `emit(patch_off, src)` for each clipped (ci, ky) row-span that lands
+/// inside the image, in patch order. Positions not visited are implicit
+/// zero padding.
+///
+/// The horizontal clip is shared by every (ci, ky): source columns are
+/// `ix = ox*stride + kx - pad`, valid for kx in `[kx_lo, kx_hi)`. Interior
+/// positions clip to the full `[0, k)` span, so each (ci, ky) line is one
+/// memcpy-able slice; padded edge positions yield the clipped sub-span.
+#[inline]
+fn for_each_row_span(
+    xd: &[f32],
+    (c, h, w): (usize, usize, usize),
+    k: usize,
+    stride: usize,
+    pad: usize,
+    bi: usize,
+    oy: usize,
+    ox: usize,
+    mut emit: impl FnMut(usize, &[f32]),
+) {
+    let xbase = ox * stride;
+    let kx_lo = pad.saturating_sub(xbase);
+    let kx_hi = k.min((w + pad).saturating_sub(xbase));
+    if kx_lo >= kx_hi {
+        return; // patch entirely left/right of the image
+    }
+    let span = kx_hi - kx_lo;
+    let ix0 = xbase + kx_lo - pad;
+    for ci in 0..c {
+        let plane = &xd[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+        for ky in 0..k {
+            let iy = (oy * stride + ky) as isize - pad as isize;
+            if iy < 0 || iy as usize >= h {
+                continue; // vertical padding row stays zero
+            }
+            let src = iy as usize * w + ix0;
+            emit((ci * k + ky) * k + kx_lo, &plane[src..src + span]);
+        }
+    }
 }
 
 /// Lower `(B,C,H,W)` to the `(B*Ho*Wo, C*k*k)` patch matrix.
@@ -25,50 +69,177 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, (usiz
         for oy in 0..ho {
             for ox in 0..wo {
                 let row = ((bi * ho + oy) * wo + ox) * patch;
-                // Horizontal clip shared by every (ci, ky): source columns
-                // are ix = ox*stride + kx - pad, valid for kx in
-                // [kx_lo, kx_hi). Interior positions clip to the full
-                // [0, k) span, so each (ci, ky) line is one memcpy; padded
-                // edge positions copy the clipped sub-span and leave the
-                // zero-initialized padding untouched.
-                let xbase = ox * stride;
-                let kx_lo = pad.saturating_sub(xbase);
-                let kx_hi = k.min((w + pad).saturating_sub(xbase));
-                if kx_lo >= kx_hi {
-                    continue; // patch entirely left/right of the image
-                }
-                let span = kx_hi - kx_lo;
-                let ix0 = xbase + kx_lo - pad;
-                for ci in 0..c {
-                    let plane = &xd[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        if iy < 0 || iy as usize >= h {
-                            continue; // vertical padding row stays zero
-                        }
-                        let src = iy as usize * w + ix0;
-                        let dst = row + (ci * k + ky) * k + kx_lo;
-                        out[dst..dst + span].copy_from_slice(&plane[src..src + span]);
-                    }
-                }
+                for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |dst, src| {
+                    out[row + dst..row + dst + src.len()].copy_from_slice(src);
+                });
             }
         }
     }
     (Tensor::new(&[b * ho * wo, patch], out), (b, ho, wo))
 }
 
-/// Fold a `(B*Ho*Wo, O)` GEMM result back to NCHW `(B, O, Ho, Wo)`.
-pub fn col2im_output(y: &Tensor, b: usize, ho: usize, wo: usize) -> Tensor {
-    assert_eq!(y.rank(), 2);
-    assert_eq!(y.dim(0), b * ho * wo);
-    let o = y.dim(1);
-    let mut out = vec![0.0f32; b * o * ho * wo];
+/// Fused conv lowering + activation quantization: the quantized-path
+/// replacement for `im2col` followed by `quantize_matrix`.
+///
+/// Per-region min/max folds ride along the clipped row-span copies into a
+/// patch-sized scratch row (padding zeros are folded in from the per-region
+/// written counts, never stored and re-read from a full matrix), then u8
+/// codes are emitted straight into the activation code buffer the panel
+/// GEMM consumes. The `(B*Ho*Wo, C*k*k)` f32 patch matrix never exists —
+/// only one `C*k*k` scratch row per pass, which stays L1-resident. Output is
+/// bit-identical to the unfused pipeline (both paths share
+/// `quant::scheme::encode_region`; pinned by `rust/tests/panel_kernels.rs`).
+///
+/// `RegionSpec::PerTensor` (the DQ scheme) needs the global min/max before
+/// any code can be emitted; that runs as a copy-free prepass over the same
+/// span geometry — still no patch matrix.
+pub fn im2col_quantized(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    bits: u8,
+    region: RegionSpec,
+) -> (QuantizedMatrix, (usize, usize, usize)) {
+    assert_eq!(x.rank(), 4, "im2col needs NCHW, got {:?}", x.shape());
+    assert!((1..=8).contains(&bits), "bits must be 1..=8, got {bits}");
+    let (b, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let ho = conv_output_size(h, k, stride, pad);
+    let wo = conv_output_size(w, k, stride, pad);
+    let patch = c * k * k;
+    let rows = b * ho * wo;
+    let g = region.group_len(patch);
+    let rpr = region.regions_per_row(patch);
+    let levels = ((1u32 << bits) - 1) as f32;
+    let xd = x.data();
+
+    // DQ prepass: global min/max folded over the source spans directly (no
+    // writes at all), padding zeros accounted once via the written count.
+    let (global_min, global_max) = if region.per_tensor() {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut written = 0usize;
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |_, src| {
+                        for &v in src {
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                        written += src.len();
+                    });
+                }
+            }
+        }
+        if written < rows * patch {
+            mn = mn.min(0.0);
+            mx = mx.max(0.0);
+        }
+        (mn, mx)
+    } else {
+        (0.0, 0.0)
+    };
+
+    let mut codes = vec![0u8; rows * patch];
+    let mut scales = vec![0.0f32; rows * rpr];
+    let mut mins = vec![0.0f32; rows * rpr];
+    let mut code_sums = vec![0.0f32; rows * rpr];
+
+    let mut scratch = vec![0.0f32; patch];
+    let mut rmn = vec![f32::INFINITY; rpr];
+    let mut rmx = vec![f32::NEG_INFINITY; rpr];
+    let mut rcount = vec![0usize; rpr];
+
     for bi in 0..b {
         for oy in 0..ho {
             for ox in 0..wo {
                 let row = (bi * ho + oy) * wo + ox;
-                for oc in 0..o {
-                    out[((bi * o + oc) * ho + oy) * wo + ox] = y.at2(row, oc);
+                scratch.fill(0.0);
+                rmn.fill(f32::INFINITY);
+                rmx.fill(f32::NEG_INFINITY);
+                rcount.fill(0);
+                for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |dst, src| {
+                    scratch[dst..dst + src.len()].copy_from_slice(src);
+                    if region.per_tensor() {
+                        return; // DQ uses the global prepass min/max
+                    }
+                    // Fold min/max into each region the span overlaps while
+                    // the line is hot.
+                    let mut off = dst;
+                    let mut rem = src;
+                    while !rem.is_empty() {
+                        let r = off / g;
+                        let take = (((r + 1) * g).min(patch) - off).min(rem.len());
+                        let (seg, rest) = rem.split_at(take);
+                        let (mut mn, mut mx) = (rmn[r], rmx[r]);
+                        for &v in seg {
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                        rmn[r] = mn;
+                        rmx[r] = mx;
+                        rcount[r] += take;
+                        off += take;
+                        rem = rest;
+                    }
+                });
+                let crow = &mut codes[row * patch..(row + 1) * patch];
+                for r in 0..rpr {
+                    let start = r * g;
+                    let end = ((r + 1) * g).min(patch);
+                    let (mn, mx) = if region.per_tensor() {
+                        (global_min, global_max)
+                    } else {
+                        let (mut mn, mut mx) = (rmn[r], rmx[r]);
+                        if rcount[r] < end - start {
+                            // Region contains padding zeros.
+                            mn = mn.min(0.0);
+                            mx = mx.max(0.0);
+                        }
+                        (mn, mx)
+                    };
+                    let idx = row * rpr + r;
+                    let (s, sum) =
+                        encode_region(&scratch[start..end], mn, mx, levels, &mut crow[start..end]);
+                    scales[idx] = s;
+                    mins[idx] = mn;
+                    code_sums[idx] = sum;
+                }
+            }
+        }
+    }
+    (
+        QuantizedMatrix { rows, k: patch, bits, region, codes, scales, mins, code_sums },
+        (b, ho, wo),
+    )
+}
+
+/// Fold a `(B*Ho*Wo, O)` GEMM result back to NCHW `(B, O, Ho, Wo)`.
+///
+/// A blocked `TB`x`TB` transpose per image: the inner copy walks `y` rows
+/// so every source cache line is consumed whole, instead of the seed's
+/// per-element `at2` column walk (this runs right after every conv GEMM).
+pub fn col2im_output(y: &Tensor, b: usize, ho: usize, wo: usize) -> Tensor {
+    assert_eq!(y.rank(), 2);
+    assert_eq!(y.dim(0), b * ho * wo);
+    let o = y.dim(1);
+    let hw = ho * wo;
+    let yd = y.data();
+    let mut out = vec![0.0f32; b * o * hw];
+    const TB: usize = 32;
+    for bi in 0..b {
+        let src = &yd[bi * hw * o..(bi + 1) * hw * o];
+        let dst = &mut out[bi * o * hw..(bi + 1) * o * hw];
+        for p0 in (0..hw).step_by(TB) {
+            let p1 = (p0 + TB).min(hw);
+            for c0 in (0..o).step_by(TB) {
+                let c1 = (c0 + TB).min(o);
+                for p in p0..p1 {
+                    let row = &src[p * o + c0..p * o + c1];
+                    for (ci, &v) in row.iter().enumerate() {
+                        dst[(c0 + ci) * hw + p] = v;
+                    }
                 }
             }
         }
@@ -192,6 +363,31 @@ mod tests {
             let (cols, _) = im2col(&x, k, stride, pad);
             assert_eq!(cols.data(), &im2col_reference(&x, k, stride, pad)[..],
                 "c={c} h={h} k={k} s={stride} p={pad}");
+        }
+    }
+
+    #[test]
+    fn blocked_col2im_matches_per_element_reference() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        // Shapes crossing the TB=32 tile edge in both dimensions.
+        for &(b, o, ho, wo) in &[(1usize, 3usize, 2usize, 2usize), (2, 33, 5, 7), (1, 8, 6, 6), (3, 40, 9, 4)] {
+            let y = Tensor::new(&[b * ho * wo, o], rng.normal_vec(b * ho * wo * o));
+            let got = col2im_output(&y, b, ho, wo);
+            assert_eq!(got.shape(), &[b, o, ho, wo]);
+            for bi in 0..b {
+                for oc in 0..o {
+                    for oy in 0..ho {
+                        for ox in 0..wo {
+                            let row = (bi * ho + oy) * wo + ox;
+                            assert_eq!(
+                                got.data()[((bi * o + oc) * ho + oy) * wo + ox],
+                                y.at2(row, oc),
+                                "b={bi} oc={oc} oy={oy} ox={ox}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

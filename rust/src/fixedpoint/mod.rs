@@ -10,8 +10,8 @@
 //! | kernel | operands | inner loop | wins when |
 //! |---|---|---|---|
 //! | [`gemm_f32`] | f32 | blocked f32 axpy | baseline (the MKL stand-in); accuracy reference |
-//! | [`gemm_quantized`] / [`panel::gemm_panel`] | u8 codes | `MR`x`NR` register tile of u8 x u8 -> i32 MACs | the default quantized path, any bits <= 8; ~4x the f32 element throughput per SIMD load |
-//! | [`gemm_lut`] / [`panel::gemm_lut_panel`] | <= 4-bit act codes | §V code bucketing: add-only pass + `2^bits - 2` multiplies per region-tile | multiply-starved targets (the FPGA CUs, MCU cores); on SIMD CPUs it trades multiplies for a data-dependent bucket index, so it wins on op *count*, not wall clock |
+//! | [`gemm_quantized`] / [`panel::gemm_panel`] | u8 codes | dispatched `MR`x`NR` integer tile ([`simd`]): AVX2 `madd`, AVX-512 `vpdpbusd`, or the portable scalar MAC | the default quantized path, any bits <= 8; ~4x the f32 element throughput per SIMD load |
+//! | [`gemm_lut`] / [`panel::gemm_lut_panel`] | <= 4-bit act codes | §V code bucketing (dispatched): add-only pass + `2^bits - 2` multiplies per region-tile | multiply-starved targets (the FPGA CUs, MCU cores); on SIMD CPUs it trades multiplies for a data-dependent bucket index, so it wins on op *count*, not wall clock |
 //! | [`gemm_packed`] / [`panel::gemm_panel_packed`] | bit-packed streams | same integer tile after one unpack per stream | memory-bound shapes: codes travel packed (the §III.C bandwidth claim), unpack cost is O(M*K + N*K), amortized over O(M*N*K) MACs |
 //!
 //! # The shared panel core
@@ -23,18 +23,39 @@
 //! granularity). All three quantized entry points run the same microkernel
 //! over that layout; build the panel once per weight matrix and the prep
 //! cost amortizes across every batch (`nn::forward::Engine` caches panels).
+//! The outer loops run an M-block x N-tile schedule so weight tiles stay
+//! L2-resident across a whole block of activation rows.
 //!
-//! - [`im2col`] — conv lowering; layout matches `python/compile/model.py`
+//! # SIMD dispatch
+//!
+//! [`simd`] selects the microkernel implementation **once per process** via
+//! `is_x86_feature_detected!`: an exact AVX2 widening-`madd` tile, an
+//! AVX-512 VNNI `vpdpbusd` tile (cargo feature `avx512`), or the portable
+//! scalar loop — which is also what `LQR_FORCE_SCALAR=1` pins, so the
+//! fallback arm stays testable on SIMD hosts. All arms are bit-exact
+//! against each other (pinned by `rust/tests/panel_kernels.rs`).
+//!
+//! # Conv lowering
+//!
+//! - [`im2col`] — f32 patch matrix; layout matches `python/compile/model.py`
 //!   so one row = one receptive field = one LQ region. Interior rows copy as
 //!   whole row spans (pad-free fast path); padded edges copy clipped spans.
+//! - [`im2col_quantized`] — the quantized-path lowering: per-region min/max
+//!   and u8 code emission fused into the span copies, so runtime activation
+//!   quantization costs no extra pass over a materialized patch matrix (the
+//!   paper's §VI overhead concern).
 pub mod gemm_f32;
 pub mod gemm_i8;
 pub mod gemm_lut;
 pub mod gemm_packed;
 pub mod im2col;
 pub mod panel;
+pub mod simd;
 
 pub use gemm_f32::gemm_f32;
 pub use gemm_i8::{gemm_quantized, gemm_quantized_naive};
-pub use im2col::{conv_output_size, im2col};
-pub use panel::{gemm_lut_panel, gemm_panel, gemm_panel_packed, WeightPanel};
+pub use im2col::{col2im_output, conv_output_size, im2col, im2col_quantized};
+pub use panel::{
+    gemm_lut_panel, gemm_lut_panel_with, gemm_panel, gemm_panel_packed, gemm_panel_packed_with,
+    gemm_panel_with, WeightPanel,
+};

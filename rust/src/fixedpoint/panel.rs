@@ -14,25 +14,35 @@
 //!   correction vectorize. Scales / mins / code-sums are stored transposed
 //!   (`[tile][region][jj]`) for the same reason.
 //! - [`gemm_panel`] / [`gemm_panel_packed`] run a register-tiled
-//!   [`MR`]x[`NR`] microkernel: `MR * NR` i32 accumulators, u8 x u8 -> i32
-//!   multiply-accumulate over the region that LLVM lowers to widening SIMD
-//!   MACs. Arbitrary regions-per-row and odd K tails are handled by the
-//!   region loop itself (the tail region is just shorter).
+//!   [`MR`]x[`NR`] microkernel selected at runtime by the SIMD dispatcher
+//!   ([`super::simd`]): explicit AVX2 / AVX-512-VNNI widening integer MACs
+//!   where the host supports them, the portable scalar tile otherwise.
+//!   Arbitrary regions-per-row and odd K tails are handled by the region
+//!   loop itself (the tail region is just shorter).
 //! - [`gemm_lut_panel`] replaces the inner multiply with §V code bucketing,
 //!   bucketing a whole `NR`-wide tile per activation row per region instead
-//!   of re-widening the weight row for every `(i, j)` pair.
+//!   of re-widening the weight row for every `(i, j)` pair; the bucketing
+//!   pass dispatches through the same kernel table.
+//!
+//! The outer loops run an **M-block x N-tile schedule**: activation rows are
+//! grouped into L2-sized blocks ([`m_block_rows`]), each weight tile streams
+//! through a whole block of rows before the next tile loads, and
+//! `scope_chunks` parallelizes over the M-blocks. For batch-sized M this
+//! keeps every weight tile's codes resident across dozens of row visits
+//! instead of re-streaming the full panel per `MR` rows.
 //!
 //! Panels are built once per weight matrix and cached by the engine
 //! (`nn::forward::Engine`), so panel prep amortizes across batches.
 
 use crate::quant::codec;
-use crate::quant::lut::{bucket_panel_segment, collapse_buckets, MAX_CODES};
+use crate::quant::lut::{collapse_buckets, MAX_CODES};
 use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::scope_chunks;
 
 use super::gemm_i8::SyncPtr;
 use super::gemm_packed::PackedMatrix;
+use super::simd::{self, Kernel};
 
 /// Microkernel width: output channels per weight tile (one cache line of
 /// i8 codes; 16 i32 accumulator lanes = one AVX-512 / two AVX2 registers).
@@ -188,42 +198,21 @@ impl ASide<'_> {
     }
 }
 
-/// Register-tiled integer microkernel: accumulate
-/// `acc[mr][jj] += a[mr][p] * w[p][jj]` over one region segment.
-///
-/// `wseg` is the K-major tile slice for `p in start..end` (`len * NR`
-/// bytes). The jj loop is a fixed-width u8 x u8 -> i32 MAC that LLVM lowers
-/// to widening SIMD multiplies; products are at most `255 * 255 * len`,
-/// which fits i32 for any region shorter than 2^15 (all model layers here).
-#[inline]
-fn micro_kernel(
-    abuf: &[u8],
-    k: usize,
-    rows: usize,
-    start: usize,
-    end: usize,
-    wseg: &[u8],
-    acc: &mut [[i32; NR]; MR],
-) {
-    debug_assert_eq!(wseg.len(), (end - start) * NR);
-    for (pi, p) in (start..end).enumerate() {
-        let wline = &wseg[pi * NR..(pi + 1) * NR];
-        for mr in 0..rows {
-            let av = abuf[mr * k + p] as i32;
-            if av == 0 {
-                continue; // ReLU-sparse activations quantize to code 0 often
-            }
-            let lane = &mut acc[mr];
-            for (dst, &w) in lane.iter_mut().zip(wline) {
-                *dst += av * w as i32;
-            }
-        }
-    }
+/// Rows per M-block of the outer loop. Large enough that a weight tile's
+/// codes amortize over many activation rows, small enough that a block's
+/// activation codes (`mb * K` bytes) stay L2-resident and enough blocks
+/// exist to spread across the pool.
+fn m_block_rows(m: usize, threads: usize) -> usize {
+    const MB_MAX: usize = 128;
+    let target_blocks = threads.max(1) * 4;
+    let mb = m.div_ceil(target_blocks).clamp(MR, MB_MAX);
+    mb.div_ceil(MR) * MR
 }
 
 /// The shared panel GEMM: `A (M,K) x panel(W^T) -> (M,N)` with per-region
-/// affine correction. Parallel over `MR`-row blocks.
-fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize) -> Tensor {
+/// affine correction. M-block x N-tile schedule, parallel over M-blocks,
+/// integer inner loop via the dispatched `kernel`.
+fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize, kernel: &Kernel) -> Tensor {
     assert_eq!(a.k, wp.k, "reduction dims differ: {} vs {}", a.k, wp.k);
     assert_eq!(a.rpr, wp.rpr, "operands must share the region size along K");
     let (m, n, k) = (a.rows, wp.n, a.k);
@@ -232,17 +221,18 @@ fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize) -> Tensor {
     let mut out = vec![0.0f32; m * n];
 
     let out_ptr = SyncPtr(out.as_mut_ptr());
-    let nblocks = m.div_ceil(MR);
-    scope_chunks(nblocks, threads, |b0, b1| {
+    let mb = m_block_rows(m, threads);
+    let nblocks = m.div_ceil(mb).max(1);
+    scope_chunks(nblocks, threads, |nb0, nb1| {
         let out_ptr = &out_ptr;
-        let mut abuf = vec![0u8; MR * k];
-        for blk in b0..b1 {
-            let i0 = blk * MR;
-            let rows = MR.min(m - i0);
-            a.fill_rows(i0, rows, &mut abuf);
-            // SAFETY: rows [i0, i0+rows) are written by exactly one chunk.
+        let mut abuf = vec![0u8; mb * k];
+        for nb in nb0..nb1 {
+            let i0 = nb * mb;
+            let mrows = mb.min(m - i0);
+            a.fill_rows(i0, mrows, &mut abuf);
+            // SAFETY: rows [i0, i0+mrows) are written by exactly one chunk.
             let oblock =
-                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), rows * n) };
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), mrows * n) };
             for t in 0..tiles {
                 let j0 = t * NR;
                 let nr_eff = NR.min(n - j0);
@@ -250,31 +240,32 @@ fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize) -> Tensor {
                 for r in 0..rpr {
                     let (start, end) = wp.region_bounds(r);
                     let lenf = (end - start) as f32;
-                    let mut acc = [[0i32; NR]; MR];
-                    micro_kernel(
-                        &abuf,
-                        k,
-                        rows,
-                        start,
-                        end,
-                        &tcodes[start * NR..end * NR],
-                        &mut acc,
-                    );
-                    // Eq. 7 correction, vectorized over the NR tile columns.
+                    let wseg = &tcodes[start * NR..end * NR];
                     let (sw, mw, sqw) = wp.tile_affine(t, r);
-                    for mr in 0..rows {
-                        let i = i0 + mr;
-                        let sa = a.scales[i * rpr + r];
-                        let ma = a.mins[i * rpr + r];
-                        let sqa = a.code_sums[i * rpr + r];
-                        let lane = &acc[mr];
-                        let orow = &mut oblock[mr * n + j0..mr * n + j0 + nr_eff];
-                        for jj in 0..nr_eff {
-                            orow[jj] += sa * sw[jj] * lane[jj] as f32
-                                + sa * mw[jj] * sqa
-                                + ma * sw[jj] * sqw[jj]
-                                + lenf * ma * mw[jj];
+                    // The region segment stays L1-hot while every MR-row
+                    // strip of the M-block streams through it.
+                    let mut b0 = 0usize;
+                    while b0 < mrows {
+                        let rows = MR.min(mrows - b0);
+                        let mut acc = [[0i32; NR]; MR];
+                        kernel.run_micro(&abuf[b0 * k..], k, rows, start, end, wseg, &mut acc);
+                        // Eq. 7 correction, vectorized over the NR tile columns.
+                        for mr in 0..rows {
+                            let i = i0 + b0 + mr;
+                            let sa = a.scales[i * rpr + r];
+                            let ma = a.mins[i * rpr + r];
+                            let sqa = a.code_sums[i * rpr + r];
+                            let lane = &acc[mr];
+                            let o0 = (b0 + mr) * n + j0;
+                            let orow = &mut oblock[o0..o0 + nr_eff];
+                            for jj in 0..nr_eff {
+                                orow[jj] += sa * sw[jj] * lane[jj] as f32
+                                    + sa * mw[jj] * sqa
+                                    + ma * sw[jj] * sqw[jj]
+                                    + lenf * ma * mw[jj];
+                            }
                         }
+                        b0 += MR;
                     }
                 }
             }
@@ -283,8 +274,20 @@ fn gemm_panel_core(a: &ASide, wp: &WeightPanel, threads: usize) -> Tensor {
     Tensor::new(&[m, n], out)
 }
 
-/// Panel GEMM over byte-per-code activations (`A_q (M,K) x W^T -> (M,N)`).
+/// Panel GEMM over byte-per-code activations (`A_q (M,K) x W^T -> (M,N)`),
+/// on the host-dispatched SIMD kernel.
 pub fn gemm_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    gemm_panel_with(aq, wp, threads, simd::active())
+}
+
+/// [`gemm_panel`] with an explicit kernel — tests and benches pin the
+/// scalar arm against the dispatched arm through this.
+pub fn gemm_panel_with(
+    aq: &QuantizedMatrix,
+    wp: &WeightPanel,
+    threads: usize,
+    kernel: &Kernel,
+) -> Tensor {
     assert_eq!(
         aq.group_len(),
         wp.group,
@@ -299,13 +302,23 @@ pub fn gemm_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Ten
         mins: &aq.mins,
         code_sums: &aq.code_sums,
     };
-    gemm_panel_core(&a, wp, threads)
+    gemm_panel_core(&a, wp, threads, kernel)
 }
 
 /// Panel GEMM over bit-packed activations: each activation row unpacks once
-/// per GEMM (in its row block), each weight row unpacked once at panel
+/// per GEMM (in its M-block), each weight row unpacked once at panel
 /// build — never inside the inner loop.
 pub fn gemm_panel_packed(aq: &PackedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    gemm_panel_packed_with(aq, wp, threads, simd::active())
+}
+
+/// [`gemm_panel_packed`] with an explicit kernel.
+pub fn gemm_panel_packed_with(
+    aq: &PackedMatrix,
+    wp: &WeightPanel,
+    threads: usize,
+    kernel: &Kernel,
+) -> Tensor {
     assert_eq!(aq.group, wp.group, "operands must share the region size along K");
     let a = ASide {
         rows: aq.rows,
@@ -316,7 +329,7 @@ pub fn gemm_panel_packed(aq: &PackedMatrix, wp: &WeightPanel, threads: usize) ->
         mins: &aq.mins,
         code_sums: &aq.code_sums,
     };
-    gemm_panel_core(&a, wp, threads)
+    gemm_panel_core(&a, wp, threads, kernel)
 }
 
 /// §V LUT panel GEMM: multiply-free inner loop for <= 4-bit activations.
@@ -325,6 +338,16 @@ pub fn gemm_panel_packed(aq: &PackedMatrix, wp: &WeightPanel, threads: usize) ->
 /// pass over the tile — then collapses buckets with `2^bits - 2` multiplies
 /// per lane. Numerically identical to [`gemm_panel`].
 pub fn gemm_lut_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    gemm_lut_panel_with(aq, wp, threads, simd::active())
+}
+
+/// [`gemm_lut_panel`] with an explicit kernel (bucketing pass dispatch).
+pub fn gemm_lut_panel_with(
+    aq: &QuantizedMatrix,
+    wp: &WeightPanel,
+    threads: usize,
+    kernel: &Kernel,
+) -> Tensor {
     assert!(aq.bits <= 4, "LUT GEMM needs <= 4-bit activations, got {}", aq.bits);
     assert_eq!(aq.k, wp.k, "reduction dims differ: {} vs {}", aq.k, wp.k);
     assert_eq!(
@@ -339,13 +362,22 @@ pub fn gemm_lut_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) ->
     let tiles = wp.tiles();
     let mut out = vec![0.0f32; m * n];
 
+    // Row-blocked like the integer core: a weight tile is bucketed for a
+    // whole block of consecutive rows before the next tile streams in. The
+    // block shrinks for small M so enough blocks exist for scope_chunks to
+    // actually go parallel (its serial guard sees block count, not rows).
+    const RB_MAX: usize = 32;
+    let rb = m.div_ceil(threads.max(1) * 4).clamp(1, RB_MAX);
     let out_ptr = SyncPtr(out.as_mut_ptr());
-    scope_chunks(m, threads, |i0, i1| {
+    let nblocks = m.div_ceil(rb).max(1);
+    scope_chunks(nblocks, threads, |nb0, nb1| {
         let out_ptr = &out_ptr;
-        for i in i0..i1 {
-            let arow = aq.row_codes(i);
-            // SAFETY: row i is written by exactly one chunk.
-            let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+        for nb in nb0..nb1 {
+            let i0 = nb * rb;
+            let i1 = (i0 + rb).min(m);
+            // SAFETY: rows [i0, i1) are written by exactly one chunk.
+            let oblock =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
             for t in 0..tiles {
                 let j0 = t * NR;
                 let nr_eff = NR.min(n - j0);
@@ -353,23 +385,24 @@ pub fn gemm_lut_panel(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) ->
                 for r in 0..rpr {
                     let (start, end) = wp.region_bounds(r);
                     let lenf = (end - start) as f32;
-                    let mut buckets = [[0i32; NR]; MAX_CODES];
-                    bucket_panel_segment::<NR>(
-                        &arow[start..end],
-                        &tcodes[start * NR..end * NR],
-                        &mut buckets,
-                    );
-                    let qq = collapse_buckets::<NR>(&buckets, levels);
+                    let wseg = &tcodes[start * NR..end * NR];
                     let (sw, mw, sqw) = wp.tile_affine(t, r);
-                    let sa = aq.scale(i, r);
-                    let ma = aq.min(i, r);
-                    let sqa = aq.code_sums[i * rpr + r];
-                    let oseg = &mut orow[j0..j0 + nr_eff];
-                    for jj in 0..nr_eff {
-                        oseg[jj] += sa * sw[jj] * qq[jj] as f32
-                            + sa * mw[jj] * sqa
-                            + ma * sw[jj] * sqw[jj]
-                            + lenf * ma * mw[jj];
+                    for i in i0..i1 {
+                        let arow = aq.row_codes(i);
+                        let mut buckets = [[0i32; NR]; MAX_CODES];
+                        kernel.run_bucket(&arow[start..end], wseg, &mut buckets);
+                        let qq = collapse_buckets::<NR>(&buckets, levels);
+                        let sa = aq.scale(i, r);
+                        let ma = aq.min(i, r);
+                        let sqa = aq.code_sums[i * rpr + r];
+                        let o0 = (i - i0) * n + j0;
+                        let oseg = &mut oblock[o0..o0 + nr_eff];
+                        for jj in 0..nr_eff {
+                            oseg[jj] += sa * sw[jj] * qq[jj] as f32
+                                + sa * mw[jj] * sqa
+                                + ma * sw[jj] * sqw[jj]
+                                + lenf * ma * mw[jj];
+                        }
                     }
                 }
             }

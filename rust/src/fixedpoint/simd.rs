@@ -1,0 +1,499 @@
+//! Runtime-dispatched SIMD microkernels for the panel GEMM core.
+//!
+//! The panel core ([`super::panel`]) is parameterized over a [`Kernel`]: a
+//! pair of function pointers covering the two inner loops of the quantized
+//! ladder — the `MR`x`NR` u8 multiply-accumulate tile and the §V LUT
+//! bucketing pass. [`active`] selects the widest implementation the host CPU
+//! supports **once** (cached in a `OnceLock`) and every quantized GEMM entry
+//! point routes through it; [`scalar_kernel`] is the portable fallback and
+//! the force-disable target (`LQR_FORCE_SCALAR=1`, read at first dispatch).
+//!
+//! Implementations:
+//!
+//! - **scalar** — the PR 1 loops, kept verbatim as the portable arm and the
+//!   bit-exactness anchor (`rust/tests/panel_kernels.rs` pins every SIMD arm
+//!   to it, and it to the seed naive oracle).
+//! - **avx2-madd** — `_mm256_maddubs_epi16` is the obvious u8 pairing but
+//!   *saturates* its i16 pair sums: with full 8-bit codes a pair reaches
+//!   255*255*2 = 130050 > i16::MAX, so it cannot be bit-exact. The AVX2 arm
+//!   instead interleaves two K lines, widens codes to i16
+//!   (`_mm256_cvtepu8_epi16`) and uses `_mm256_madd_epi16`, whose pairwise
+//!   i32 sums never saturate for non-negative 8-bit operands: 32 exact MACs
+//!   per madd pair.
+//! - **vnni-dpbusd** (cargo feature `avx512`, needs `avx512vnni` at runtime)
+//!   — `vpdpbusd` computes u8 x s8 groups of four; weight codes are full u8,
+//!   so the kernel bias-flips them to `w - 128` (one xor with 0x80) and adds
+//!   the `128 * sum(a)` compensation back per activation row. 64 exact MACs
+//!   per instruction. Feature-gated because the AVX-512 intrinsics need a
+//!   recent stable toolchain; the portable and AVX2 arms build everywhere.
+//!
+//! All integer accumulation is exact (products fit i32 for regions shorter
+//! than 2^15 — every model layer here), and the f32 affine correction in the
+//! panel core is shared, so dispatch arms agree **bit-exactly**, not just to
+//! a tolerance.
+
+use std::sync::OnceLock;
+
+use crate::quant::lut::MAX_CODES;
+
+use super::panel::{MR, NR};
+
+/// `acc[mr][jj] += a[mr][p] * w[p][jj]` over one region segment.
+/// `(abuf, k, rows, start, end, wseg, acc)`: `abuf` holds `rows` activation
+/// rows with stride `k`, `wseg` is the K-major `NR`-wide tile slice for
+/// `p in start..end` (`(end-start) * NR` bytes).
+pub type MicroFn = fn(&[u8], usize, usize, usize, usize, &[u8], &mut [[i32; NR]; MR]);
+
+/// §V bucketing: add each `NR`-wide weight line of `wseg` into the bucket
+/// row of its paired activation code (`qa`).
+pub type BucketFn = fn(&[u8], &[u8], &mut [[i32; NR]; MAX_CODES]);
+
+/// One dispatchable implementation set for the panel inner loops.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    /// Implementation name (recorded in `BENCH_gemm.json`).
+    pub name: &'static str,
+    /// ISA tier the implementation requires.
+    pub isa: &'static str,
+    micro: MicroFn,
+    bucket: BucketFn,
+}
+
+impl Kernel {
+    /// Run the integer MAC microkernel over one region segment.
+    ///
+    /// The bounds asserts here are release-mode and load-bearing: the SIMD
+    /// arms use unchecked loads behind them, so this safe entry point must
+    /// reject bad geometry the way the scalar arm's slice indexing would.
+    /// One check per region call — noise next to the `len * NR * rows` MACs.
+    #[inline]
+    pub fn run_micro(
+        &self,
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        assert!(rows <= MR, "run_micro: rows {rows} > MR {MR}");
+        assert!(start <= end && end <= k, "run_micro: bad segment {start}..{end} for k={k}");
+        assert!(wseg.len() >= (end - start) * NR, "run_micro: wseg too short");
+        assert!(
+            rows == 0 || abuf.len() >= (rows - 1) * k + end,
+            "run_micro: abuf too short"
+        );
+        (self.micro)(abuf, k, rows, start, end, wseg, acc)
+    }
+
+    /// Run the LUT bucketing pass over one region segment. Same contract
+    /// note as [`Kernel::run_micro`]: the assert guards unchecked SIMD loads.
+    #[inline]
+    pub fn run_bucket(&self, qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+        assert!(wseg.len() >= qa.len() * NR, "run_bucket: wseg too short");
+        (self.bucket)(qa, wseg, buckets)
+    }
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Kernel({}/{})", self.name, self.isa)
+    }
+}
+
+static SCALAR_K: Kernel = Kernel {
+    name: "scalar",
+    isa: "portable",
+    micro: scalar_micro,
+    bucket: scalar_bucket,
+};
+
+/// The portable kernel — always available on every target, and what
+/// `LQR_FORCE_SCALAR=1` pins the dispatcher to.
+pub fn scalar_kernel() -> &'static Kernel {
+    &SCALAR_K
+}
+
+/// The kernel the dispatcher selected for this host. Selection runs once:
+/// scalar when forced via `LQR_FORCE_SCALAR=1`, otherwise the widest ISA
+/// `is_x86_feature_detected!` reports (scalar on non-x86 targets).
+pub fn active() -> &'static Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    ACTIVE.get_or_init(select)
+}
+
+/// Widest integer-MAC ISA the host advertises, independent of the force
+/// flag and of what this build can use — benches record it alongside the
+/// selected kernel so results are comparable across hosts.
+pub fn detected_isa() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512bw")
+            && is_x86_feature_detected!("avx512vnni")
+        {
+            "avx512vnni"
+        } else if is_x86_feature_detected!("avx2") {
+            "avx2"
+        } else {
+            "sse2"
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        "portable"
+    }
+}
+
+fn force_scalar() -> bool {
+    std::env::var("LQR_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+fn select() -> Kernel {
+    if force_scalar() {
+        return SCALAR_K;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(feature = "avx512")]
+        {
+            if is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512bw")
+                && is_x86_feature_detected!("avx512vnni")
+            {
+                return Kernel {
+                    name: "vnni-dpbusd",
+                    isa: "avx512vnni",
+                    micro: x86::micro_vnni_entry,
+                    bucket: x86::bucket_avx2_entry,
+                };
+            }
+        }
+        if is_x86_feature_detected!("avx2") {
+            return Kernel {
+                name: "avx2-madd",
+                isa: "avx2",
+                micro: x86::micro_avx2_entry,
+                bucket: x86::bucket_avx2_entry,
+            };
+        }
+    }
+    SCALAR_K
+}
+
+/// Portable `MR`x`NR` microkernel: fixed-width u8 x u8 -> i32 MACs that LLVM
+/// lowers to widening SIMD multiplies where available. Products are at most
+/// `255 * 255 * len`, which fits i32 for any region shorter than 2^15.
+pub fn scalar_micro(
+    abuf: &[u8],
+    k: usize,
+    rows: usize,
+    start: usize,
+    end: usize,
+    wseg: &[u8],
+    acc: &mut [[i32; NR]; MR],
+) {
+    debug_assert!(wseg.len() >= (end - start) * NR);
+    for (pi, p) in (start..end).enumerate() {
+        let wline = &wseg[pi * NR..(pi + 1) * NR];
+        for mr in 0..rows {
+            let av = abuf[mr * k + p] as i32;
+            if av == 0 {
+                continue; // ReLU-sparse activations quantize to code 0 often
+            }
+            let lane = &mut acc[mr];
+            for (dst, &w) in lane.iter_mut().zip(wline) {
+                *dst += av * w as i32;
+            }
+        }
+    }
+}
+
+/// Portable bucketing pass — delegates to the §V tile bucketing primitive.
+pub fn scalar_bucket(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+    crate::quant::lut::bucket_panel_segment::<NR>(qa, wseg, buckets);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MAX_CODES, MR, NR};
+    use std::arch::x86_64::*;
+
+    // Safe entry shims: the dispatcher installs these fn pointers only after
+    // runtime feature detection succeeded, so the unsafe target_feature call
+    // inside each shim is sound (and plain `fn` pointers keep the dispatch
+    // table buildable on toolchains without target_feature fn coercions).
+
+    pub fn micro_avx2_entry(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        // SAFETY: selected only when is_x86_feature_detected!("avx2") held.
+        unsafe { micro_avx2(abuf, k, rows, start, end, wseg, acc) }
+    }
+
+    pub fn bucket_avx2_entry(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+        // SAFETY: selected only when is_x86_feature_detected!("avx2") held.
+        unsafe { bucket_avx2(qa, wseg, buckets) }
+    }
+
+    #[cfg(feature = "avx512")]
+    pub fn micro_vnni_entry(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        // SAFETY: selected only when avx512f+avx512bw+avx512vnni detected.
+        unsafe { micro_vnni(abuf, k, rows, start, end, wseg, acc) }
+    }
+
+    /// AVX2 microkernel: two K positions per step. The two `NR`-wide code
+    /// lines are byte-interleaved so each i16 pair holds `(w[p][jj],
+    /// w[p+1][jj])`, widened zero-extending, and `_mm256_madd_epi16` against
+    /// the broadcast `(a[p], a[p+1])` pair accumulates both positions into
+    /// the i32 lane of column `jj` — exact, unlike the saturating maddubs.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro_avx2(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR == 16, "AVX2 microkernel assumes one 16-byte line per position");
+        debug_assert!(wseg.len() >= (end - start) * NR);
+        debug_assert!(rows <= MR && abuf.len() >= rows.saturating_sub(1) * k + end);
+        let len = end - start;
+        let wp = wseg.as_ptr();
+        let mut vacc = [[_mm256_setzero_si256(); 2]; MR];
+        let mut p = 0usize;
+        while p + 1 < len {
+            let w0 = _mm_loadu_si128(wp.add(p * NR) as *const __m128i);
+            let w1 = _mm_loadu_si128(wp.add((p + 1) * NR) as *const __m128i);
+            let wlo = _mm256_cvtepu8_epi16(_mm_unpacklo_epi8(w0, w1)); // jj 0..8
+            let whi = _mm256_cvtepu8_epi16(_mm_unpackhi_epi8(w0, w1)); // jj 8..16
+            for mr in 0..rows {
+                let a0 = *abuf.get_unchecked(mr * k + start + p) as i32;
+                let a1 = *abuf.get_unchecked(mr * k + start + p + 1) as i32;
+                let av = _mm256_set1_epi32(a0 | (a1 << 16));
+                let lane = vacc.get_unchecked_mut(mr);
+                lane[0] = _mm256_add_epi32(lane[0], _mm256_madd_epi16(wlo, av));
+                lane[1] = _mm256_add_epi32(lane[1], _mm256_madd_epi16(whi, av));
+            }
+            p += 2;
+        }
+        if p < len {
+            // Odd tail position: pair with a zero line (zero products).
+            let w0 = _mm_loadu_si128(wp.add(p * NR) as *const __m128i);
+            let z = _mm_setzero_si128();
+            let wlo = _mm256_cvtepu8_epi16(_mm_unpacklo_epi8(w0, z));
+            let whi = _mm256_cvtepu8_epi16(_mm_unpackhi_epi8(w0, z));
+            for mr in 0..rows {
+                let a0 = *abuf.get_unchecked(mr * k + start + p) as i32;
+                let av = _mm256_set1_epi32(a0);
+                let lane = vacc.get_unchecked_mut(mr);
+                lane[0] = _mm256_add_epi32(lane[0], _mm256_madd_epi16(wlo, av));
+                lane[1] = _mm256_add_epi32(lane[1], _mm256_madd_epi16(whi, av));
+            }
+        }
+        for mr in 0..rows {
+            let mut tmp = [0i32; NR];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, vacc[mr][0]);
+            _mm256_storeu_si256(tmp.as_mut_ptr().add(8) as *mut __m256i, vacc[mr][1]);
+            let lane = &mut acc[mr];
+            for jj in 0..NR {
+                lane[jj] += tmp[jj];
+            }
+        }
+    }
+
+    /// AVX2 bucketing: one 16-wide u8 weight line widens to two i32 vectors
+    /// and adds into the bucket row its activation code selects — the §V
+    /// add-only datapath at vector width.
+    #[target_feature(enable = "avx2")]
+    unsafe fn bucket_avx2(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+        debug_assert!(NR == 16);
+        debug_assert!(wseg.len() >= qa.len() * NR);
+        let wp = wseg.as_ptr();
+        for (pi, &c) in qa.iter().enumerate() {
+            let wv = _mm_loadu_si128(wp.add(pi * NR) as *const __m128i);
+            let lo = _mm256_cvtepu8_epi32(wv);
+            let hi = _mm256_cvtepu8_epi32(_mm_srli_si128::<8>(wv));
+            // Checked: codes are caller data (all-pub QuantizedMatrix), and
+            // the scalar arm panics on an out-of-range code — match it
+            // rather than turn bad input into unchecked writes.
+            let bp = buckets[c as usize].as_mut_ptr();
+            let b0 = _mm256_loadu_si256(bp as *const __m256i);
+            let b1 = _mm256_loadu_si256(bp.add(8) as *const __m256i);
+            _mm256_storeu_si256(bp as *mut __m256i, _mm256_add_epi32(b0, lo));
+            _mm256_storeu_si256(bp.add(8) as *mut __m256i, _mm256_add_epi32(b1, hi));
+        }
+    }
+
+    /// AVX-512 VNNI microkernel: four K positions per `vpdpbusd`. The 4x16
+    /// code block transposes (two unpack rounds) so each 32-bit group holds
+    /// column `jj`'s four codes; weights bias-flip to s8 (`w ^ 0x80` ==
+    /// `w - 128`) and the `128 * sum(a)` term is added back per row.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+    unsafe fn micro_vnni(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR == 16);
+        debug_assert!(wseg.len() >= (end - start) * NR);
+        let len = end - start;
+        let wp = wseg.as_ptr();
+        let flip = _mm512_set1_epi8(-128i8);
+        let mut vacc = [_mm512_setzero_si512(); MR];
+        // Running sum of the vectorized activation bytes per row, gathered
+        // while the main loop already holds them — feeds the bias-flip
+        // compensation below without a second pass over `abuf`.
+        let mut asum = [0u32; MR];
+        let mut p = 0usize;
+        while p + 4 <= len {
+            let w0 = _mm_loadu_si128(wp.add(p * NR) as *const __m128i);
+            let w1 = _mm_loadu_si128(wp.add((p + 1) * NR) as *const __m128i);
+            let w2 = _mm_loadu_si128(wp.add((p + 2) * NR) as *const __m128i);
+            let w3 = _mm_loadu_si128(wp.add((p + 3) * NR) as *const __m128i);
+            let t0 = _mm_unpacklo_epi8(w0, w1);
+            let t1 = _mm_unpackhi_epi8(w0, w1);
+            let t2 = _mm_unpacklo_epi8(w2, w3);
+            let t3 = _mm_unpackhi_epi8(w2, w3);
+            let u0 = _mm_unpacklo_epi16(t0, t2); // columns 0..4
+            let u1 = _mm_unpackhi_epi16(t0, t2); // columns 4..8
+            let u2 = _mm_unpacklo_epi16(t1, t3); // columns 8..12
+            let u3 = _mm_unpackhi_epi16(t1, t3); // columns 12..16
+            let mut wv = _mm512_castsi128_si512(u0);
+            wv = _mm512_inserti32x4::<1>(wv, u1);
+            wv = _mm512_inserti32x4::<2>(wv, u2);
+            wv = _mm512_inserti32x4::<3>(wv, u3);
+            let ws = _mm512_xor_si512(wv, flip); // u8 -> s8: w - 128
+            for mr in 0..rows {
+                let ap = abuf.as_ptr().add(mr * k + start + p);
+                let a = u32::from_le_bytes([*ap, *ap.add(1), *ap.add(2), *ap.add(3)]);
+                asum[mr] += (a & 0xff) + ((a >> 8) & 0xff) + ((a >> 16) & 0xff) + (a >> 24);
+                let av = _mm512_set1_epi32(a as i32);
+                let lane = vacc.get_unchecked_mut(mr);
+                *lane = _mm512_dpbusd_epi32(*lane, av, ws);
+            }
+            p += 4;
+        }
+        // Scalar tail (at most 3 positions — short tail regions only).
+        for pt in p..len {
+            for mr in 0..rows {
+                let a = *abuf.get_unchecked(mr * k + start + pt) as i32;
+                if a == 0 {
+                    continue;
+                }
+                let lane = &mut acc[mr];
+                for jj in 0..NR {
+                    lane[jj] += a * *wseg.get_unchecked(pt * NR + jj) as i32;
+                }
+            }
+        }
+        for mr in 0..rows {
+            let mut tmp = [0i32; NR];
+            _mm512_storeu_epi32(tmp.as_mut_ptr(), vacc[mr]);
+            // Bias-flip compensation over the vectorized positions:
+            // sum(a * (w - 128)) + 128 * sum(a) == sum(a * w).
+            let comp = asum[mr] as i32 * 128;
+            let lane = &mut acc[mr];
+            for jj in 0..NR {
+                lane[jj] += tmp[jj] + comp;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ref_acc(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+    ) -> [[i32; NR]; MR] {
+        let mut acc = [[0i32; NR]; MR];
+        for p in start..end {
+            for mr in 0..rows {
+                let a = abuf[mr * k + p] as i32;
+                for jj in 0..NR {
+                    acc[mr][jj] += a * wseg[(p - start) * NR + jj] as i32;
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn active_kernel_matches_scalar_on_random_segments() {
+        let kernel = active();
+        let mut rng = Rng::new(0x51D0);
+        for case in 0..200 {
+            let k = 1 + (rng.below(96) as usize);
+            let rows = 1 + (rng.below(MR as u64) as usize);
+            let start = rng.below(k as u64) as usize;
+            let end = start + 1 + rng.below((k - start) as u64) as usize;
+            let abuf: Vec<u8> = (0..rows * k).map(|_| rng.below(256) as u8).collect();
+            let wseg: Vec<u8> = (0..(end - start) * NR).map(|_| rng.below(256) as u8).collect();
+            let want = ref_acc(&abuf, k, rows, start, end, &wseg);
+            let mut got = [[0i32; NR]; MR];
+            kernel.run_micro(&abuf, k, rows, start, end, &wseg, &mut got);
+            assert_eq!(got, want, "case {case} k={k} rows={rows} seg={start}..{end}");
+            let mut got_scalar = [[0i32; NR]; MR];
+            scalar_kernel().run_micro(&abuf, k, rows, start, end, &wseg, &mut got_scalar);
+            assert_eq!(got_scalar, want, "scalar arm, case {case}");
+        }
+    }
+
+    #[test]
+    fn active_bucket_matches_scalar() {
+        let kernel = active();
+        let mut rng = Rng::new(0x51D1);
+        for bits in [1u8, 2, 4] {
+            let len = 1 + (rng.below(120) as usize);
+            let qa: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+            let wseg: Vec<u8> = (0..len * NR).map(|_| rng.below(256) as u8).collect();
+            let mut want = [[0i32; NR]; MAX_CODES];
+            scalar_kernel().run_bucket(&qa, &wseg, &mut want);
+            let mut got = [[0i32; NR]; MAX_CODES];
+            kernel.run_bucket(&qa, &wseg, &mut got);
+            assert_eq!(got, want, "bits={bits} len={len}");
+        }
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        let s = scalar_kernel();
+        assert_eq!(s.name, "scalar");
+        assert_eq!(s.isa, "portable");
+        // detection never panics and returns a non-empty tag
+        assert!(!detected_isa().is_empty());
+        assert!(!active().name.is_empty());
+    }
+}

@@ -19,7 +19,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::fixedpoint::{gemm_f32, gemm_lut_panel, gemm_panel, im2col, WeightPanel};
-use crate::fixedpoint::im2col::col2im_output;
+use crate::fixedpoint::im2col::{col2im_output, im2col_quantized};
 use crate::nn::arch::{Arch, Layer};
 use crate::quant::{quantize_matrix, QuantizedMatrix, RegionSpec};
 use crate::tensor::{read_npz, Tensor};
@@ -31,6 +31,17 @@ pub enum Scheme {
     Dq,
     /// Local quantization (the paper's contribution): per-region scales.
     Lq,
+}
+
+impl Scheme {
+    /// Region granularity this scheme quantizes *activations* at (weights
+    /// always use the configured local region, see `quantized_weights`).
+    pub fn act_region(self, region: RegionSpec) -> RegionSpec {
+        match self {
+            Scheme::Dq => RegionSpec::PerTensor,
+            Scheme::Lq => region,
+        }
+    }
 }
 
 /// Numeric configuration of a forward pass.
@@ -247,11 +258,30 @@ impl Engine {
 
     /// Quantize activations at runtime per the scheme.
     fn quantize_acts(a: &Tensor, scheme: Scheme, bits_a: u8, region: RegionSpec) -> QuantizedMatrix {
-        let r = match scheme {
-            Scheme::Dq => RegionSpec::PerTensor,
-            Scheme::Lq => region,
+        quantize_matrix(a, bits_a, scheme.act_region(region))
+    }
+
+    /// Panel GEMM over already-quantized activations + bias add — the
+    /// shared tail of the quantized conv and fc paths. Both consume the
+    /// cached weight panel, so weight prep cost is paid once per
+    /// (layer, bits, region), not per GEMM call.
+    fn quant_gemm(
+        &self,
+        aq: &QuantizedMatrix,
+        layer: &Layer,
+        bias: &Tensor,
+        bits_w: u8,
+        region: RegionSpec,
+        lut: bool,
+    ) -> Tensor {
+        let wp = self.quantized_weights(layer, bits_w, region);
+        let mut out = if lut {
+            gemm_lut_panel(aq, &wp, self.threads)
+        } else {
+            gemm_panel(aq, &wp, self.threads)
         };
-        quantize_matrix(a, bits_a, r)
+        add_bias(&mut out, bias);
+        out
     }
 
     /// One GEMM at the configured precision: `a (M,K) x w^T (N,K) + bias`.
@@ -262,7 +292,7 @@ impl Engine {
         bias: &Tensor,
         precision: Precision,
     ) -> Tensor {
-        let mut out = match precision {
+        match precision {
             Precision::F32 => {
                 let w = &self.params[&format!("{}.w", layer.name())];
                 let wmat = match *layer {
@@ -271,29 +301,15 @@ impl Engine {
                     }
                     Layer::Fc { .. } => w.clone(), // already (in, out)
                 };
-                gemm_f32(a, &wmat, self.threads)
+                let mut out = gemm_f32(a, &wmat, self.threads);
+                add_bias(&mut out, bias);
+                out
             }
             Precision::Quant { scheme, bits_a, bits_w, region, lut } => {
-                let wp = self.quantized_weights(layer, bits_w, region);
                 let aq = Self::quantize_acts(a, scheme, bits_a, region);
-                // Both paths consume the cached panel — weight prep cost is
-                // paid once per (layer, bits, region), not per GEMM call.
-                if lut {
-                    gemm_lut_panel(&aq, &wp, self.threads)
-                } else {
-                    gemm_panel(&aq, &wp, self.threads)
-                }
-            }
-        };
-        // bias add
-        let n = out.dim(1);
-        for i in 0..out.dim(0) {
-            let row = &mut out.data_mut()[i * n..(i + 1) * n];
-            for (o, b) in row.iter_mut().zip(bias.data()) {
-                *o += b;
+                self.quant_gemm(&aq, layer, bias, bits_w, region, lut)
             }
         }
-        out
     }
 
     /// Forward pass: `x (B, C, H, W)` -> logits `(B, num_classes)`.
@@ -304,9 +320,22 @@ impl Engine {
             let bias = &self.params[&format!("{}.b", l.name())];
             match *l {
                 Layer::Conv { k, stride, pad, pool, .. } => {
-                    let (cols, (b, ho, wo)) = im2col(&act, k, stride, pad);
-                    let y = self.gemm(&cols, l, bias, precision).max_scalar(0.0);
-                    act = col2im_output(&y, b, ho, wo);
+                    let (y, (b, ho, wo)) = match precision {
+                        Precision::F32 => {
+                            let (cols, dims) = im2col(&act, k, stride, pad);
+                            (self.gemm(&cols, l, bias, precision), dims)
+                        }
+                        Precision::Quant { scheme, bits_a, bits_w, region, lut } => {
+                            // Fused lowering: activation codes come straight
+                            // out of the patch copies — the f32 patch matrix
+                            // never exists on the quantized path.
+                            let (aq, dims) = im2col_quantized(
+                                &act, k, stride, pad, bits_a, scheme.act_region(region),
+                            );
+                            (self.quant_gemm(&aq, l, bias, bits_w, region, lut), dims)
+                        }
+                    };
+                    act = col2im_output(&y.max_scalar(0.0), b, ho, wo);
                     if pool {
                         act = maxpool2(&act);
                     }
@@ -330,6 +359,17 @@ impl Engine {
 
 fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Broadcast-add the per-channel bias over every output row.
+fn add_bias(out: &mut Tensor, bias: &Tensor) {
+    let n = out.dim(1);
+    for i in 0..out.dim(0) {
+        let row = &mut out.data_mut()[i * n..(i + 1) * n];
+        for (o, b) in row.iter_mut().zip(bias.data()) {
+            *o += b;
+        }
+    }
 }
 
 /// 2x2 stride-2 max pool on NCHW.

@@ -41,11 +41,25 @@ pub fn unpack(p: &Packed) -> Vec<u8> {
 }
 
 /// Unpack into a caller-provided buffer (first `p.len` bytes) — the
-/// allocation-free variant the panel GEMM scratch buffers use.
+/// allocation-free variant the panel GEMM M-block scratch uses on every
+/// packed GEMM.
 pub fn unpack_into(p: &Packed, out: &mut [u8]) {
     assert!(out.len() >= p.len, "unpack_into: buffer {} < {} codes", out.len(), p.len);
     let bits = p.bits as usize;
     let mask = ((1u16 << bits) - 1) as u64;
+    if 64 % bits == 0 {
+        // 1/2/4/8-bit codes never straddle a word: walk one word at a time
+        // with a running shift instead of a per-code word index division.
+        let per = 64 / bits;
+        for (wi, chunk) in out[..p.len].chunks_mut(per).enumerate() {
+            let mut v = p.words[wi];
+            for o in chunk.iter_mut() {
+                *o = (v & mask) as u8;
+                v >>= bits;
+            }
+        }
+        return;
+    }
     for (i, o) in out[..p.len].iter_mut().enumerate() {
         let bit = i * bits;
         let word = bit / 64;

@@ -49,7 +49,8 @@ pub const MAX_CODES: usize = 16;
 /// into the bucket of its paired activation code. Together with
 /// [`collapse_buckets`] this equals [`bucketed_dot`] per tile column, but
 /// buckets `NR` output channels in a single pass instead of one `(i, j)`
-/// pair at a time.
+/// pair at a time. This is the portable arm of the bucketing dispatch
+/// (`fixedpoint::simd` carries an AVX2 variant of the same pass).
 pub fn bucket_panel_segment<const NR: usize>(
     qa: &[u8],
     wseg: &[u8],

@@ -104,6 +104,37 @@ impl QuantizedMatrix {
     }
 }
 
+/// Region min/max: two separate folds — each vectorizes to vminps/vmaxps
+/// reductions; a tuple fold would not.
+#[inline]
+pub(crate) fn region_minmax(seg: &[f32]) -> (f32, f32) {
+    (
+        seg.iter().fold(f32::INFINITY, |m, &v| m.min(v)),
+        seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)),
+    )
+}
+
+/// Encode one region segment given its min/max: writes the codes and returns
+/// `(scale, code_sum)`. This is the single primitive both [`quantize_matrix`]
+/// and the fused conv lowering (`fixedpoint::im2col::im2col_quantized`)
+/// compile to, so the two paths stay bit-identical by construction.
+///
+/// NB: true division, not reciprocal-multiply — bit-exact parity with the
+/// python reference is pinned by rust/tests/quant_parity.
+#[inline]
+pub(crate) fn encode_region(seg: &[f32], mn: f32, mx: f32, levels: f32, codes: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(seg.len(), codes.len());
+    let span = mx - mn;
+    let s = if span > 0.0 { span / levels } else { 1.0 };
+    // Codes (roundps + clamp, vectorizes to u8 stores).
+    for (c, &v) in codes.iter_mut().zip(seg) {
+        *c = round_half_even((v - mn) / s).clamp(0.0, levels) as u8;
+    }
+    // Integer code sum (u8 -> u32 reduction, vectorizes).
+    let sum = codes.iter().map(|&c| c as u32).sum::<u32>() as f32;
+    (s, sum)
+}
+
 /// Quantize a rank-2 tensor along its last axis with `region` granularity.
 pub fn quantize_matrix(x: &Tensor, bits: u8, region: RegionSpec) -> QuantizedMatrix {
     assert!(x.rank() == 2, "quantize_matrix needs rank-2, got {:?}", x.shape());
@@ -139,29 +170,16 @@ pub fn quantize_matrix(x: &Tensor, bits: u8, region: RegionSpec) -> QuantizedMat
             let start = r * g;
             let end = ((r + 1) * g).min(k);
             let seg = &xr[start..end];
-            // Pass 1: region min/max (two separate folds — each vectorizes
-            // to vminps/vmaxps reductions; a tuple fold would not).
             let (mn, mx) = if region.per_tensor() {
                 (global_min, global_max)
             } else {
-                (
-                    seg.iter().fold(f32::INFINITY, |m, &v| m.min(v)),
-                    seg.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)),
-                )
+                region_minmax(seg)
             };
-            let span = mx - mn;
-            let s = if span > 0.0 { span / levels } else { 1.0 };
             let idx = row * rpr + r;
+            let (s, sum) = encode_region(seg, mn, mx, levels, &mut crow[start..end]);
             scales[idx] = s;
             mins[idx] = mn;
-            // Pass 2: codes (roundps + clamp, vectorizes to u8 stores).
-            // NB: true division, not reciprocal-multiply — bit-exact parity
-            // with the python reference is pinned by rust/tests/quant_parity.
-            for (c, &v) in crow[start..end].iter_mut().zip(seg) {
-                *c = round_half_even((v - mn) / s).clamp(0.0, levels) as u8;
-            }
-            // Pass 3: integer code sum (u8 -> u32 reduction, vectorizes).
-            code_sums[idx] = crow[start..end].iter().map(|&c| c as u32).sum::<u32>() as f32;
+            code_sums[idx] = sum;
         }
     }
     QuantizedMatrix { rows, k, bits, region, codes, scales, mins, code_sums }

@@ -9,6 +9,7 @@
 //!   is a queue push per chunk instead of an OS thread spawn per chunk
 //!   (spawn latency dominated small conv-layer GEMMs in the seed).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
@@ -138,12 +139,19 @@ impl ScopeLatch {
     }
 }
 
-/// Split `0..n` into up to `threads` contiguous chunks and run `f(start,
-/// end)` on the shared pool, blocking until every chunk completes. `f` runs
-/// on the caller thread when `threads <= 1` or the range is tiny — keeping
-/// the hot path allocation-free for small work. The caller always executes
-/// the first chunk itself (one fewer queue round-trip, and progress is
-/// guaranteed even when the pool is saturated by other scopes).
+/// Split `0..n` into contiguous chunks and run `f(start, end)` on the
+/// shared pool, blocking until every chunk completes. `f` runs on the
+/// caller thread when `threads <= 1` or the range is tiny — keeping the hot
+/// path allocation-free for small work. The caller always works too (one
+/// fewer queue round-trip, and progress is guaranteed even when the pool is
+/// saturated by other scopes).
+///
+/// Long ranges split into `2 * threads` chunks claimed from a shared
+/// cursor: uneven per-chunk cost (ragged M-blocks, cache effects, a busy
+/// core) rebalances across the claimants instead of serializing the scope
+/// on its slowest pre-assigned chunk. At most `threads` claimants run at
+/// once (`threads - 1` pool workers + the caller) — the caller's thread
+/// budget is a cap, not a hint.
 ///
 /// `f` must not recursively call `scope_chunks` (the kernels never do):
 /// nested scopes could occupy every worker with blocked parents.
@@ -154,36 +162,65 @@ pub fn scope_chunks(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
     }
     let pool = shared_pool();
     let threads = threads.min(pool.size()).max(1);
-    let chunk = n.div_ceil(threads);
-    let njobs = n.div_ceil(chunk) - 1; // chunks handed to the pool (not chunk 0)
+    let parts = if n >= threads * 4 { threads * 2 } else { threads };
+    let chunk = n.div_ceil(parts);
+    let nchunks = n.div_ceil(chunk);
+    if nchunks <= 1 {
+        f(0, n);
+        return;
+    }
+    let njobs = (threads - 1).min(nchunks - 1); // pool claimants besides the caller
     if njobs == 0 {
         f(0, n);
         return;
     }
 
     let latch = Arc::new(ScopeLatch { state: Mutex::new((0, None)), cv: Condvar::new() });
+    let cursor = Arc::new(AtomicUsize::new(0));
     let fref: &(dyn Fn(usize, usize) + Sync) = &f;
     // SAFETY: the latch wait below does not return until every submitted
-    // chunk has run to completion (or panicked), so the borrow of `f` (and
+    // job has run to completion (or panicked), so the borrow of `f` (and
     // everything it captures) strictly outlives the forged 'static jobs.
     let fjob: &'static (dyn Fn(usize, usize) + Sync) = unsafe { std::mem::transmute(fref) };
-    for t in 1..=njobs {
-        let start = t * chunk;
-        let end = ((t + 1) * chunk).min(n);
+    for _ in 0..njobs {
         let latch = Arc::clone(&latch);
+        let cursor = Arc::clone(&cursor);
         pool.execute(move || {
-            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fjob(start, end)));
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                drain_chunks(fjob, &cursor, nchunks, chunk, n)
+            }));
             latch.chunk_done(r.err());
         });
     }
-    // Caller thread works too: chunk 0 runs here, not behind the queue.
-    let r0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, chunk.min(n))));
+    // Caller thread claims chunks too — never behind the queue.
+    let r0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        drain_chunks(fref, &cursor, nchunks, chunk, n)
+    }));
+    // A panicking claimant abandons its loop, but the cursor keeps handing
+    // the remaining chunks to the other claimants, so the wait terminates.
     let worker_panic = latch.wait(njobs);
     if let Err(p) = r0 {
         std::panic::resume_unwind(p);
     }
     if let Some(p) = worker_panic {
         std::panic::resume_unwind(p);
+    }
+}
+
+/// Claim-and-run loop shared by the pool jobs of one `scope_chunks` call.
+fn drain_chunks(
+    g: &(dyn Fn(usize, usize) + Sync),
+    cursor: &AtomicUsize,
+    nchunks: usize,
+    chunk: usize,
+    n: usize,
+) {
+    loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= nchunks {
+            break;
+        }
+        g(i * chunk, ((i + 1) * chunk).min(n));
     }
 }
 

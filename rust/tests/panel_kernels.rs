@@ -1,15 +1,22 @@
 //! Property tests pinning the shared weight-panel GEMM core bit-close to the
 //! seed's naive general-region formulation, across every axis the panel
 //! layout complicates: multiple regions per row, odd K tails (K not a
-//! multiple of the region or the NR tile), bit widths 1/2/4/8, thread counts
-//! 1/3, and N crossing tile boundaries. Plus the engine-level regression
-//! that prepared panels are cached (pointer identity across forward passes).
+//! multiple of the region or the NR tile), bit widths 1-8, thread counts
+//! 1/3, and N crossing tile boundaries. The SIMD dispatch arms (forced
+//! scalar vs whatever `simd::active()` selected on this host) must agree
+//! **bit-exactly** — integer accumulation is exact and the f32 correction is
+//! shared, so any difference is a kernel bug, not rounding. Plus the fused
+//! `im2col_quantized` vs `im2col` + `quantize_matrix` equivalence, and the
+//! engine-level regression that prepared panels are cached (pointer identity
+//! across forward passes).
 
 use std::collections::HashMap;
 
 use lqr::fixedpoint::gemm_packed::PackedMatrix;
+use lqr::fixedpoint::simd;
 use lqr::fixedpoint::{
-    gemm_lut_panel, gemm_panel, gemm_panel_packed, gemm_quantized_naive, WeightPanel,
+    gemm_lut_panel, gemm_lut_panel_with, gemm_panel, gemm_panel_packed, gemm_panel_packed_with,
+    gemm_panel_with, gemm_quantized_naive, im2col, im2col_quantized, WeightPanel,
 };
 use lqr::nn::forward::Scheme;
 use lqr::nn::{Arch, Engine, Layer, Precision};
@@ -99,6 +106,120 @@ fn lut_panel_matches_naive_oracle() {
                 format!("lut m={m} n={n} k={k} bits={bits} region={region} threads={threads}");
             rel_close(&got, &want, &ctx);
         }
+    });
+}
+
+#[test]
+fn dispatched_simd_matches_forced_scalar_bit_exactly() {
+    let scalar = simd::scalar_kernel();
+    let dispatched = simd::active();
+    prop::check_named("simd-vs-scalar-panel", 0x51D5, 64, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = rng.index(1, 9) as u8; // every width 1..=8
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits, region);
+        let wq = quantize_matrix(&w, bits, region);
+        let wp = WeightPanel::from_quantized(&wq);
+        let want = gemm_panel_with(&aq, &wp, 1, scalar);
+        // Both dispatch arms sit bit-exactly on the seed naive oracle: the
+        // integer dot is exact and the f32 correction order is shared.
+        let naive = gemm_quantized_naive(&aq, &wq, 1);
+        assert_eq!(
+            want.data(),
+            naive.data(),
+            "scalar panel vs naive: m={m} n={n} k={k} bits={bits} region={region}"
+        );
+        for threads in [1usize, 3] {
+            let got = gemm_panel_with(&aq, &wp, threads, dispatched);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "kernel {} vs scalar: m={m} n={n} k={k} bits={bits} region={region} threads={threads}",
+                dispatched.name
+            );
+        }
+    });
+}
+
+#[test]
+fn dispatched_simd_matches_forced_scalar_packed() {
+    let scalar = simd::scalar_kernel();
+    let dispatched = simd::active();
+    prop::check_named("simd-vs-scalar-packed", 0x51D6, 40, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = rng.index(1, 9) as u8;
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let ap = PackedMatrix::from_quantized(&quantize_matrix(&a, bits, region));
+        let wp = WeightPanel::from_packed(&PackedMatrix::from_quantized(&quantize_matrix(
+            &w, bits, region,
+        )));
+        let want = gemm_panel_packed_with(&ap, &wp, 1, scalar);
+        let got = gemm_panel_packed_with(&ap, &wp, 3, dispatched);
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "packed kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
+            dispatched.name
+        );
+    });
+}
+
+#[test]
+fn dispatched_bucket_matches_forced_scalar_lut() {
+    let scalar = simd::scalar_kernel();
+    let dispatched = simd::active();
+    prop::check_named("simd-vs-scalar-lut", 0x51D7, 40, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits = [1u8, 2, 3, 4][rng.below(4) as usize];
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits, region);
+        let wq = quantize_matrix(&w, 8, region); // paper: weights stay 8-bit
+        let wp = WeightPanel::from_quantized(&wq);
+        let want = gemm_lut_panel_with(&aq, &wp, 1, scalar);
+        let got = gemm_lut_panel_with(&aq, &wp, 3, dispatched);
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "lut kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
+            dispatched.name
+        );
+    });
+}
+
+#[test]
+fn im2col_quantized_equals_unfused_pipeline() {
+    // The fused lowering must reproduce im2col + quantize_matrix exactly:
+    // codes, scales, mins and code sums — across padding-heavy geometries,
+    // strides, every bit width and all three region schemes.
+    prop::check_named("im2col-fused-quant", 0xF05D, 48, |rng, _| {
+        let b = rng.index(1, 3);
+        let c = rng.index(1, 4);
+        let h = rng.index(3, 10);
+        let k = rng.index(1, h.min(5) + 1);
+        let stride = rng.index(1, 4);
+        let pad = rng.index(0, k); // up to k-1: every border patch clips
+        let bits = rng.index(1, 9) as u8;
+        let patch = c * k * k;
+        let region = match rng.below(3) {
+            0 => RegionSpec::PerRow,
+            1 => RegionSpec::PerTensor,
+            _ => RegionSpec::Size(rng.index(1, patch + 1)),
+        };
+        let x = Tensor::new(&[b, c, h, h], prop::gen_values(rng, b * c * h * h));
+        let (cols, dims) = im2col(&x, k, stride, pad);
+        let want = quantize_matrix(&cols, bits, region);
+        let (got, dims2) = im2col_quantized(&x, k, stride, pad, bits, region);
+        let ctx = format!("b={b} c={c} h={h} k={k} s={stride} p={pad} bits={bits} region={region}");
+        assert_eq!(dims, dims2, "{ctx}");
+        assert_eq!(got.rows, want.rows, "{ctx}");
+        assert_eq!(got.k, want.k, "{ctx}");
+        assert_eq!(got.codes, want.codes, "{ctx}");
+        assert_eq!(got.scales, want.scales, "{ctx}");
+        assert_eq!(got.mins, want.mins, "{ctx}");
+        assert_eq!(got.code_sums, want.code_sums, "{ctx}");
     });
 }
 
