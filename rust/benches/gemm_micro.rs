@@ -10,9 +10,14 @@
 //! (case, kernel) with ms, GMAC/s, speedup vs the blocked f32 baseline,
 //! speedup vs the seed's naive general-region i8 path, and (for the panel
 //! rows) speedup of the dispatched SIMD kernel over the forced-scalar one.
-//! The header records the detected ISA and the dispatcher's selected kernel
-//! so results are comparable across hosts. A `conv-fwd` case times the full
-//! engine conv path (fused im2col quantization) against the f32 engine.
+//! Every *other* SIMD arm the host supports (e.g. the NEON umlal tile on a
+//! dotprod host, AVX2 on a VNNI host) gets its own `i8-panel[name]` row so
+//! per-ISA comparisons are machine-readable too. The header records the
+//! detected ISA and the dispatcher's selected kernel so results are
+//! comparable across hosts. An `im2col-fused` case times the fused conv
+//! lowering single-threaded vs parallel, and a `conv-fwd` case times the
+//! full engine conv path (fused im2col quantization) against the f32
+//! engine.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -23,7 +28,7 @@ use lqr::fixedpoint::panel::{
     gemm_lut_panel, gemm_panel, gemm_panel_packed, gemm_panel_with, WeightPanel,
 };
 use lqr::fixedpoint::simd;
-use lqr::fixedpoint::{gemm_f32, gemm_quantized_naive};
+use lqr::fixedpoint::{gemm_f32, gemm_quantized_naive, im2col_quantized};
 use lqr::nn::{Arch, Engine, Layer, Precision};
 use lqr::quant::{quantize_matrix, RegionSpec};
 use lqr::tensor::Tensor;
@@ -212,6 +217,29 @@ fn main() {
                 speedup_vs_scalar: t_scalar / t_panel,
             });
 
+            // Non-default arms the host also supports (e.g. neon-umlal on a
+            // dotprod host, avx2-madd on a VNNI host): one row each, so the
+            // per-ISA ladder is visible from a single run.
+            for kernel in simd::supported_kernels() {
+                if kernel.name == "scalar" || kernel.name == simd::active().name {
+                    continue;
+                }
+                let t_arm = time(iters, || {
+                    std::hint::black_box(gemm_panel_with(&aq, &wpanel, threads, kernel));
+                });
+                records.push(Record {
+                    case: label,
+                    kernel: format!("i8-panel[{}](a{bits})", kernel.name),
+                    impl_name: kernel.name.into(),
+                    secs: t_arm,
+                    gmacs: gmacs(m, k, n, t_arm),
+                    speedup_vs_f32: t_f32 / t_arm,
+                    speedup_vs_naive: t_naive / t_arm,
+                    speedup_vs_scalar: t_scalar / t_arm,
+                });
+                print_row(records.last().unwrap());
+            }
+
             if bits == 2 {
                 let t_lut = time(iters, || {
                     std::hint::black_box(gemm_lut_panel(&aq, &wpanel, threads));
@@ -299,6 +327,47 @@ fn main() {
             speedup_vs_naive: 0.0,
             speedup_vs_scalar: 0.0,
         });
+    }
+
+    // Fused conv lowering: im2col + region min/max + code emission in one
+    // pass, single-threaded vs chunked over the shared pool — the runtime
+    // activation-quantization cost the paper's §VI overhead concern is
+    // about, on an AlexNet-conv1-shaped input.
+    {
+        let (b, c, hh, kk, stride, pad) = (8usize, 3usize, 32usize, 5usize, 1usize, 2usize);
+        let x = Tensor::new(&[b, c, hh, hh], rng.uniform_vec(b * c * hh * hh, 0.0, 1.0));
+        let label = "im2col b8x3x32x32 k5";
+        let t_one = time(iters, || {
+            std::hint::black_box(im2col_quantized(&x, kk, stride, pad, 8, RegionSpec::PerRow, 1));
+        });
+        records.push(Record {
+            case: label,
+            kernel: "im2col-fused(t1)".into(),
+            impl_name: "-".into(),
+            secs: t_one,
+            gmacs: 0.0,
+            speedup_vs_f32: 0.0,
+            speedup_vs_naive: 0.0,
+            speedup_vs_scalar: 0.0,
+        });
+        print_row(records.last().unwrap());
+        let t_par = time(iters, || {
+            std::hint::black_box(im2col_quantized(
+                &x, kk, stride, pad, 8, RegionSpec::PerRow, threads,
+            ));
+        });
+        records.push(Record {
+            case: label,
+            kernel: format!("im2col-fused(t{threads})"),
+            impl_name: "-".into(),
+            secs: t_par,
+            gmacs: 0.0,
+            speedup_vs_f32: 0.0,
+            speedup_vs_naive: 0.0,
+            // Reuse the ratio column: parallel vs single-threaded lowering.
+            speedup_vs_scalar: t_one / t_par,
+        });
+        print_row(records.last().unwrap());
     }
 
     // Conv forward path: the engine at LQ-8 (fused im2col quantization — no

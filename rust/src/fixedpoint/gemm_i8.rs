@@ -104,9 +104,10 @@ pub(crate) fn dot_u8(a: &[u8], b: &[u8]) -> i32 {
     a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
 }
 
-pub(crate) struct SyncPtr(pub *mut f32);
+/// Raw output pointer shared across `scope_chunks` workers.
+pub(crate) struct SyncPtr<T>(pub *mut T);
 // SAFETY: callers partition the output rows disjointly across threads.
-unsafe impl Sync for SyncPtr {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
 
 #[cfg(test)]
 mod tests {

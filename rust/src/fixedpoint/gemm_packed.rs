@@ -20,19 +20,29 @@ use super::panel::{gemm_panel_packed, WeightPanel};
 /// A [`QuantizedMatrix`] with its codes bit-packed.
 #[derive(Debug, Clone)]
 pub struct PackedMatrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Reduction length (codes per row before packing).
     pub k: usize,
+    /// Code width in bits (1..=8).
     pub bits: u8,
     /// One packed stream per row (row-aligned so rows can unpack independently).
     pub rows_packed: Vec<Packed>,
+    /// Per-region scales, `rows * regions_per_row`, row-major.
     pub scales: Vec<f32>,
+    /// Per-region minimums, same layout.
     pub mins: Vec<f32>,
+    /// Per-region code sums (the `S_qw` term of eq. 7), same layout.
     pub code_sums: Vec<f32>,
+    /// Regions per row.
     pub regions_per_row: usize,
+    /// Region length along K (tail region may be shorter).
     pub group: usize,
 }
 
 impl PackedMatrix {
+    /// Pack each row's codes into a dense bitstream, carrying the affine
+    /// side-cars over unchanged.
     pub fn from_quantized(q: &QuantizedMatrix) -> PackedMatrix {
         let rows_packed = (0..q.rows)
             .map(|i| crate::quant::codec::pack(q.row_codes(i), q.bits))

@@ -8,6 +8,9 @@
 use crate::quant::scheme::{encode_region, QuantizedMatrix};
 use crate::quant::RegionSpec;
 use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+
+use super::gemm_i8::SyncPtr;
 
 /// Output spatial size for a conv dimension.
 pub fn conv_output_size(h: usize, k: usize, stride: usize, pad: usize) -> usize {
@@ -93,6 +96,14 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, (usiz
 /// `RegionSpec::PerTensor` (the DQ scheme) needs the global min/max before
 /// any code can be emitted; that runs as a copy-free prepass over the same
 /// span geometry — still no patch matrix.
+///
+/// Both passes chunk the `B*Ho*Wo` patch rows over
+/// [`scope_chunks`] (`threads <= 1` runs inline on the caller): every row's
+/// min/max, codes and affine params depend only on that row's source spans,
+/// so the parallel output is **bit-identical** to the single-threaded one —
+/// the DQ prepass merges per-chunk `(min, max, written)` partials, which is
+/// exact because min/max are order-independent. Pinned by
+/// `rust/tests/panel_kernels.rs`.
 pub fn im2col_quantized(
     x: &Tensor,
     k: usize,
@@ -100,6 +111,7 @@ pub fn im2col_quantized(
     pad: usize,
     bits: u8,
     region: RegionSpec,
+    threads: usize,
 ) -> (QuantizedMatrix, (usize, usize, usize)) {
     assert_eq!(x.rank(), 4, "im2col needs NCHW, got {:?}", x.shape());
     assert!((1..=8).contains(&bits), "bits must be 1..=8, got {bits}");
@@ -112,26 +124,37 @@ pub fn im2col_quantized(
     let rpr = region.regions_per_row(patch);
     let levels = ((1u32 << bits) - 1) as f32;
     let xd = x.data();
+    // Flat row index -> output position; rows are the parallel unit.
+    let row_pos = |row: usize| -> (usize, usize, usize) {
+        (row / (ho * wo), (row / wo) % ho, row % wo)
+    };
 
     // DQ prepass: global min/max folded over the source spans directly (no
     // writes at all), padding zeros accounted once via the written count.
+    // Chunks fold privately and merge under the lock — min/max merging is
+    // exact regardless of chunk order.
     let (global_min, global_max) = if region.per_tensor() {
-        let mut mn = f32::INFINITY;
-        let mut mx = f32::NEG_INFINITY;
-        let mut written = 0usize;
-        for bi in 0..b {
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |_, src| {
-                        for &v in src {
-                            mn = mn.min(v);
-                            mx = mx.max(v);
-                        }
-                        written += src.len();
-                    });
-                }
+        let merged = std::sync::Mutex::new((f32::INFINITY, f32::NEG_INFINITY, 0usize));
+        scope_chunks(rows, threads, |r0, r1| {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            let mut written = 0usize;
+            for row in r0..r1 {
+                let (bi, oy, ox) = row_pos(row);
+                for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |_, src| {
+                    for &v in src {
+                        mn = mn.min(v);
+                        mx = mx.max(v);
+                    }
+                    written += src.len();
+                });
             }
-        }
+            let mut m = merged.lock().unwrap();
+            m.0 = m.0.min(mn);
+            m.1 = m.1.max(mx);
+            m.2 += written;
+        });
+        let (mut mn, mut mx, written) = merged.into_inner().unwrap();
         if written < rows * patch {
             mn = mn.min(0.0);
             mx = mx.max(0.0);
@@ -146,69 +169,80 @@ pub fn im2col_quantized(
     let mut mins = vec![0.0f32; rows * rpr];
     let mut code_sums = vec![0.0f32; rows * rpr];
 
-    let mut scratch = vec![0.0f32; patch];
-    let mut rmn = vec![f32::INFINITY; rpr];
-    let mut rmx = vec![f32::NEG_INFINITY; rpr];
-    let mut rcount = vec![0usize; rpr];
-
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = (bi * ho + oy) * wo + ox;
-                scratch.fill(0.0);
-                rmn.fill(f32::INFINITY);
-                rmx.fill(f32::NEG_INFINITY);
-                rcount.fill(0);
-                for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |dst, src| {
-                    scratch[dst..dst + src.len()].copy_from_slice(src);
-                    if region.per_tensor() {
-                        return; // DQ uses the global prepass min/max
-                    }
-                    // Fold min/max into each region the span overlaps while
-                    // the line is hot.
-                    let mut off = dst;
-                    let mut rem = src;
-                    while !rem.is_empty() {
-                        let r = off / g;
-                        let take = (((r + 1) * g).min(patch) - off).min(rem.len());
-                        let (seg, rest) = rem.split_at(take);
-                        let (mut mn, mut mx) = (rmn[r], rmx[r]);
-                        for &v in seg {
-                            mn = mn.min(v);
-                            mx = mx.max(v);
-                        }
-                        rmn[r] = mn;
-                        rmx[r] = mx;
-                        rcount[r] += take;
-                        off += take;
-                        rem = rest;
-                    }
-                });
-                let crow = &mut codes[row * patch..(row + 1) * patch];
-                for r in 0..rpr {
-                    let start = r * g;
-                    let end = ((r + 1) * g).min(patch);
-                    let (mn, mx) = if region.per_tensor() {
-                        (global_min, global_max)
-                    } else {
-                        let (mut mn, mut mx) = (rmn[r], rmx[r]);
-                        if rcount[r] < end - start {
-                            // Region contains padding zeros.
-                            mn = mn.min(0.0);
-                            mx = mx.max(0.0);
-                        }
-                        (mn, mx)
-                    };
-                    let idx = row * rpr + r;
-                    let (s, sum) =
-                        encode_region(&scratch[start..end], mn, mx, levels, &mut crow[start..end]);
-                    scales[idx] = s;
-                    mins[idx] = mn;
-                    code_sums[idx] = sum;
+    let codes_ptr = SyncPtr(codes.as_mut_ptr());
+    let scales_ptr = SyncPtr(scales.as_mut_ptr());
+    let mins_ptr = SyncPtr(mins.as_mut_ptr());
+    let sums_ptr = SyncPtr(code_sums.as_mut_ptr());
+    scope_chunks(rows, threads, |r0, r1| {
+        let (codes_ptr, scales_ptr) = (&codes_ptr, &scales_ptr);
+        let (mins_ptr, sums_ptr) = (&mins_ptr, &sums_ptr);
+        // One patch-sized scratch row per chunk — stays L1-resident.
+        let mut scratch = vec![0.0f32; patch];
+        let mut rmn = vec![f32::INFINITY; rpr];
+        let mut rmx = vec![f32::NEG_INFINITY; rpr];
+        let mut rcount = vec![0usize; rpr];
+        for row in r0..r1 {
+            let (bi, oy, ox) = row_pos(row);
+            scratch.fill(0.0);
+            rmn.fill(f32::INFINITY);
+            rmx.fill(f32::NEG_INFINITY);
+            rcount.fill(0);
+            for_each_row_span(xd, (c, h, w), k, stride, pad, bi, oy, ox, |dst, src| {
+                scratch[dst..dst + src.len()].copy_from_slice(src);
+                if region.per_tensor() {
+                    return; // DQ uses the global prepass min/max
                 }
+                // Fold min/max into each region the span overlaps while
+                // the line is hot.
+                let mut off = dst;
+                let mut rem = src;
+                while !rem.is_empty() {
+                    let r = off / g;
+                    let take = (((r + 1) * g).min(patch) - off).min(rem.len());
+                    let (seg, rest) = rem.split_at(take);
+                    let (mut mn, mut mx) = (rmn[r], rmx[r]);
+                    for &v in seg {
+                        mn = mn.min(v);
+                        mx = mx.max(v);
+                    }
+                    rmn[r] = mn;
+                    rmx[r] = mx;
+                    rcount[r] += take;
+                    off += take;
+                    rem = rest;
+                }
+            });
+            // SAFETY: row `row` is written by exactly one chunk — the
+            // codes / scales / mins / code_sums slices below are disjoint
+            // per row across the whole scope.
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(codes_ptr.0.add(row * patch), patch) };
+            let srow =
+                unsafe { std::slice::from_raw_parts_mut(scales_ptr.0.add(row * rpr), rpr) };
+            let mrow = unsafe { std::slice::from_raw_parts_mut(mins_ptr.0.add(row * rpr), rpr) };
+            let qrow = unsafe { std::slice::from_raw_parts_mut(sums_ptr.0.add(row * rpr), rpr) };
+            for r in 0..rpr {
+                let start = r * g;
+                let end = ((r + 1) * g).min(patch);
+                let (mn, mx) = if region.per_tensor() {
+                    (global_min, global_max)
+                } else {
+                    let (mut mn, mut mx) = (rmn[r], rmx[r]);
+                    if rcount[r] < end - start {
+                        // Region contains padding zeros.
+                        mn = mn.min(0.0);
+                        mx = mx.max(0.0);
+                    }
+                    (mn, mx)
+                };
+                let (s, sum) =
+                    encode_region(&scratch[start..end], mn, mx, levels, &mut crow[start..end]);
+                srow[r] = s;
+                mrow[r] = mn;
+                qrow[r] = sum;
             }
         }
-    }
+    });
     (
         QuantizedMatrix { rows, k: patch, bits, region, codes, scales, mins, code_sums },
         (b, ho, wo),

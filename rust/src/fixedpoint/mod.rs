@@ -29,11 +29,14 @@
 //! # SIMD dispatch
 //!
 //! [`simd`] selects the microkernel implementation **once per process** via
-//! `is_x86_feature_detected!`: an exact AVX2 widening-`madd` tile, an
-//! AVX-512 VNNI `vpdpbusd` tile (cargo feature `avx512`), or the portable
-//! scalar loop — which is also what `LQR_FORCE_SCALAR=1` pins, so the
-//! fallback arm stays testable on SIMD hosts. All arms are bit-exact
-//! against each other (pinned by `rust/tests/panel_kernels.rs`).
+//! runtime feature detection: on x86-64 an exact AVX2 widening-`madd` tile
+//! or an AVX-512 VNNI `vpdpbusd` tile (cargo feature `avx512`), on aarch64
+//! a NEON widening-`umlal` tile or a `udot` tile (cargo feature `dotprod`)
+//! — the ISA of the IoT-class boards the paper targets — and everywhere the
+//! portable scalar loop, which is also what `LQR_FORCE_SCALAR=1` pins, so
+//! the fallback arm stays testable on SIMD hosts. All arms are bit-exact
+//! against each other (pinned by `rust/tests/panel_kernels.rs`); the
+//! contract each arm satisfies is documented in `docs/kernel-dispatch.md`.
 //!
 //! # Conv lowering
 //!
@@ -43,7 +46,9 @@
 //! - [`im2col_quantized`] — the quantized-path lowering: per-region min/max
 //!   and u8 code emission fused into the span copies, so runtime activation
 //!   quantization costs no extra pass over a materialized patch matrix (the
-//!   paper's §VI overhead concern).
+//!   paper's §VI overhead concern). Patch rows chunk over the shared thread
+//!   pool, so the lowering parallelizes like the GEMM it feeds — and stays
+//!   bit-identical to the single-threaded path.
 pub mod gemm_f32;
 pub mod gemm_i8;
 pub mod gemm_lut;

@@ -16,16 +16,17 @@
 //! - [`gemm_panel`] / [`gemm_panel_packed`] run a register-tiled
 //!   [`MR`]x[`NR`] microkernel selected at runtime by the SIMD dispatcher
 //!   ([`super::simd`]): explicit AVX2 / AVX-512-VNNI widening integer MACs
-//!   where the host supports them, the portable scalar tile otherwise.
-//!   Arbitrary regions-per-row and odd K tails are handled by the region
-//!   loop itself (the tail region is just shorter).
+//!   on x86-64, NEON `umlal` / `udot` tiles on aarch64, the portable scalar
+//!   tile otherwise (contract in `docs/kernel-dispatch.md`). Arbitrary
+//!   regions-per-row and odd K tails are handled by the region loop itself
+//!   (the tail region is just shorter).
 //! - [`gemm_lut_panel`] replaces the inner multiply with §V code bucketing,
 //!   bucketing a whole `NR`-wide tile per activation row per region instead
 //!   of re-widening the weight row for every `(i, j)` pair; the bucketing
 //!   pass dispatches through the same kernel table.
 //!
 //! The outer loops run an **M-block x N-tile schedule**: activation rows are
-//! grouped into L2-sized blocks ([`m_block_rows`]), each weight tile streams
+//! grouped into L2-sized blocks (`m_block_rows`), each weight tile streams
 //! through a whole block of rows before the next tile loads, and
 //! `scope_chunks` parallelizes over the M-blocks. For batch-sized M this
 //! keeps every weight tile's codes resident across dozens of row visits
@@ -61,6 +62,7 @@ pub struct WeightPanel {
     pub n: usize,
     /// Reduction length.
     pub k: usize,
+    /// Code width in bits (1..=8).
     pub bits: u8,
     /// Region length along K (tail region may be shorter).
     pub group: usize,

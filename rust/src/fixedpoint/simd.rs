@@ -8,6 +8,11 @@
 //! point routes through it; [`scalar_kernel`] is the portable fallback and
 //! the force-disable target (`LQR_FORCE_SCALAR=1`, read at first dispatch).
 //!
+//! The contract every arm satisfies — bit-exactness vs the scalar oracle,
+//! the alignment/tail invariants an arm may assume, and the checklist for
+//! adding the next ISA — is documented in `docs/kernel-dispatch.md` at the
+//! repo root; read it before touching this table.
+//!
 //! Implementations:
 //!
 //! - **scalar** — the PR 1 loops, kept verbatim as the portable arm and the
@@ -26,6 +31,19 @@
 //!   the `128 * sum(a)` compensation back per activation row. 64 exact MACs
 //!   per instruction. Feature-gated because the AVX-512 intrinsics need a
 //!   recent stable toolchain; the portable and AVX2 arms build everywhere.
+//! - **neon-umlal** (aarch64) — the ARM-class boards the paper targets. One
+//!   16-byte weight line widens once (`vmovl_u8`) to two u16x8 vectors and
+//!   each activation broadcasts as u16; `vmlal_u16` accumulates exact
+//!   u16 x u16 products into u32 lanes. No saturation anywhere on this path,
+//!   and the u32 totals stay below 2^31 (region < 2^15), so the final
+//!   u32 -> i32 reinterpret is lossless.
+//! - **neon-udot** (cargo feature `dotprod`, needs `dotprod`/`asimddp` at
+//!   runtime) — `vdotq_u32` (`udot`) computes u8 x u8 groups of four, so
+//!   unlike `vpdpbusd` it needs **no** bias-flip compensation: both operands
+//!   are already unsigned. The 4x16 code block transposes with two zip
+//!   rounds (same shuffle shape as the VNNI arm) so each 32-bit group holds
+//!   one column's four codes. Feature-gated because the dotprod intrinsics
+//!   stabilized later than the core NEON set.
 //!
 //! All integer accumulation is exact (products fit i32 for regions shorter
 //! than 2^15 — every model layer here), and the f32 affine correction in the
@@ -115,9 +133,42 @@ pub fn scalar_kernel() -> &'static Kernel {
     &SCALAR_K
 }
 
+#[cfg(target_arch = "x86_64")]
+static AVX2_K: Kernel = Kernel {
+    name: "avx2-madd",
+    isa: "avx2",
+    micro: x86::micro_avx2_entry,
+    bucket: x86::bucket_avx2_entry,
+};
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+static VNNI_K: Kernel = Kernel {
+    name: "vnni-dpbusd",
+    isa: "avx512vnni",
+    micro: x86::micro_vnni_entry,
+    bucket: x86::bucket_avx2_entry,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON_K: Kernel = Kernel {
+    name: "neon-umlal",
+    isa: "neon",
+    micro: aarch64::micro_neon_entry,
+    bucket: aarch64::bucket_neon_entry,
+};
+
+#[cfg(all(target_arch = "aarch64", feature = "dotprod"))]
+static DOTPROD_K: Kernel = Kernel {
+    name: "neon-udot",
+    isa: "neon-dotprod",
+    micro: aarch64::micro_dotprod_entry,
+    bucket: aarch64::bucket_neon_entry,
+};
+
 /// The kernel the dispatcher selected for this host. Selection runs once:
 /// scalar when forced via `LQR_FORCE_SCALAR=1`, otherwise the widest ISA
-/// `is_x86_feature_detected!` reports (scalar on non-x86 targets).
+/// the target's feature-detection macro reports — `is_x86_feature_detected!`
+/// on x86-64, `is_aarch64_feature_detected!` on aarch64, scalar elsewhere.
 pub fn active() -> &'static Kernel {
     static ACTIVE: OnceLock<Kernel> = OnceLock::new();
     ACTIVE.get_or_init(select)
@@ -140,7 +191,17 @@ pub fn detected_isa() -> &'static str {
             "sse2"
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("dotprod") {
+            "neon-dotprod"
+        } else if std::arch::is_aarch64_feature_detected!("neon") {
+            "neon"
+        } else {
+            "portable"
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         "portable"
     }
@@ -156,32 +217,51 @@ fn select() -> Kernel {
     if force_scalar() {
         return SCALAR_K;
     }
+    // One detection ladder serves dispatch, tests and bench alike:
+    // `supported_kernels` orders arms narrowest-first / widest-last, so the
+    // dispatcher's pick is the last entry. A new arm registered there is
+    // automatically dispatchable — and automatically pinned by the tests.
+    **supported_kernels().last().expect("scalar arm is always present")
+}
+
+/// Every kernel this build can run on this host, ordered narrowest-first
+/// (scalar) to widest-last (what [`active`] dispatches) — including arms
+/// the dispatcher would *not* select (e.g. `neon-umlal` on a host where
+/// `neon-udot` wins). Tests pin each arm against the scalar oracle through
+/// this, so the non-default arms stay green instead of only the widest one;
+/// the bench reports per-arm timings from the same list. Ignores
+/// `LQR_FORCE_SCALAR` (that flag pins [`active`], not hardware capability).
+pub fn supported_kernels() -> Vec<&'static Kernel> {
+    #[allow(unused_mut)]
+    let mut ks: Vec<&'static Kernel> = vec![&SCALAR_K];
     #[cfg(target_arch = "x86_64")]
     {
+        if is_x86_feature_detected!("avx2") {
+            ks.push(&AVX2_K);
+        }
         #[cfg(feature = "avx512")]
         {
             if is_x86_feature_detected!("avx512f")
                 && is_x86_feature_detected!("avx512bw")
                 && is_x86_feature_detected!("avx512vnni")
             {
-                return Kernel {
-                    name: "vnni-dpbusd",
-                    isa: "avx512vnni",
-                    micro: x86::micro_vnni_entry,
-                    bucket: x86::bucket_avx2_entry,
-                };
+                ks.push(&VNNI_K);
             }
         }
-        if is_x86_feature_detected!("avx2") {
-            return Kernel {
-                name: "avx2-madd",
-                isa: "avx2",
-                micro: x86::micro_avx2_entry,
-                bucket: x86::bucket_avx2_entry,
-            };
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            ks.push(&NEON_K);
+        }
+        #[cfg(feature = "dotprod")]
+        {
+            if std::arch::is_aarch64_feature_detected!("dotprod") {
+                ks.push(&DOTPROD_K);
+            }
         }
     }
-    SCALAR_K
+    ks
 }
 
 /// Portable `MR`x`NR` microkernel: fixed-width u8 x u8 -> i32 MACs that LLVM
@@ -425,6 +505,210 @@ mod x86 {
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+mod aarch64 {
+    use super::{MAX_CODES, MR, NR};
+    use std::arch::aarch64::*;
+
+    // Safe entry shims, mirroring the x86 module: the dispatcher installs
+    // these fn pointers only after `is_aarch64_feature_detected!` succeeded,
+    // so the unsafe target_feature call inside each shim is sound.
+
+    pub fn micro_neon_entry(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        // SAFETY: selected only when is_aarch64_feature_detected!("neon") held.
+        unsafe { micro_neon(abuf, k, rows, start, end, wseg, acc) }
+    }
+
+    pub fn bucket_neon_entry(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+        // SAFETY: selected only when is_aarch64_feature_detected!("neon") held.
+        unsafe { bucket_neon(qa, wseg, buckets) }
+    }
+
+    #[cfg(feature = "dotprod")]
+    pub fn micro_dotprod_entry(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        // SAFETY: selected only when is_aarch64_feature_detected!("dotprod") held.
+        unsafe { micro_dotprod(abuf, k, rows, start, end, wseg, acc) }
+    }
+
+    /// Store the `[4 x u32x4]` vector accumulators of each row out into the
+    /// caller's i32 lanes — shared epilogue of both aarch64 tiles. The
+    /// u32 -> i32 reinterpret is lossless: per-region totals stay below
+    /// 2^31 for regions shorter than 2^15, the shared contract.
+    #[target_feature(enable = "neon")]
+    unsafe fn store_acc(
+        vacc: &[[uint32x4_t; 4]; MR],
+        rows: usize,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        for mr in 0..rows {
+            let mut tmp = [0u32; NR];
+            vst1q_u32(tmp.as_mut_ptr(), vacc[mr][0]);
+            vst1q_u32(tmp.as_mut_ptr().add(4), vacc[mr][1]);
+            vst1q_u32(tmp.as_mut_ptr().add(8), vacc[mr][2]);
+            vst1q_u32(tmp.as_mut_ptr().add(12), vacc[mr][3]);
+            let lane = &mut acc[mr];
+            for jj in 0..NR {
+                lane[jj] += tmp[jj] as i32;
+            }
+        }
+    }
+
+    /// NEON microkernel: one K position per step. The 16-byte weight line
+    /// widens once (`vmovl_u8`, amortized over the MR rows) to two u16x8
+    /// vectors; each activation broadcasts as u16 and `vmlal_u16` widens
+    /// u16 x u16 products into the u32 accumulators — exact at every step
+    /// (255 * 255 = 65025 fits u16, and the per-region u32 totals stay
+    /// below 2^31 for regions shorter than 2^15, the shared contract).
+    #[target_feature(enable = "neon")]
+    unsafe fn micro_neon(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR == 16, "NEON microkernel assumes one 16-byte line per position");
+        debug_assert!(wseg.len() >= (end - start) * NR);
+        debug_assert!(rows <= MR && abuf.len() >= rows.saturating_sub(1) * k + end);
+        let len = end - start;
+        let wp = wseg.as_ptr();
+        let mut vacc = [[vdupq_n_u32(0); 4]; MR];
+        for p in 0..len {
+            let w = vld1q_u8(wp.add(p * NR));
+            let wlo = vmovl_u8(vget_low_u8(w)); // jj 0..8 as u16
+            let whi = vmovl_u8(vget_high_u8(w)); // jj 8..16 as u16
+            for mr in 0..rows {
+                let a = *abuf.get_unchecked(mr * k + start + p);
+                if a == 0 {
+                    continue; // ReLU-sparse activations quantize to code 0 often
+                }
+                let av = vdup_n_u16(a as u16);
+                let lane = vacc.get_unchecked_mut(mr);
+                lane[0] = vmlal_u16(lane[0], vget_low_u16(wlo), av);
+                lane[1] = vmlal_u16(lane[1], vget_high_u16(wlo), av);
+                lane[2] = vmlal_u16(lane[2], vget_low_u16(whi), av);
+                lane[3] = vmlal_u16(lane[3], vget_high_u16(whi), av);
+            }
+        }
+        store_acc(&vacc, rows, acc);
+    }
+
+    /// NEON bucketing: one 16-wide u8 weight line widens to four i32x4
+    /// vectors and adds into the bucket row its activation code selects —
+    /// the §V add-only datapath at vector width.
+    #[target_feature(enable = "neon")]
+    unsafe fn bucket_neon(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
+        debug_assert!(NR == 16);
+        debug_assert!(wseg.len() >= qa.len() * NR);
+        let wp = wseg.as_ptr();
+        for (pi, &c) in qa.iter().enumerate() {
+            let w = vld1q_u8(wp.add(pi * NR));
+            let wlo = vmovl_u8(vget_low_u8(w));
+            let whi = vmovl_u8(vget_high_u8(w));
+            let w0 = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(wlo)));
+            let w1 = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(wlo)));
+            let w2 = vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(whi)));
+            let w3 = vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(whi)));
+            // Checked index: match the scalar arm's panic on an out-of-range
+            // code instead of turning bad caller data into unchecked writes
+            // (same policy as the AVX2 bucketing arm).
+            let bp = buckets[c as usize].as_mut_ptr();
+            vst1q_s32(bp, vaddq_s32(vld1q_s32(bp), w0));
+            vst1q_s32(bp.add(4), vaddq_s32(vld1q_s32(bp.add(4)), w1));
+            vst1q_s32(bp.add(8), vaddq_s32(vld1q_s32(bp.add(8)), w2));
+            vst1q_s32(bp.add(12), vaddq_s32(vld1q_s32(bp.add(12)), w3));
+        }
+    }
+
+    /// Dotprod microkernel: four K positions per step via `udot`
+    /// (`vdotq_u32`), which sums u8 x u8 groups of four into u32 lanes.
+    /// Both operands are unsigned, so unlike the VNNI arm there is no
+    /// bias-flip and no `128 * sum(a)` compensation — `udot` is exact on the
+    /// raw codes. The 4x16 code block transposes with two zip rounds
+    /// (`vzip1q_u8`/`vzip2q_u8` then the u16 pair) so each 32-bit group
+    /// holds one column's four consecutive codes, matching the 4-byte
+    /// activation broadcast.
+    #[cfg(feature = "dotprod")]
+    #[target_feature(enable = "neon,dotprod")]
+    unsafe fn micro_dotprod(
+        abuf: &[u8],
+        k: usize,
+        rows: usize,
+        start: usize,
+        end: usize,
+        wseg: &[u8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR == 16);
+        debug_assert!(wseg.len() >= (end - start) * NR);
+        let len = end - start;
+        let wp = wseg.as_ptr();
+        let mut vacc = [[vdupq_n_u32(0); 4]; MR];
+        let mut p = 0usize;
+        while p + 4 <= len {
+            let w0 = vld1q_u8(wp.add(p * NR));
+            let w1 = vld1q_u8(wp.add((p + 1) * NR));
+            let w2 = vld1q_u8(wp.add((p + 2) * NR));
+            let w3 = vld1q_u8(wp.add((p + 3) * NR));
+            let t0 = vzip1q_u8(w0, w1);
+            let t1 = vzip2q_u8(w0, w1);
+            let t2 = vzip1q_u8(w2, w3);
+            let t3 = vzip2q_u8(w2, w3);
+            let (t0, t1) = (vreinterpretq_u16_u8(t0), vreinterpretq_u16_u8(t1));
+            let (t2, t3) = (vreinterpretq_u16_u8(t2), vreinterpretq_u16_u8(t3));
+            // columns 0..4 (each lane-group = 4 consecutive codes), 4..8,
+            // 8..12, 12..16:
+            let u0 = vreinterpretq_u8_u16(vzip1q_u16(t0, t2));
+            let u1 = vreinterpretq_u8_u16(vzip2q_u16(t0, t2));
+            let u2 = vreinterpretq_u8_u16(vzip1q_u16(t1, t3));
+            let u3 = vreinterpretq_u8_u16(vzip2q_u16(t1, t3));
+            for mr in 0..rows {
+                let ap = abuf.as_ptr().add(mr * k + start + p);
+                let a = u32::from_le_bytes([*ap, *ap.add(1), *ap.add(2), *ap.add(3)]);
+                let av = vreinterpretq_u8_u32(vdupq_n_u32(a));
+                let lane = vacc.get_unchecked_mut(mr);
+                lane[0] = vdotq_u32(lane[0], av, u0);
+                lane[1] = vdotq_u32(lane[1], av, u1);
+                lane[2] = vdotq_u32(lane[2], av, u2);
+                lane[3] = vdotq_u32(lane[3], av, u3);
+            }
+            p += 4;
+        }
+        // Scalar tail (at most 3 positions — short tail regions only).
+        for pt in p..len {
+            for mr in 0..rows {
+                let a = *abuf.get_unchecked(mr * k + start + pt) as i32;
+                if a == 0 {
+                    continue;
+                }
+                let lane = &mut acc[mr];
+                for jj in 0..NR {
+                    lane[jj] += a * *wseg.get_unchecked(pt * NR + jj) as i32;
+                }
+            }
+        }
+        store_acc(&vacc, rows, acc);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,39 +735,46 @@ mod tests {
     }
 
     #[test]
-    fn active_kernel_matches_scalar_on_random_segments() {
-        let kernel = active();
-        let mut rng = Rng::new(0x51D0);
-        for case in 0..200 {
-            let k = 1 + (rng.below(96) as usize);
-            let rows = 1 + (rng.below(MR as u64) as usize);
-            let start = rng.below(k as u64) as usize;
-            let end = start + 1 + rng.below((k - start) as u64) as usize;
-            let abuf: Vec<u8> = (0..rows * k).map(|_| rng.below(256) as u8).collect();
-            let wseg: Vec<u8> = (0..(end - start) * NR).map(|_| rng.below(256) as u8).collect();
-            let want = ref_acc(&abuf, k, rows, start, end, &wseg);
-            let mut got = [[0i32; NR]; MR];
-            kernel.run_micro(&abuf, k, rows, start, end, &wseg, &mut got);
-            assert_eq!(got, want, "case {case} k={k} rows={rows} seg={start}..{end}");
-            let mut got_scalar = [[0i32; NR]; MR];
-            scalar_kernel().run_micro(&abuf, k, rows, start, end, &wseg, &mut got_scalar);
-            assert_eq!(got_scalar, want, "scalar arm, case {case}");
+    fn every_supported_kernel_matches_scalar_on_random_segments() {
+        // Covers the dispatched arm AND the non-default arms (e.g. both the
+        // neon-umlal and neon-udot tiles on a dotprod-capable aarch64 host,
+        // avx2-madd on a VNNI host) — bit-exact, per the dispatch contract.
+        for kernel in supported_kernels() {
+            let mut rng = Rng::new(0x51D0);
+            for case in 0..200 {
+                let k = 1 + (rng.below(96) as usize);
+                let rows = 1 + (rng.below(MR as u64) as usize);
+                let start = rng.below(k as u64) as usize;
+                let end = start + 1 + rng.below((k - start) as u64) as usize;
+                let abuf: Vec<u8> = (0..rows * k).map(|_| rng.below(256) as u8).collect();
+                let wseg: Vec<u8> =
+                    (0..(end - start) * NR).map(|_| rng.below(256) as u8).collect();
+                let want = ref_acc(&abuf, k, rows, start, end, &wseg);
+                let mut got = [[0i32; NR]; MR];
+                kernel.run_micro(&abuf, k, rows, start, end, &wseg, &mut got);
+                assert_eq!(
+                    got, want,
+                    "kernel {} case {case} k={k} rows={rows} seg={start}..{end}",
+                    kernel.name
+                );
+            }
         }
     }
 
     #[test]
-    fn active_bucket_matches_scalar() {
-        let kernel = active();
-        let mut rng = Rng::new(0x51D1);
-        for bits in [1u8, 2, 4] {
-            let len = 1 + (rng.below(120) as usize);
-            let qa: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
-            let wseg: Vec<u8> = (0..len * NR).map(|_| rng.below(256) as u8).collect();
-            let mut want = [[0i32; NR]; MAX_CODES];
-            scalar_kernel().run_bucket(&qa, &wseg, &mut want);
-            let mut got = [[0i32; NR]; MAX_CODES];
-            kernel.run_bucket(&qa, &wseg, &mut got);
-            assert_eq!(got, want, "bits={bits} len={len}");
+    fn every_supported_bucket_matches_scalar() {
+        for kernel in supported_kernels() {
+            let mut rng = Rng::new(0x51D1);
+            for bits in [1u8, 2, 4] {
+                let len = 1 + (rng.below(120) as usize);
+                let qa: Vec<u8> = (0..len).map(|_| rng.below(1 << bits) as u8).collect();
+                let wseg: Vec<u8> = (0..len * NR).map(|_| rng.below(256) as u8).collect();
+                let mut want = [[0i32; NR]; MAX_CODES];
+                scalar_kernel().run_bucket(&qa, &wseg, &mut want);
+                let mut got = [[0i32; NR]; MAX_CODES];
+                kernel.run_bucket(&qa, &wseg, &mut got);
+                assert_eq!(got, want, "kernel {} bits={bits} len={len}", kernel.name);
+            }
         }
     }
 
@@ -495,5 +786,12 @@ mod tests {
         // detection never panics and returns a non-empty tag
         assert!(!detected_isa().is_empty());
         assert!(!active().name.is_empty());
+        // the supported list always starts with the scalar arm, names unique
+        let ks = supported_kernels();
+        assert_eq!(ks[0].name, "scalar");
+        let names: std::collections::HashSet<_> = ks.iter().map(|k| k.name).collect();
+        assert_eq!(names.len(), ks.len(), "kernel names must be unique");
+        // the dispatcher's pick is always one of the supported arms
+        assert!(names.contains(active().name) || active().name == "scalar");
     }
 }

@@ -4,6 +4,11 @@
 //! Constrained IoT Devices with Local Quantization Region" (Yang et al.,
 //! 2018). See DESIGN.md for the system inventory and per-experiment index.
 //!
+//! Start with `rust/README.md` (crate map, the quantized conv/GEMM data
+//! flow, how to verify and benchmark, the runtime-knob table) and
+//! `docs/kernel-dispatch.md` (the SIMD kernel contract and the checklist
+//! for adding the next ISA arm).
+//!
 //! Crate layout:
 //! - [`util`] — hand-rolled infra (RNG, JSON, CLI, thread pool, stats, prop).
 //! - [`tensor`] — minimal f32/int ndarray substrate with npz I/O.

@@ -331,6 +331,7 @@ impl Engine {
                             // never exists on the quantized path.
                             let (aq, dims) = im2col_quantized(
                                 &act, k, stride, pad, bits_a, scheme.act_region(region),
+                                self.threads,
                             );
                             (self.quant_gemm(&aq, l, bias, bits_w, region, lut), dims)
                         }

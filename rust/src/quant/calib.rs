@@ -18,7 +18,9 @@ use crate::tensor::Tensor;
 /// frozen calibration cannot depend on the individual row.
 #[derive(Debug, Clone)]
 pub struct RangeObserver {
+    /// Reduction length the observed batches must match.
     pub k: usize,
+    /// Region geometry (column regions, shared across rows).
     pub region: RegionSpec,
     /// EMA momentum in [0, 1): 0 = exact running min/max.
     pub momentum: f32,
@@ -28,6 +30,7 @@ pub struct RangeObserver {
 }
 
 impl RangeObserver {
+    /// Fresh observer with empty (infinite) ranges.
     pub fn new(k: usize, region: RegionSpec, momentum: f32) -> RangeObserver {
         assert!((0.0..1.0).contains(&momentum));
         let rpr = region.regions_per_row(k);
@@ -82,14 +85,18 @@ impl RangeObserver {
 /// Out-of-range values saturate to the code range.
 #[derive(Debug, Clone)]
 pub struct CalibratedQuantizer {
+    /// Reduction length the quantized batches must match.
     pub k: usize,
+    /// Region geometry the ranges were calibrated with.
     pub region: RegionSpec,
+    /// Code width in bits (1..=8).
     pub bits: u8,
     mins: Vec<f32>,
     maxs: Vec<f32>,
 }
 
 impl CalibratedQuantizer {
+    /// Quantize a `(rows, K)` batch with the frozen ranges (no min/max pass).
     pub fn quantize(&self, x: &Tensor) -> QuantizedMatrix {
         assert_eq!(x.dim(1), self.k);
         let rows = x.dim(0);

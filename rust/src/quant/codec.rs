@@ -9,8 +9,11 @@
 /// Packed code stream.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packed {
+    /// Code width in bits (1..=8).
     pub bits: u8,
+    /// Number of codes in the stream.
     pub len: usize,
+    /// Little-endian bitstream: code `i` occupies bits `[i*bits, (i+1)*bits)`.
     pub words: Vec<u64>,
 }
 

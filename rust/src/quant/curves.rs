@@ -8,6 +8,7 @@
 /// One sampled point of the transfer/error curves.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CurvePoint {
+    /// Swept input value.
     pub x: f32,
     /// Quantize-dequantize reconstruction of x.
     pub q: f32,

@@ -9,7 +9,9 @@ use crate::tensor::Tensor;
 /// Error statistics of a quantize-dequantize round trip.
 #[derive(Debug, Clone)]
 pub struct QuantErrorStats {
+    /// Code width the round trip used.
     pub bits: u8,
+    /// Region geometry the round trip used.
     pub region: RegionSpec,
     /// Largest |x - Q^-1(Q(x))|.
     pub max_abs: f32,
@@ -22,6 +24,7 @@ pub struct QuantErrorStats {
 }
 
 impl QuantErrorStats {
+    /// Quantize-dequantize `x` and collect the error statistics.
     pub fn measure(x: &Tensor, bits: u8, region: RegionSpec) -> QuantErrorStats {
         let q = quantize_matrix(x, bits, region);
         let dq = q.dequantize();

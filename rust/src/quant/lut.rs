@@ -88,12 +88,15 @@ pub fn collapse_buckets<const NR: usize>(
 /// activations that contract with it.
 #[derive(Debug, Clone)]
 pub struct WeightLut {
+    /// Activation code width (1..=4).
     pub bits: u8,
+    /// Number of weight positions covered by the table.
     pub k: usize,
     table: Vec<i32>,
 }
 
 impl WeightLut {
+    /// Build the table offline: `2^bits` precomputed products per weight.
     pub fn build(qw: &[i32], bits: u8) -> WeightLut {
         assert!((1..=4).contains(&bits));
         let levels = 1usize << bits;

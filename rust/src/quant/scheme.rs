@@ -19,9 +19,13 @@ pub fn round_half_even(x: f32) -> f32 {
 /// packed form for storage/footprint accounting lives in [`crate::quant::codec`].
 #[derive(Debug, Clone)]
 pub struct QuantizedMatrix {
+    /// Number of rows (activation rows / output channels).
     pub rows: usize,
+    /// Reduction length (columns).
     pub k: usize,
+    /// Code width in bits (1..=8).
     pub bits: u8,
+    /// Region geometry the codes were quantized with.
     pub region: RegionSpec,
     /// rows * k codes in [0, 2^bits - 1], row-major.
     pub codes: Vec<u8>,
@@ -36,19 +40,23 @@ pub struct QuantizedMatrix {
 }
 
 impl QuantizedMatrix {
+    /// Number of quantization regions along each row.
     pub fn regions_per_row(&self) -> usize {
         self.region.regions_per_row(self.k)
     }
 
+    /// Effective region length along K (the tail region may be shorter).
     pub fn group_len(&self) -> usize {
         self.region.group_len(self.k)
     }
 
+    /// Scale `s_k` of region `r` in `row`.
     #[inline]
     pub fn scale(&self, row: usize, r: usize) -> f32 {
         self.scales[row * self.regions_per_row() + r]
     }
 
+    /// Minimum `x_min` of region `r` in `row`.
     #[inline]
     pub fn min(&self, row: usize, r: usize) -> f32 {
         self.mins[row * self.regions_per_row() + r]

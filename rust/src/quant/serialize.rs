@@ -32,7 +32,9 @@ const MAGIC: &[u8; 4] = b"LQZ1";
 /// One named quantized operand.
 #[derive(Debug, Clone)]
 pub struct LqzEntry {
+    /// Layer/parameter name (e.g. `"c1.w"`).
     pub name: String,
+    /// The reconstructed operand (codes one-per-byte, side-cars attached).
     pub matrix: QuantizedMatrix,
 }
 

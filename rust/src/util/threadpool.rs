@@ -8,6 +8,9 @@
 //!   on a lazily-initialized process-wide [`shared_pool`], so per-GEMM cost
 //!   is a queue push per chunk instead of an OS thread spawn per chunk
 //!   (spawn latency dominated small conv-layer GEMMs in the seed).
+//!
+//! The shared pool sizes itself to `available_parallelism`, overridable via
+//! the `LQR_THREADS` env var (see `rust/README.md` for the full knob table).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -101,13 +104,20 @@ impl Drop for ThreadPool {
 }
 
 /// The process-wide data-parallel pool backing [`scope_chunks`], created on
-/// first use and sized to the machine. Never dropped (workers park on an
-/// empty queue). Coordinator worker pools are separate `ThreadPool`
-/// instances, so a worker blocking in `scope_chunks` cannot starve itself.
+/// first use and sized to the machine — or to `LQR_THREADS` when that env
+/// var is set to a positive integer (read once, at pool creation; it caps
+/// every `scope_chunks` caller since the pool size bounds the claimants).
+/// Never dropped (workers park on an empty queue). Coordinator worker pools
+/// are separate `ThreadPool` instances, so a worker blocking in
+/// `scope_chunks` cannot starve itself.
 pub fn shared_pool() -> &'static ThreadPool {
     static POOL: OnceLock<ThreadPool> = OnceLock::new();
     POOL.get_or_init(|| {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let n = std::env::var("LQR_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
         ThreadPool::new(n.max(1))
     })
 }

@@ -2,13 +2,16 @@
 //! seed's naive general-region formulation, across every axis the panel
 //! layout complicates: multiple regions per row, odd K tails (K not a
 //! multiple of the region or the NR tile), bit widths 1-8, thread counts
-//! 1/3, and N crossing tile boundaries. The SIMD dispatch arms (forced
-//! scalar vs whatever `simd::active()` selected on this host) must agree
-//! **bit-exactly** — integer accumulation is exact and the f32 correction is
-//! shared, so any difference is a kernel bug, not rounding. Plus the fused
-//! `im2col_quantized` vs `im2col` + `quantize_matrix` equivalence, and the
-//! engine-level regression that prepared panels are cached (pointer identity
-//! across forward passes).
+//! 1/3, and N crossing tile boundaries. Every SIMD dispatch arm this host
+//! supports (`simd::supported_kernels()` — on aarch64 that covers both the
+//! NEON `umlal` tile and, when built with `--features dotprod` on capable
+//! hardware, the `udot` tile; on x86-64 the AVX2 / VNNI tiles) must agree
+//! **bit-exactly** with the forced-scalar arm — integer accumulation is
+//! exact and the f32 correction is shared, so any difference is a kernel
+//! bug, not rounding. Plus the fused `im2col_quantized` vs `im2col` +
+//! `quantize_matrix` equivalence (including parallel vs single-threaded
+//! bit-identity), and the engine-level regression that prepared panels are
+//! cached (pointer identity across forward passes).
 
 use std::collections::HashMap;
 
@@ -110,9 +113,12 @@ fn lut_panel_matches_naive_oracle() {
 }
 
 #[test]
-fn dispatched_simd_matches_forced_scalar_bit_exactly() {
+fn every_supported_simd_arm_matches_forced_scalar_bit_exactly() {
     let scalar = simd::scalar_kernel();
-    let dispatched = simd::active();
+    // Not just the dispatched arm: on an aarch64 host this pins both the
+    // NEON umlal tile and (with `--features dotprod` on capable hardware)
+    // the udot tile; on x86-64 the AVX2 and (with `--features avx512`) the
+    // VNNI tiles. The dispatcher's own pick is always in the list.
     prop::check_named("simd-vs-scalar-panel", 0x51D5, 64, |rng, _| {
         let (m, n, k, region) = gen_case(rng);
         let bits = rng.index(1, 9) as u8; // every width 1..=8
@@ -122,7 +128,7 @@ fn dispatched_simd_matches_forced_scalar_bit_exactly() {
         let wq = quantize_matrix(&w, bits, region);
         let wp = WeightPanel::from_quantized(&wq);
         let want = gemm_panel_with(&aq, &wp, 1, scalar);
-        // Both dispatch arms sit bit-exactly on the seed naive oracle: the
+        // Every dispatch arm sits bit-exactly on the seed naive oracle: the
         // integer dot is exact and the f32 correction order is shared.
         let naive = gemm_quantized_naive(&aq, &wq, 1);
         assert_eq!(
@@ -130,22 +136,23 @@ fn dispatched_simd_matches_forced_scalar_bit_exactly() {
             naive.data(),
             "scalar panel vs naive: m={m} n={n} k={k} bits={bits} region={region}"
         );
-        for threads in [1usize, 3] {
-            let got = gemm_panel_with(&aq, &wp, threads, dispatched);
-            assert_eq!(
-                got.data(),
-                want.data(),
-                "kernel {} vs scalar: m={m} n={n} k={k} bits={bits} region={region} threads={threads}",
-                dispatched.name
-            );
+        for kernel in simd::supported_kernels() {
+            for threads in [1usize, 3] {
+                let got = gemm_panel_with(&aq, &wp, threads, kernel);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "kernel {} vs scalar: m={m} n={n} k={k} bits={bits} region={region} threads={threads}",
+                    kernel.name
+                );
+            }
         }
     });
 }
 
 #[test]
-fn dispatched_simd_matches_forced_scalar_packed() {
+fn every_supported_simd_arm_matches_forced_scalar_packed() {
     let scalar = simd::scalar_kernel();
-    let dispatched = simd::active();
     prop::check_named("simd-vs-scalar-packed", 0x51D6, 40, |rng, _| {
         let (m, n, k, region) = gen_case(rng);
         let bits = rng.index(1, 9) as u8;
@@ -156,20 +163,21 @@ fn dispatched_simd_matches_forced_scalar_packed() {
             &w, bits, region,
         )));
         let want = gemm_panel_packed_with(&ap, &wp, 1, scalar);
-        let got = gemm_panel_packed_with(&ap, &wp, 3, dispatched);
-        assert_eq!(
-            got.data(),
-            want.data(),
-            "packed kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
-            dispatched.name
-        );
+        for kernel in simd::supported_kernels() {
+            let got = gemm_panel_packed_with(&ap, &wp, 3, kernel);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "packed kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
+                kernel.name
+            );
+        }
     });
 }
 
 #[test]
-fn dispatched_bucket_matches_forced_scalar_lut() {
+fn every_supported_bucket_arm_matches_forced_scalar_lut() {
     let scalar = simd::scalar_kernel();
-    let dispatched = simd::active();
     prop::check_named("simd-vs-scalar-lut", 0x51D7, 40, |rng, _| {
         let (m, n, k, region) = gen_case(rng);
         let bits = [1u8, 2, 3, 4][rng.below(4) as usize];
@@ -179,13 +187,15 @@ fn dispatched_bucket_matches_forced_scalar_lut() {
         let wq = quantize_matrix(&w, 8, region); // paper: weights stay 8-bit
         let wp = WeightPanel::from_quantized(&wq);
         let want = gemm_lut_panel_with(&aq, &wp, 1, scalar);
-        let got = gemm_lut_panel_with(&aq, &wp, 3, dispatched);
-        assert_eq!(
-            got.data(),
-            want.data(),
-            "lut kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
-            dispatched.name
-        );
+        for kernel in simd::supported_kernels() {
+            let got = gemm_lut_panel_with(&aq, &wp, 3, kernel);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "lut kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
+                kernel.name
+            );
+        }
     });
 }
 
@@ -193,7 +203,10 @@ fn dispatched_bucket_matches_forced_scalar_lut() {
 fn im2col_quantized_equals_unfused_pipeline() {
     // The fused lowering must reproduce im2col + quantize_matrix exactly:
     // codes, scales, mins and code sums — across padding-heavy geometries,
-    // strides, every bit width and all three region schemes.
+    // strides, every bit width and all three region schemes. And the
+    // parallel path (rows chunked over scope_chunks) must be bit-identical
+    // to the single-threaded one: per-row work is independent and the DQ
+    // prepass merge is exact, so threads never change a single byte.
     prop::check_named("im2col-fused-quant", 0xF05D, 48, |rng, _| {
         let b = rng.index(1, 3);
         let c = rng.index(1, 4);
@@ -211,7 +224,7 @@ fn im2col_quantized_equals_unfused_pipeline() {
         let x = Tensor::new(&[b, c, h, h], prop::gen_values(rng, b * c * h * h));
         let (cols, dims) = im2col(&x, k, stride, pad);
         let want = quantize_matrix(&cols, bits, region);
-        let (got, dims2) = im2col_quantized(&x, k, stride, pad, bits, region);
+        let (got, dims2) = im2col_quantized(&x, k, stride, pad, bits, region, 1);
         let ctx = format!("b={b} c={c} h={h} k={k} s={stride} p={pad} bits={bits} region={region}");
         assert_eq!(dims, dims2, "{ctx}");
         assert_eq!(got.rows, want.rows, "{ctx}");
@@ -220,6 +233,14 @@ fn im2col_quantized_equals_unfused_pipeline() {
         assert_eq!(got.scales, want.scales, "{ctx}");
         assert_eq!(got.mins, want.mins, "{ctx}");
         assert_eq!(got.code_sums, want.code_sums, "{ctx}");
+        for threads in [3usize, 7] {
+            let (par, dims3) = im2col_quantized(&x, k, stride, pad, bits, region, threads);
+            assert_eq!(dims2, dims3, "{ctx} threads={threads}");
+            assert_eq!(par.codes, got.codes, "{ctx} threads={threads}");
+            assert_eq!(par.scales, got.scales, "{ctx} threads={threads}");
+            assert_eq!(par.mins, got.mins, "{ctx} threads={threads}");
+            assert_eq!(par.code_sums, got.code_sums, "{ctx} threads={threads}");
+        }
     });
 }
 
