@@ -9,7 +9,7 @@
 //! ```
 
 use lqr::eval::sweep;
-use lqr::nn::opcount::{lut_ops, original_ops, LutCostModel};
+use lqr::nn::opcount::{bitserial_ops, lut_ops, original_ops, LutCostModel};
 use lqr::nn::Arch;
 
 fn main() {
@@ -27,6 +27,20 @@ fn main() {
             o.multiplies as f64 / l.multiplies as f64,
             l.adds / 1_000_000,
             o.adds as f64 / l.adds as f64,
+        );
+    }
+
+    // Bit-serial sweep: AND+popcount word ops scale with bits_a * bits_w,
+    // so halving the width quarters the inner-loop work (vs the u8 panel
+    // path, where every width <= 8 costs the same K MACs per output).
+    println!("bit-serial word-op sweep (AlexNet conv, millions of 64-lane word ops):");
+    for bits in [1u8, 2, 4] {
+        let b = bitserial_ops(&arch, bits, bits);
+        println!(
+            "  {bits}-bit x {bits}-bit: {}M word ops ({:.1}x fewer than one MAC per element), {}M epilogue multiplies",
+            b.adds / 1_000_000,
+            o.adds as f64 / b.adds as f64,
+            b.multiplies / 1_000_000,
         );
     }
 }

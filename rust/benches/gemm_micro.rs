@@ -14,7 +14,11 @@
 //! dotprod host, AVX2 on a VNNI host) gets its own `i8-panel[name]` row so
 //! per-ISA comparisons are machine-readable too. The header records the
 //! detected ISA and the dispatcher's selected kernel so results are
-//! comparable across hosts. An `im2col-fused` case times the fused conv
+//! comparable across hosts. For 1/2/4-bit operands the bit-serial popcount
+//! path gets a `bitserial[arm]-b{bits}` row per supported arm plus a
+//! ratio-only `bitserial-vs-u8panel(b{bits})` headline row (dispatched
+//! bit-serial vs dispatched u8 panel on the same low-bit operands; the
+//! `u8panel-b{bits}` row carries that baseline's timing). An `im2col-fused` case times the fused conv
 //! lowering single-threaded vs parallel, and a `conv-fwd` case times the
 //! full engine conv path (fused im2col quantization) against the f32
 //! engine.
@@ -28,7 +32,7 @@ use lqr::fixedpoint::panel::{
     gemm_lut_panel, gemm_panel, gemm_panel_packed, gemm_panel_with, WeightPanel,
 };
 use lqr::fixedpoint::simd;
-use lqr::fixedpoint::{gemm_f32, gemm_quantized_naive, im2col_quantized};
+use lqr::fixedpoint::{gemm_bitserial_with, gemm_f32, gemm_quantized_naive, im2col_quantized};
 use lqr::nn::{Arch, Engine, Layer, Precision};
 use lqr::quant::{quantize_matrix, RegionSpec};
 use lqr::tensor::Tensor;
@@ -287,6 +291,64 @@ fn main() {
                     speedup_vs_scalar: 0.0,
                 });
                 print_row(records.last().unwrap());
+            }
+        }
+
+        // Bit-serial popcount rows: both operands quantized at the low
+        // width, one row per supported dispatch arm
+        // (`bitserial[arm]-b{bits}`), plus the headline ratio row
+        // (`bitserial-vs-u8panel(b{bits})`): the dispatched bit-serial arm
+        // vs the dispatched u8 panel microkernel *on the same low-bit
+        // operands* — the win the paper's Fig. 8 promises from sub-8-bit
+        // compute, not just sub-8-bit memory.
+        for bits in [1u8, 2, 4] {
+            let aq = quantize_matrix(&a, bits, RegionSpec::PerRow);
+            let wq_b = quantize_matrix(&w_t, bits, RegionSpec::PerRow);
+            let wp_b = WeightPanel::from_quantized(&wq_b);
+            let t_u8 = time(iters, || {
+                std::hint::black_box(gemm_panel(&aq, &wp_b, threads));
+            });
+            records.push(Record {
+                case: label,
+                kernel: format!("u8panel-b{bits}"),
+                impl_name: simd::active().name.into(),
+                secs: t_u8,
+                gmacs: gmacs(m, k, n, t_u8),
+                speedup_vs_f32: t_f32 / t_u8,
+                speedup_vs_naive: 0.0,
+                speedup_vs_scalar: 0.0,
+            });
+            print_row(records.last().unwrap());
+            for kernel in simd::supported_kernels() {
+                let t_bs = time(iters, || {
+                    std::hint::black_box(gemm_bitserial_with(&aq, &wp_b, threads, kernel));
+                });
+                records.push(Record {
+                    case: label,
+                    kernel: format!("bitserial[{}]-b{bits}", kernel.name),
+                    impl_name: kernel.name.into(),
+                    secs: t_bs,
+                    gmacs: gmacs(m, k, n, t_bs),
+                    speedup_vs_f32: t_f32 / t_bs,
+                    speedup_vs_naive: 0.0,
+                    // vs the dispatched u8 panel on identical operands.
+                    speedup_vs_scalar: t_u8 / t_bs,
+                });
+                print_row(records.last().unwrap());
+                if kernel.name == simd::active().name {
+                    // Ratio-only headline row (no ms: the timing lives on
+                    // the bitserial[arm] row above).
+                    records.push(Record {
+                        case: label,
+                        kernel: format!("bitserial-vs-u8panel(b{bits})"),
+                        impl_name: kernel.name.into(),
+                        secs: 0.0,
+                        gmacs: 0.0,
+                        speedup_vs_f32: 0.0,
+                        speedup_vs_naive: 0.0,
+                        speedup_vs_scalar: t_u8 / t_bs,
+                    });
+                }
             }
         }
 

@@ -12,7 +12,7 @@ use crate::dataset::Dataset;
 use crate::eval::accuracy::{evaluate, AccuracyResult};
 use crate::eval::table::TableFmt;
 use crate::nn::forward::Scheme;
-use crate::nn::opcount::{lut_ops, original_ops, LutCostModel};
+use crate::nn::opcount::{bitserial_ops, lut_ops, original_ops, LutCostModel};
 use crate::nn::{Arch, Engine, Precision};
 use crate::platform::edison::{EdisonModel, NumFmt};
 use crate::platform::fpga::perf::perf;
@@ -108,8 +108,10 @@ pub fn fig10(artifacts: &str, regions: &[usize], limit: usize) -> Result<TableFm
     Ok(t)
 }
 
-/// Table 3 — conv-layer multiply/add counts, original vs 2-bit LUT, on the
-/// *full* AlexNet / VGG-16 (matches the paper's absolute numbers).
+/// Table 3 — conv-layer multiply/add counts: original vs 2-bit LUT (the
+/// paper's absolute numbers) plus the repo's bit-serial popcount path
+/// (adds column = AND+popcount 64-lane word ops, multiply column = eq. 7
+/// epilogue rescales), on the *full* AlexNet / VGG-16.
 pub fn table3() -> TableFmt {
     let mut t = TableFmt::new(
         "Table 3 — conv multiply/add operations per image (millions)",
@@ -130,6 +132,13 @@ pub fn table3() -> TableFmt {
             "2-bit LUT".into(),
             (l.multiplies / M).to_string(),
             (l.adds / M).to_string(),
+        ]);
+        let b = bitserial_ops(&arch, 2, 2);
+        t.row(&[
+            arch.name.into(),
+            "2-bit bit-serial (word ops)".into(),
+            (b.multiplies / M).to_string(),
+            (b.adds / M).to_string(),
         ]);
     }
     t
@@ -217,6 +226,7 @@ mod tests {
         assert!(s.contains("alexnet"));
         assert!(s.contains("665") || s.contains("666"));
         assert!(s.contains("2-bit LUT"));
+        assert!(s.contains("2-bit bit-serial"));
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Bit-serial popcount GEMM: compute directly on packed 1/2/4-bit codes.
+//!
+//! The u8 panel path widens every low-bit code to a byte and runs the same
+//! 8-bit microkernel regardless of width, so a 2-bit model runs at 8-bit
+//! speed and only saves memory. This module realizes the paper's sub-8-bit
+//! complexity claim (§III.C / Fig. 8) on commodity CPUs via bit-plane
+//! decomposition — the standard trick surveyed in Guo 2018: writing each
+//! operand as a weighted sum of bit-planes,
+//!
+//! ```text
+//! a[p] = sum_i 2^i * a_i[p],   w[p] = sum_j 2^j * w_j[p]
+//! ```
+//!
+//! turns the integer dot of a quantization region into
+//!
+//! ```text
+//! sum_p a[p] * w[p] = sum_{i,j} 2^(i+j) * popcount(A_i & W_j)
+//! ```
+//!
+//! where `A_i` / `W_j` are the planes as dense `u64` lane streams. One
+//! 64-lane AND+popcount word op replaces 64 MACs per plane pair, so compute
+//! cost scales as `bits_a * bits_w * K / 64` instead of `K` — 16x fewer
+//! word ops than MACs at 2 bits.
+//!
+//! Layout: every quantization region's planes start **word-aligned**
+//! ([`crate::quant::codec::pack_planes_into`] packs each region segment
+//! separately at a shared `words_per_region` stride), so a region dot is a
+//! whole-words popcount — the tail bits of a short region are zero in both
+//! operands and contribute nothing. [`WeightPlanes`] carries that layout
+//! per output channel beside the panel's u8 tiles; the activation side is
+//! packed per row inside the GEMM (an `O(M * K)` pass, same order as the
+//! u8 path's M-block scratch fill).
+//!
+//! The integer dot per `(row, column, region)` runs on the dispatched
+//! [`Kernel::run_popdot`] arm (scalar `count_ones`, AVX2 `vpshufb`
+//! nibble-LUT popcount, NEON `vcntq_u8` — see `super::simd` and
+//! `docs/kernel-dispatch.md`), and the eq. 7 affine epilogue applies the
+//! **identical** f32 expression in the identical region order as the shared
+//! panel core, so the whole path is **bit-exact** against the u8 oracle —
+//! pinned by `rust/tests/panel_kernels.rs`.
+//!
+//! The engine (`nn::forward`) selects this path per layer whenever both
+//! operands are <= 4 bits (opt out with `LQR_FORCE_U8PANEL=1`); wider
+//! configurations keep the u8 panel microkernel.
+
+use std::sync::OnceLock;
+
+use crate::quant::codec;
+use crate::quant::scheme::QuantizedMatrix;
+use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+
+use super::gemm_i8::SyncPtr;
+use super::gemm_packed::PackedMatrix;
+use super::panel::{WeightPanel, NR};
+use super::simd::{self, Kernel};
+
+/// Widest code the bit-serial path accepts on either operand. Past 4 bits
+/// the `bits_a * bits_w` plane pairs cost more word ops than the u8
+/// microkernel costs MACs, so the panel path keeps those widths.
+pub const BITSERIAL_MAX_BITS: u8 = 4;
+
+/// True when both operands are narrow enough for the bit-serial path.
+#[inline]
+pub fn bitserial_eligible(bits_a: u8, bits_w: u8) -> bool {
+    bits_a <= BITSERIAL_MAX_BITS && bits_w <= BITSERIAL_MAX_BITS
+}
+
+/// `LQR_FORCE_U8PANEL=1`: opt out of the bit-serial path — eligible layers
+/// run the widened u8 panel microkernel instead (read once, like
+/// `LQR_FORCE_SCALAR`). Both paths are bit-exact, so this is a perf A/B
+/// knob, not a numerics switch.
+pub fn force_u8panel() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("LQR_FORCE_U8PANEL")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// `u64` words per region per plane: regions are word-aligned so a region
+/// dot never masks at the edges (the pad bits are zero in both operands).
+pub(crate) fn words_per_region(group: usize, k: usize) -> usize {
+    group.min(k).max(1).div_ceil(64)
+}
+
+/// Region-aligned bit-plane streams of a weight panel's codes: the operand
+/// the bit-serial microkernel reads. Built once per weight matrix alongside
+/// the u8 tiles (see [`WeightPanel`]) whenever the codes are <= 4 bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightPlanes {
+    /// Code width in bits (1..=4) — one plane per bit.
+    bits: u8,
+    /// Regions per row.
+    rpr: usize,
+    /// Words per region per plane (tail regions zero-pad to this).
+    wpr: usize,
+    /// `n * rpr * bits * wpr` words, layout `[channel][region][plane][word]`.
+    words: Vec<u64>,
+}
+
+impl WeightPlanes {
+    pub(crate) fn empty(n: usize, k: usize, bits: u8, group: usize, rpr: usize) -> WeightPlanes {
+        debug_assert!(bits <= BITSERIAL_MAX_BITS);
+        let wpr = words_per_region(group, k);
+        WeightPlanes { bits, rpr, wpr, words: vec![0u64; n * rpr * bits as usize * wpr] }
+    }
+
+    /// Pack one output channel's codes (`k` bytes) into its plane slots,
+    /// one word-aligned plane block per region.
+    pub(crate) fn fill_column(&mut self, j: usize, codes: &[u8], k: usize, group: usize) {
+        let bits = self.bits as usize;
+        for r in 0..self.rpr {
+            let start = r * group;
+            let end = ((r + 1) * group).min(k);
+            let o = (j * self.rpr + r) * bits * self.wpr;
+            codec::pack_planes_into(
+                &codes[start..end],
+                self.bits,
+                self.wpr,
+                &mut self.words[o..o + bits * self.wpr],
+            );
+        }
+    }
+
+    /// Plane words of output channel `j`, region `r`: `bits * wpr` words,
+    /// `[plane][word]`.
+    #[inline]
+    pub fn col_region(&self, j: usize, r: usize) -> &[u64] {
+        let bits = self.bits as usize;
+        let o = (j * self.rpr + r) * bits * self.wpr;
+        &self.words[o..o + bits * self.wpr]
+    }
+
+    /// Words per region per plane (shared with the activation side).
+    #[inline]
+    pub fn words_per_region(&self) -> usize {
+        self.wpr
+    }
+
+    /// Resident bytes of the plane streams.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Activation codes the bit-serial core can read: flat byte-per-code rows
+/// or bit-packed streams (unpacked once per row into scratch, exactly like
+/// the u8 panel path's M-block fill).
+enum ACodes<'a> {
+    Flat(&'a QuantizedMatrix),
+    Bits(&'a PackedMatrix),
+}
+
+impl ACodes<'_> {
+    /// `(rows, k, bits, regions_per_row, scales, mins, code_sums)`.
+    fn geometry(&self) -> (usize, usize, u8, usize, &[f32], &[f32], &[f32]) {
+        match *self {
+            ACodes::Flat(q) => (
+                q.rows,
+                q.k,
+                q.bits,
+                q.regions_per_row(),
+                &q.scales[..],
+                &q.mins[..],
+                &q.code_sums[..],
+            ),
+            ACodes::Bits(p) => (
+                p.rows,
+                p.k,
+                p.bits,
+                p.regions_per_row,
+                &p.scales[..],
+                &p.mins[..],
+                &p.code_sums[..],
+            ),
+        }
+    }
+
+    /// Codes of row `i`; packed streams unpack into `buf` (once per row per
+    /// GEMM — never per output column).
+    fn row_codes<'b>(&'b self, i: usize, buf: &'b mut [u8]) -> &'b [u8] {
+        match *self {
+            ACodes::Flat(q) => q.row_codes(i),
+            ACodes::Bits(p) => {
+                codec::unpack_into(&p.rows_packed[i], buf);
+                &buf[..p.k]
+            }
+        }
+    }
+}
+
+/// The bit-serial GEMM core: `A (M,K) x planes(W^T) -> (M,N)` with the
+/// eq. 7 per-region affine correction. Parallel over M row blocks; each
+/// row's activation planes pack once and stream against every output
+/// channel's weight planes through the dispatched popcount kernel.
+fn gemm_bitserial_core(a: &ACodes, wp: &WeightPanel, threads: usize, kernel: &Kernel) -> Tensor {
+    let planes = wp
+        .bit_planes()
+        .expect("bit-serial GEMM needs a panel with bit planes (weight bits <= 4)");
+    let (m, ak, bits_a, rpr_a, scales, mins, sums) = a.geometry();
+    assert!(
+        bitserial_eligible(bits_a, wp.bits),
+        "bit-serial GEMM needs <= {BITSERIAL_MAX_BITS}-bit operands, got a{bits_a}/w{}",
+        wp.bits
+    );
+    assert_eq!(ak, wp.k, "reduction dims differ: {} vs {}", ak, wp.k);
+    assert_eq!(rpr_a, wp.rpr, "operands must share the region size along K");
+    let (n, k) = (wp.n, wp.k);
+    let (rpr, bits_w) = (wp.rpr, wp.bits);
+    let ba = bits_a as usize;
+    let wpr = planes.words_per_region();
+    let mut out = vec![0.0f32; m * n];
+
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    // Row-blocked like the LUT path: small blocks so enough chunks exist
+    // for scope_chunks to go parallel even at batch-sized M.
+    const RB_MAX: usize = 32;
+    let rb = m.div_ceil(threads.max(1) * 4).clamp(1, RB_MAX);
+    let nblocks = m.div_ceil(rb).max(1);
+    scope_chunks(nblocks, threads, |nb0, nb1| {
+        let out_ptr = &out_ptr;
+        let mut rowbuf = vec![0u8; k];
+        let mut aplanes = vec![0u64; rpr * ba * wpr];
+        for nb in nb0..nb1 {
+            let i0 = nb * rb;
+            let i1 = (i0 + rb).min(m);
+            // SAFETY: rows [i0, i1) are written by exactly one chunk.
+            let oblock =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i0 * n), (i1 - i0) * n) };
+            for i in i0..i1 {
+                let arow = a.row_codes(i, &mut rowbuf);
+                for r in 0..rpr {
+                    let (start, end) = wp.region_bounds(r);
+                    codec::pack_planes_into(
+                        &arow[start..end],
+                        bits_a,
+                        wpr,
+                        &mut aplanes[r * ba * wpr..(r + 1) * ba * wpr],
+                    );
+                }
+                let orow = &mut oblock[(i - i0) * n..(i - i0 + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let (t, jj) = (j / NR, j % NR);
+                    let mut acc = 0.0f32;
+                    for r in 0..rpr {
+                        let (start, end) = wp.region_bounds(r);
+                        let lenf = (end - start) as f32;
+                        let dot = kernel.run_popdot(
+                            &aplanes[r * ba * wpr..(r + 1) * ba * wpr],
+                            planes.col_region(j, r),
+                            wpr,
+                            bits_a,
+                            bits_w,
+                        );
+                        let (sw, mw, sqw) = wp.tile_affine(t, r);
+                        let sa = scales[i * rpr + r];
+                        let ma = mins[i * rpr + r];
+                        let sqa = sums[i * rpr + r];
+                        // Eq. 7 — the exact expression and region order of
+                        // the u8 panel core, so the paths stay bit-exact.
+                        acc += sa * sw[jj] * dot as f32
+                            + sa * mw[jj] * sqa
+                            + ma * sw[jj] * sqw[jj]
+                            + lenf * ma * mw[jj];
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    });
+    Tensor::new(&[m, n], out)
+}
+
+/// Bit-serial GEMM over byte-per-code activations, on the host-dispatched
+/// popcount kernel. Both operands must be <= 4 bits; the panel must have
+/// been built from <= 4-bit weight codes (it then carries [`WeightPlanes`]).
+pub fn gemm_bitserial(aq: &QuantizedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    gemm_bitserial_with(aq, wp, threads, simd::active())
+}
+
+/// [`gemm_bitserial`] with an explicit kernel — tests and benches pin every
+/// dispatch arm against the u8 scalar oracle through this.
+pub fn gemm_bitserial_with(
+    aq: &QuantizedMatrix,
+    wp: &WeightPanel,
+    threads: usize,
+    kernel: &Kernel,
+) -> Tensor {
+    assert_eq!(aq.group_len(), wp.group, "operands must share the region size along K");
+    gemm_bitserial_core(&ACodes::Flat(aq), wp, threads, kernel)
+}
+
+/// Bit-serial GEMM over bit-packed activation streams: each row unpacks
+/// once per GEMM, then rides the same plane repack as the flat path.
+pub fn gemm_bitserial_packed(aq: &PackedMatrix, wp: &WeightPanel, threads: usize) -> Tensor {
+    gemm_bitserial_packed_with(aq, wp, threads, simd::active())
+}
+
+/// [`gemm_bitserial_packed`] with an explicit kernel.
+pub fn gemm_bitserial_packed_with(
+    aq: &PackedMatrix,
+    wp: &WeightPanel,
+    threads: usize,
+    kernel: &Kernel,
+) -> Tensor {
+    assert_eq!(aq.group, wp.group, "operands must share the region size along K");
+    gemm_bitserial_core(&ACodes::Bits(aq), wp, threads, kernel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::panel::gemm_panel_with;
+    use crate::quant::{quantize_matrix, RegionSpec};
+    use crate::util::prop;
+
+    #[test]
+    fn weight_planes_hold_every_code_bit() {
+        // Every (channel, position) code must be recoverable from the
+        // region-aligned plane layout — including ragged K tails.
+        prop::check_named("weight-planes-layout", 0xB175, 24, |rng, _| {
+            let n = rng.index(1, 40);
+            let k = rng.index(1, 200);
+            let bits = [1u8, 2, 4][rng.below(3) as usize];
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let region = RegionSpec::Size(rng.index(1, k + 1));
+            let q = quantize_matrix(&w, bits, region);
+            let p = WeightPanel::from_quantized(&q);
+            let planes = p.bit_planes().expect("<=4-bit panel must carry planes");
+            let wpr = planes.words_per_region();
+            let group = q.group_len();
+            for j in 0..n {
+                for r in 0..q.regions_per_row() {
+                    let (start, end) = (r * group, ((r + 1) * group).min(k));
+                    let pw = planes.col_region(j, r);
+                    for (pi, pos) in (start..end).enumerate() {
+                        let mut code = 0u8;
+                        for b in 0..bits as usize {
+                            code |= (((pw[b * wpr + pi / 64] >> (pi % 64)) & 1) as u8) << b;
+                        }
+                        assert_eq!(code, q.codes[j * k + pos], "channel {j} pos {pos}");
+                    }
+                    // Pad bits past the region length stay zero.
+                    for b in 0..bits as usize {
+                        let seg_len = end - start;
+                        if seg_len % 64 != 0 {
+                            let last = pw[b * wpr + seg_len / 64];
+                            assert_eq!(last >> (seg_len % 64), 0, "pad bits set");
+                        }
+                        for wi in seg_len.div_ceil(64)..wpr {
+                            assert_eq!(pw[b * wpr + wi], 0, "pad word set");
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bitserial_matches_u8_panel_bit_exactly() {
+        prop::check_named("bitserial-vs-panel", 0xB176, 40, |rng, _| {
+            let m = rng.index(1, 12);
+            let n = rng.index(1, 40);
+            let k = rng.index(1, 150);
+            let bits_a = [1u8, 2, 4][rng.below(3) as usize];
+            let bits_w = [1u8, 2, 4][rng.below(3) as usize];
+            let region = match rng.below(3) {
+                0 => RegionSpec::PerRow,
+                1 => RegionSpec::PerTensor,
+                _ => RegionSpec::Size(rng.index(1, k + 1)),
+            };
+            let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+            let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+            let aq = quantize_matrix(&a, bits_a, region);
+            let wq = quantize_matrix(&w, bits_w, region);
+            let wp = WeightPanel::from_quantized(&wq);
+            let want = gemm_panel_with(&aq, &wp, 1, simd::scalar_kernel());
+            for threads in [1usize, 3] {
+                let got = gemm_bitserial_with(&aq, &wp, threads, simd::scalar_kernel());
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "m={m} n={n} k={k} a{bits_a}/w{bits_w} region={region} threads={threads}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn packed_activations_match_flat() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let a = Tensor::new(&[9, 130], rng.normal_vec(9 * 130));
+        let w = Tensor::new(&[21, 130], rng.normal_vec(21 * 130));
+        for bits in [1u8, 2, 4] {
+            let aq = quantize_matrix(&a, bits, RegionSpec::Size(50));
+            let wq = quantize_matrix(&w, bits, RegionSpec::Size(50));
+            let wp = WeightPanel::from_quantized(&wq);
+            let flat = gemm_bitserial(&aq, &wp, 1);
+            let packed = gemm_bitserial_packed(&PackedMatrix::from_quantized(&aq), &wp, 2);
+            assert_eq!(flat.data(), packed.data(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn eligibility_gate() {
+        assert!(bitserial_eligible(1, 1));
+        assert!(bitserial_eligible(2, 4));
+        assert!(bitserial_eligible(4, 4));
+        assert!(!bitserial_eligible(2, 8));
+        assert!(!bitserial_eligible(8, 2));
+        assert_eq!(words_per_region(75, 75), 2);
+        assert_eq!(words_per_region(64, 800), 1);
+        assert_eq!(words_per_region(800, 800), 13);
+    }
+}

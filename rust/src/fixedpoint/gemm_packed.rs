@@ -15,6 +15,7 @@ use crate::quant::codec::Packed;
 use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
 
+use super::bitserial::{bitserial_eligible, force_u8panel, gemm_bitserial_packed};
 use super::panel::{gemm_panel_packed, WeightPanel};
 
 /// A [`QuantizedMatrix`] with its codes bit-packed.
@@ -71,10 +72,18 @@ impl PackedMatrix {
 /// Builds the weight panel (one unpack pass over W) per call; callers that
 /// reuse packed weights should build a [`WeightPanel`] via
 /// [`WeightPanel::from_packed`] once and call [`gemm_panel_packed`].
+///
+/// When both operands are <= 4 bits the GEMM runs bit-serially on the
+/// panel's bit-plane sidecar (`super::bitserial`) — compute scales with the
+/// bit widths instead of running low-bit codes through the 8-bit tile.
+/// Bit-exact either way; `LQR_FORCE_U8PANEL=1` opts out.
 pub fn gemm_packed(aq: &PackedMatrix, wq: &PackedMatrix, threads: usize) -> Tensor {
     assert_eq!(aq.k, wq.k);
     assert_eq!(aq.group, wq.group, "operands must share the region size");
     let wp = WeightPanel::from_packed(wq);
+    if bitserial_eligible(aq.bits, wq.bits) && !force_u8panel() {
+        return gemm_bitserial_packed(aq, &wp, threads);
+    }
     gemm_panel_packed(aq, &wp, threads)
 }
 

@@ -13,6 +13,7 @@
 //! | [`gemm_quantized`] / [`panel::gemm_panel`] | u8 codes | dispatched `MR`x`NR` integer tile ([`simd`]): AVX2 `madd`, AVX-512 `vpdpbusd`, or the portable scalar MAC | the default quantized path, any bits <= 8; ~4x the f32 element throughput per SIMD load |
 //! | [`gemm_lut`] / [`panel::gemm_lut_panel`] | <= 4-bit act codes | §V code bucketing (dispatched): add-only pass + `2^bits - 2` multiplies per region-tile | multiply-starved targets (the FPGA CUs, MCU cores); on SIMD CPUs it trades multiplies for a data-dependent bucket index, so it wins on op *count*, not wall clock |
 //! | [`gemm_packed`] / [`panel::gemm_panel_packed`] | bit-packed streams | same integer tile after one unpack per stream | memory-bound shapes: codes travel packed (the §III.C bandwidth claim), unpack cost is O(M*K + N*K), amortized over O(M*N*K) MACs |
+//! | [`bitserial::gemm_bitserial`] / [`bitserial::gemm_bitserial_packed`] | <= 4-bit codes *both sides* | bit-plane AND+popcount (dispatched): `bits_a * bits_w * K/64` word ops per output | the default for <= 4-bit weights+activations (`LQR_FORCE_U8PANEL=1` opts out): compute finally scales with bit width — 16x fewer word ops than MACs at 2 bits. Bit-exact vs the u8 panel path |
 //!
 //! # The shared panel core
 //!
@@ -49,6 +50,7 @@
 //!   paper's §VI overhead concern). Patch rows chunk over the shared thread
 //!   pool, so the lowering parallelizes like the GEMM it feeds — and stays
 //!   bit-identical to the single-threaded path.
+pub mod bitserial;
 pub mod gemm_f32;
 pub mod gemm_i8;
 pub mod gemm_lut;
@@ -57,6 +59,10 @@ pub mod im2col;
 pub mod panel;
 pub mod simd;
 
+pub use bitserial::{
+    bitserial_eligible, gemm_bitserial, gemm_bitserial_packed, gemm_bitserial_packed_with,
+    gemm_bitserial_with,
+};
 pub use gemm_f32::gemm_f32;
 pub use gemm_i8::{gemm_quantized, gemm_quantized_naive};
 pub use im2col::{col2im_output, conv_output_size, im2col, im2col_quantized};

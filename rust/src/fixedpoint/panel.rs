@@ -12,7 +12,10 @@
 //!   K is blocked on quantization-region boundaries — the panel layout
 //!   matches the LQ granularity, which is what lets the per-region affine
 //!   correction vectorize. Scales / mins / code-sums are stored transposed
-//!   (`[tile][region][jj]`) for the same reason.
+//!   (`[tile][region][jj]`) for the same reason. For <= 4-bit codes the
+//!   panel additionally keeps a region-aligned **bit-plane** layout
+//!   ([`WeightPanel::bit_planes`]) beside the u8 tiles — the operand of the
+//!   bit-serial popcount GEMM ([`super::bitserial`]).
 //! - [`gemm_panel`] / [`gemm_panel_packed`] run a register-tiled
 //!   [`MR`]x[`NR`] microkernel selected at runtime by the SIMD dispatcher
 //!   ([`super::simd`]): explicit AVX2 / AVX-512-VNNI widening integer MACs
@@ -41,6 +44,7 @@ use crate::quant::scheme::QuantizedMatrix;
 use crate::tensor::Tensor;
 use crate::util::threadpool::scope_chunks;
 
+use super::bitserial::{WeightPlanes, BITSERIAL_MAX_BITS};
 use super::gemm_i8::SyncPtr;
 use super::gemm_packed::PackedMatrix;
 use super::simd::{self, Kernel};
@@ -78,6 +82,10 @@ pub struct WeightPanel {
     mins: Vec<f32>,
     /// Per-region code sums (the `S_qw` term of eq. 7), same layout.
     code_sums: Vec<f32>,
+    /// Region-aligned bit-plane streams of the same codes, kept beside the
+    /// u8 tiles whenever `bits <= 4` — the operand of the bit-serial
+    /// popcount GEMM (`super::bitserial`). `None` for wider codes.
+    planes: Option<WeightPlanes>,
 }
 
 impl WeightPanel {
@@ -114,10 +122,13 @@ impl WeightPanel {
             scales: vec![0.0f32; tiles * rpr * NR],
             mins: vec![0.0f32; tiles * rpr * NR],
             code_sums: vec![0.0f32; tiles * rpr * NR],
+            planes: (bits <= BITSERIAL_MAX_BITS)
+                .then(|| WeightPlanes::empty(n, k, bits, group, rpr)),
         }
     }
 
-    /// Scatter one output channel's codes + affine params into its tile.
+    /// Scatter one output channel's codes + affine params into its tile
+    /// (and, for <= 4-bit codes, into its bit-plane slots).
     fn fill_column(&mut self, j: usize, codes: &[u8], scales: &[f32], mins: &[f32], sums: &[f32]) {
         let (t, jj) = (j / NR, j % NR);
         let base = t * self.k * NR;
@@ -130,6 +141,10 @@ impl WeightPanel {
             self.scales[dst] = scales[src];
             self.mins[dst] = mins[src];
             self.code_sums[dst] = sums[src];
+        }
+        let (k, group) = (self.k, self.group);
+        if let Some(planes) = &mut self.planes {
+            planes.fill_column(j, codes, k, group);
         }
     }
 
@@ -151,9 +166,19 @@ impl WeightPanel {
         (&self.scales[o..o + NR], &self.mins[o..o + NR], &self.code_sums[o..o + NR])
     }
 
-    /// Resident bytes of the prepared panel (codes + affine params).
+    /// The region-aligned bit-plane layout of the codes, present whenever
+    /// `bits <= 4` — what the bit-serial popcount GEMM reads.
+    #[inline]
+    pub fn bit_planes(&self) -> Option<&WeightPlanes> {
+        self.planes.as_ref()
+    }
+
+    /// Resident bytes of the prepared panel (codes + affine params + any
+    /// bit-plane streams).
     pub fn bytes(&self) -> usize {
-        self.codes.len() + 4 * (self.scales.len() + self.mins.len() + self.code_sums.len())
+        self.codes.len()
+            + 4 * (self.scales.len() + self.mins.len() + self.code_sums.len())
+            + self.planes.as_ref().map_or(0, |p| p.bytes())
     }
 
     /// `(start, end)` bounds of region `r` along K.
@@ -459,6 +484,9 @@ mod tests {
             assert_eq!(from_q.codes, from_p.codes, "bits={bits}");
             assert_eq!(from_q.scales, from_p.scales);
             assert_eq!(from_q.code_sums, from_p.code_sums);
+            assert_eq!(from_q.planes, from_p.planes, "bits={bits}");
+            // The bit-plane sidecar exists exactly for <= 4-bit codes.
+            assert_eq!(from_q.bit_planes().is_some(), bits <= 4, "bits={bits}");
         }
     }
 

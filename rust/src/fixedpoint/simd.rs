@@ -1,12 +1,14 @@
 //! Runtime-dispatched SIMD microkernels for the panel GEMM core.
 //!
 //! The panel core ([`super::panel`]) is parameterized over a [`Kernel`]: a
-//! pair of function pointers covering the two inner loops of the quantized
-//! ladder — the `MR`x`NR` u8 multiply-accumulate tile and the §V LUT
-//! bucketing pass. [`active`] selects the widest implementation the host CPU
-//! supports **once** (cached in a `OnceLock`) and every quantized GEMM entry
-//! point routes through it; [`scalar_kernel`] is the portable fallback and
-//! the force-disable target (`LQR_FORCE_SCALAR=1`, read at first dispatch).
+//! set of function pointers covering the three inner loops of the quantized
+//! ladder — the `MR`x`NR` u8 multiply-accumulate tile, the §V LUT
+//! bucketing pass, and the bit-serial AND+popcount dot
+//! ([`super::bitserial`]). [`active`] selects the widest implementation the
+//! host CPU supports **once** (cached in a `OnceLock`) and every quantized
+//! GEMM entry point routes through it; [`scalar_kernel`] is the portable
+//! fallback and the force-disable target (`LQR_FORCE_SCALAR=1`, read at
+//! first dispatch).
 //!
 //! The contract every arm satisfies — bit-exactness vs the scalar oracle,
 //! the alignment/tail invariants an arm may assume, and the checklist for
@@ -45,6 +47,13 @@
 //!   one column's four codes. Feature-gated because the dotprod intrinsics
 //!   stabilized later than the core NEON set.
 //!
+//! The bit-serial popcount slot ([`PopdotFn`], consumed by
+//! [`super::bitserial`]) has its own per-ISA implementations: portable
+//! `u64::count_ones`, an AVX2 `vpshufb` nibble-LUT byte popcount +
+//! `vpsadbw` fold (`vpopcntq` needs AVX-512 VPOPCNTDQ, which the VNNI gate
+//! does not cover — the VNNI kernel reuses the AVX2 arm), and a NEON
+//! `vcntq_u8` + `vaddlvq_u8` arm shared by the umlal and udot kernels.
+//!
 //! All integer accumulation is exact (products fit i32 for regions shorter
 //! than 2^15 — every model layer here), and the f32 affine correction in the
 //! panel core is shared, so dispatch arms agree **bit-exactly**, not just to
@@ -66,6 +75,12 @@ pub type MicroFn = fn(&[u8], usize, usize, usize, usize, &[u8], &mut [[i32; NR];
 /// row of its paired activation code (`qa`).
 pub type BucketFn = fn(&[u8], &[u8], &mut [[i32; NR]; MAX_CODES]);
 
+/// Bit-serial plane dot: `(a_planes, w_planes, words, bits_a, bits_w)` ->
+/// `sum_{i,j} 2^(i+j) * popcount(a_planes[i] & w_planes[j])` over plane
+/// streams of `words` u64 words each (`[plane][word]`, see
+/// [`super::bitserial`]).
+pub type PopdotFn = fn(&[u64], &[u64], usize, u8, u8) -> i32;
+
 /// One dispatchable implementation set for the panel inner loops.
 #[derive(Clone, Copy)]
 pub struct Kernel {
@@ -75,6 +90,7 @@ pub struct Kernel {
     pub isa: &'static str,
     micro: MicroFn,
     bucket: BucketFn,
+    popdot: PopdotFn,
 }
 
 impl Kernel {
@@ -112,6 +128,31 @@ impl Kernel {
         assert!(wseg.len() >= qa.len() * NR, "run_bucket: wseg too short");
         (self.bucket)(qa, wseg, buckets)
     }
+
+    /// Run the bit-serial plane dot over one region segment: `a_planes` /
+    /// `w_planes` hold `bits_a` / `bits_w` plane streams of `words` u64
+    /// words each, zero-padded past the region length; returns
+    /// `sum_{i,j} 2^(i+j) * popcount(a_planes[i] & w_planes[j])`. Same
+    /// contract note as [`Kernel::run_micro`]: the asserts guard unchecked
+    /// SIMD loads. `bits <= 4` keeps the weighted total below 2^24 for
+    /// regions shorter than 2^15 (the shared contract), far inside i32.
+    #[inline]
+    pub fn run_popdot(
+        &self,
+        a_planes: &[u64],
+        w_planes: &[u64],
+        words: usize,
+        bits_a: u8,
+        bits_w: u8,
+    ) -> i32 {
+        assert!(
+            (1..=4).contains(&bits_a) && (1..=4).contains(&bits_w),
+            "run_popdot: bits must be 1..=4, got a{bits_a}/w{bits_w}"
+        );
+        assert!(a_planes.len() >= bits_a as usize * words, "run_popdot: a_planes too short");
+        assert!(w_planes.len() >= bits_w as usize * words, "run_popdot: w_planes too short");
+        (self.popdot)(a_planes, w_planes, words, bits_a, bits_w)
+    }
 }
 
 impl std::fmt::Debug for Kernel {
@@ -125,6 +166,7 @@ static SCALAR_K: Kernel = Kernel {
     isa: "portable",
     micro: scalar_micro,
     bucket: scalar_bucket,
+    popdot: scalar_popdot,
 };
 
 /// The portable kernel — always available on every target, and what
@@ -139,6 +181,7 @@ static AVX2_K: Kernel = Kernel {
     isa: "avx2",
     micro: x86::micro_avx2_entry,
     bucket: x86::bucket_avx2_entry,
+    popdot: x86::popdot_avx2_entry,
 };
 
 #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
@@ -147,6 +190,8 @@ static VNNI_K: Kernel = Kernel {
     isa: "avx512vnni",
     micro: x86::micro_vnni_entry,
     bucket: x86::bucket_avx2_entry,
+    // avx512vnni implies avx2: the nibble-LUT popcount arm is sound here.
+    popdot: x86::popdot_avx2_entry,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -155,6 +200,7 @@ static NEON_K: Kernel = Kernel {
     isa: "neon",
     micro: aarch64::micro_neon_entry,
     bucket: aarch64::bucket_neon_entry,
+    popdot: aarch64::popdot_neon_entry,
 };
 
 #[cfg(all(target_arch = "aarch64", feature = "dotprod"))]
@@ -163,6 +209,7 @@ static DOTPROD_K: Kernel = Kernel {
     isa: "neon-dotprod",
     micro: aarch64::micro_dotprod_entry,
     bucket: aarch64::bucket_neon_entry,
+    popdot: aarch64::popdot_neon_entry,
 };
 
 /// The kernel the dispatcher selected for this host. Selection runs once:
@@ -297,6 +344,28 @@ pub fn scalar_bucket(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES
     crate::quant::lut::bucket_panel_segment::<NR>(qa, wseg, buckets);
 }
 
+/// Portable bit-serial plane dot: per plane pair, AND + `count_ones` per
+/// u64 word, weighted by `2^(i+j)`. `count_ones` lowers to a single
+/// `popcnt` where the target has one and an exact bit-twiddling sequence
+/// otherwise, so this arm is the oracle on every host. Per-pair popcounts
+/// are bounded by the region length (< 2^15) and the weighted total by
+/// `15 * 15 * 2^15 < 2^23` — exact in i32 with huge margin.
+pub fn scalar_popdot(a: &[u64], w: &[u64], words: usize, bits_a: u8, bits_w: u8) -> i32 {
+    let mut total = 0u32;
+    for bi in 0..bits_a as usize {
+        let ap = &a[bi * words..(bi + 1) * words];
+        for bj in 0..bits_w as usize {
+            let wp = &w[bj * words..(bj + 1) * words];
+            let mut c = 0u32;
+            for (x, y) in ap.iter().zip(wp) {
+                c += (x & y).count_ones();
+            }
+            total += c << (bi + bj);
+        }
+    }
+    total as i32
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::{MAX_CODES, MR, NR};
@@ -323,6 +392,12 @@ mod x86 {
     pub fn bucket_avx2_entry(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
         // SAFETY: selected only when is_x86_feature_detected!("avx2") held.
         unsafe { bucket_avx2(qa, wseg, buckets) }
+    }
+
+    pub fn popdot_avx2_entry(a: &[u64], w: &[u64], words: usize, bits_a: u8, bits_w: u8) -> i32 {
+        // SAFETY: selected only when is_x86_feature_detected!("avx2") held
+        // (the VNNI kernel reuses this arm; avx512vnni implies avx2).
+        unsafe { popdot_avx2(a, w, words, bits_a, bits_w) }
     }
 
     #[cfg(feature = "avx512")]
@@ -422,6 +497,109 @@ mod x86 {
             _mm256_storeu_si256(bp as *mut __m256i, _mm256_add_epi32(b0, lo));
             _mm256_storeu_si256(bp.add(8) as *mut __m256i, _mm256_add_epi32(b1, hi));
         }
+    }
+
+    /// Horizontal sum of four u64 lanes — popcount epilogue helper.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epu64(v: __m256i) -> u64 {
+        let mut t = [0u64; 4];
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, v);
+        t[0] + t[1] + t[2] + t[3]
+    }
+
+    /// Byte-wise popcount of a 256-bit vector via the `vpshufb` nibble LUT
+    /// (the Mula method) — exact, and portable to every AVX2 host, unlike
+    /// `vpopcntq` which needs AVX-512 VPOPCNTDQ.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_bytes_avx2(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi64::<4>(v), low);
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+    }
+
+    /// AND+popcount over `words` u64 words of one plane pair: 4 words per
+    /// step through the nibble-LUT byte popcount, `vpsadbw` folding the
+    /// byte counts into u64 lanes; scalar `count_ones` tail.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_and_avx2(a: *const u64, w: *const u64, words: usize) -> u32 {
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= words {
+            let v = _mm256_and_si256(
+                _mm256_loadu_si256(a.add(i) as *const __m256i),
+                _mm256_loadu_si256(w.add(i) as *const __m256i),
+            );
+            let cnt = popcnt_bytes_avx2(v);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+            i += 4;
+        }
+        let mut c = hsum_epu64(acc) as u32;
+        while i < words {
+            c += (*a.add(i) & *w.add(i)).count_ones();
+            i += 1;
+        }
+        c
+    }
+
+    /// AVX2 bit-serial plane dot. For 1/2-bit x 1/2-bit operands every
+    /// plane pair's byte counts combine **before** the `vpsadbw` fold:
+    /// per-byte counts are <= 8 and the pair weights sum to <= 9, so the
+    /// weighted byte total stays <= 72 < 256 — one horizontal fold per
+    /// 4-word block covers all pairs. Wider pairs (weights up to 64) would
+    /// overflow the byte domain, so 4-bit operands take the per-pair path.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popdot_avx2(a: &[u64], w: &[u64], words: usize, bits_a: u8, bits_w: u8) -> i32 {
+        let (ba, bw) = (bits_a as usize, bits_w as usize);
+        debug_assert!(a.len() >= ba * words && w.len() >= bw * words);
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let mut total = 0u32;
+        if ba <= 2 && bw <= 2 {
+            let zero = _mm256_setzero_si256();
+            let mut acc = zero;
+            let mut i = 0usize;
+            while i + 4 <= words {
+                let mut wsum = zero; // weighted byte counts, <= 72 per byte
+                for bi in 0..ba {
+                    let x = _mm256_loadu_si256(ap.add(bi * words + i) as *const __m256i);
+                    for bj in 0..bw {
+                        let y = _mm256_loadu_si256(wp.add(bj * words + i) as *const __m256i);
+                        let mut cnt = popcnt_bytes_avx2(_mm256_and_si256(x, y));
+                        // Scale by 2^(bi+bj) in the byte domain (exact:
+                        // counts stay under the u8 ceiling, see above).
+                        for _ in 0..bi + bj {
+                            cnt = _mm256_add_epi8(cnt, cnt);
+                        }
+                        wsum = _mm256_add_epi8(wsum, cnt);
+                    }
+                }
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(wsum, zero));
+                i += 4;
+            }
+            total += hsum_epu64(acc) as u32;
+            for bi in 0..ba {
+                for bj in 0..bw {
+                    let mut c = 0u32;
+                    for t in i..words {
+                        c += (*ap.add(bi * words + t) & *wp.add(bj * words + t)).count_ones();
+                    }
+                    total += c << (bi + bj);
+                }
+            }
+            return total as i32;
+        }
+        for bi in 0..ba {
+            for bj in 0..bw {
+                let c = popcount_and_avx2(ap.add(bi * words), wp.add(bj * words), words);
+                total += c << (bi + bj);
+            }
+        }
+        total as i32
     }
 
     /// AVX-512 VNNI microkernel: four K positions per `vpdpbusd`. The 4x16
@@ -530,6 +708,75 @@ mod aarch64 {
     pub fn bucket_neon_entry(qa: &[u8], wseg: &[u8], buckets: &mut [[i32; NR]; MAX_CODES]) {
         // SAFETY: selected only when is_aarch64_feature_detected!("neon") held.
         unsafe { bucket_neon(qa, wseg, buckets) }
+    }
+
+    pub fn popdot_neon_entry(a: &[u64], w: &[u64], words: usize, bits_a: u8, bits_w: u8) -> i32 {
+        // SAFETY: selected only when is_aarch64_feature_detected!("neon")
+        // held (the dotprod kernel reuses this arm; dotprod implies neon).
+        unsafe { popdot_neon(a, w, words, bits_a, bits_w) }
+    }
+
+    /// NEON bit-serial plane dot: `vcntq_u8` byte popcounts over the ANDed
+    /// plane words, folded with the widening horizontal add `vaddlvq_u8`.
+    /// Mirrors the AVX2 arm's structure: for 1/2-bit x 1/2-bit operands all
+    /// plane pairs' byte counts combine before one fold per 2-word block
+    /// (weighted byte totals <= 72 < 256, exact in u8); wider pairs take
+    /// the per-pair path.
+    #[target_feature(enable = "neon")]
+    unsafe fn popdot_neon(a: &[u64], w: &[u64], words: usize, bits_a: u8, bits_w: u8) -> i32 {
+        let (ba, bw) = (bits_a as usize, bits_w as usize);
+        debug_assert!(a.len() >= ba * words && w.len() >= bw * words);
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let mut total = 0u32;
+        if ba <= 2 && bw <= 2 {
+            let mut i = 0usize;
+            while i + 2 <= words {
+                let mut wsum = vdupq_n_u8(0); // weighted byte counts, <= 72
+                for bi in 0..ba {
+                    let x = vreinterpretq_u8_u64(vld1q_u64(ap.add(bi * words + i)));
+                    for bj in 0..bw {
+                        let y = vreinterpretq_u8_u64(vld1q_u64(wp.add(bj * words + i)));
+                        let mut cnt = vcntq_u8(vandq_u8(x, y));
+                        for _ in 0..bi + bj {
+                            cnt = vaddq_u8(cnt, cnt);
+                        }
+                        wsum = vaddq_u8(wsum, cnt);
+                    }
+                }
+                total += vaddlvq_u8(wsum) as u32;
+                i += 2;
+            }
+            for bi in 0..ba {
+                for bj in 0..bw {
+                    let mut c = 0u32;
+                    for t in i..words {
+                        c += (*ap.add(bi * words + t) & *wp.add(bj * words + t)).count_ones();
+                    }
+                    total += c << (bi + bj);
+                }
+            }
+            return total as i32;
+        }
+        for bi in 0..ba {
+            for bj in 0..bw {
+                let pa = ap.add(bi * words);
+                let pw = wp.add(bj * words);
+                let mut c = 0u32;
+                let mut i = 0usize;
+                while i + 2 <= words {
+                    let v = vandq_u64(vld1q_u64(pa.add(i)), vld1q_u64(pw.add(i)));
+                    c += vaddlvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u32;
+                    i += 2;
+                }
+                while i < words {
+                    c += (*pa.add(i) & *pw.add(i)).count_ones();
+                    i += 1;
+                }
+                total += c << (bi + bj);
+            }
+        }
+        total as i32
     }
 
     #[cfg(feature = "dotprod")]
@@ -774,6 +1021,55 @@ mod tests {
                 let mut got = [[0i32; NR]; MAX_CODES];
                 kernel.run_bucket(&qa, &wseg, &mut got);
                 assert_eq!(got, want, "kernel {} bits={bits} len={len}", kernel.name);
+            }
+        }
+    }
+
+    /// Oracle for the popdot slot: decode each position's code from the
+    /// planes and take the plain integer dot — independent of the
+    /// bit-plane algebra the arms implement.
+    fn ref_popdot(a: &[u64], w: &[u64], words: usize, ba: u8, bw: u8) -> i32 {
+        let mut total = 0i64;
+        for p in 0..words * 64 {
+            let (wi, bit) = (p / 64, p % 64);
+            let mut ac = 0u32;
+            let mut wc = 0u32;
+            for bi in 0..ba as usize {
+                ac |= (((a[bi * words + wi] >> bit) & 1) as u32) << bi;
+            }
+            for bj in 0..bw as usize {
+                wc |= (((w[bj * words + wi] >> bit) & 1) as u32) << bj;
+            }
+            total += (ac * wc) as i64;
+        }
+        total as i32
+    }
+
+    #[test]
+    fn every_supported_popdot_matches_decode_oracle() {
+        // Random dense plane words (not just plausible code streams): the
+        // arms must be exact on any bit pattern, including full-weight
+        // regions where every popcount saturates to the word width.
+        for kernel in supported_kernels() {
+            let mut rng = Rng::new(0x51D8);
+            for case in 0..300 {
+                let words = 1 + rng.below(24) as usize;
+                let ba = 1 + rng.below(4) as u8;
+                let bw = 1 + rng.below(4) as u8;
+                let a: Vec<u64> = (0..ba as usize * words).map(|_| rng.next_u64()).collect();
+                let w: Vec<u64> = (0..bw as usize * words).map(|_| rng.next_u64()).collect();
+                let want = ref_popdot(&a, &w, words, ba, bw);
+                assert_eq!(
+                    scalar_popdot(&a, &w, words, ba, bw),
+                    want,
+                    "scalar case {case} words={words} a{ba}/w{bw}"
+                );
+                let got = kernel.run_popdot(&a, &w, words, ba, bw);
+                assert_eq!(
+                    got, want,
+                    "kernel {} case {case} words={words} a{ba}/w{bw}",
+                    kernel.name
+                );
             }
         }
     }

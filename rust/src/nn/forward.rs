@@ -8,6 +8,10 @@
 //!   8-bit by default, per-kernel regions), activations quantized *at
 //!   runtime* with DQ (per-layer scale) or LQ (per-region scale), integer
 //!   GEMM via eq. 7, optional LUT inner loop for <= 4-bit activations.
+//!   Layers where *both* operands are <= 4 bits run the bit-serial
+//!   popcount GEMM (`fixedpoint::bitserial`) instead of the widened u8
+//!   tile — bit-exact, with compute cost scaling as `bits_a * bits_w`
+//!   (`LQR_FORCE_U8PANEL=1` opts back into the u8 path).
 //!
 //! The engine is deliberately identical in layout to the build-time python
 //! path (im2col layout, region geometry), so its accuracy numbers are the
@@ -18,7 +22,10 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::fixedpoint::{gemm_f32, gemm_lut_panel, gemm_panel, im2col, WeightPanel};
+use crate::fixedpoint::bitserial::{bitserial_eligible, force_u8panel};
+use crate::fixedpoint::{
+    gemm_bitserial, gemm_f32, gemm_lut_panel, gemm_panel, im2col, WeightPanel,
+};
 use crate::fixedpoint::im2col::{col2im_output, im2col_quantized};
 use crate::nn::arch::{Arch, Layer};
 use crate::quant::{quantize_matrix, QuantizedMatrix, RegionSpec};
@@ -265,6 +272,13 @@ impl Engine {
     /// shared tail of the quantized conv and fc paths. Both consume the
     /// cached weight panel, so weight prep cost is paid once per
     /// (layer, bits, region), not per GEMM call.
+    ///
+    /// Kernel selection per layer: the §V LUT loop when asked for; else the
+    /// bit-serial popcount GEMM when both operands are <= 4 bits (the panel
+    /// then carries the bit-plane sidecar; compute scales with bit width);
+    /// else the widened u8 panel microkernel. The bit-serial and u8 paths
+    /// are bit-exact against each other, so `LQR_FORCE_U8PANEL=1` flips
+    /// performance only, never numerics.
     fn quant_gemm(
         &self,
         aq: &QuantizedMatrix,
@@ -277,6 +291,11 @@ impl Engine {
         let wp = self.quantized_weights(layer, bits_w, region);
         let mut out = if lut {
             gemm_lut_panel(aq, &wp, self.threads)
+        } else if wp.bit_planes().is_some()
+            && bitserial_eligible(aq.bits, bits_w)
+            && !force_u8panel()
+        {
+            gemm_bitserial(aq, &wp, self.threads)
         } else {
             gemm_panel(aq, &wp, self.threads)
         };

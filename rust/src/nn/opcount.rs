@@ -12,6 +12,12 @@
 //!   one fixed-point rescale multiply (so multiplies = MACs / 9). These are
 //!   the constants that reproduce Table 3's 666 -> 74 / 222 (AlexNet) and
 //!   15347 -> 1705 / 5116 (VGG-16) exactly.
+//! - **bit-serial** — the `fixedpoint::bitserial` popcount GEMM: both
+//!   operands at <= 4 bits, the inner loop decomposed into bit-planes so
+//!   each output costs `bits_a * bits_w * ceil(K/64)` AND+popcount word ops
+//!   over 64-bit lanes instead of `K` MACs. This is the accounting that
+//!   makes `table3_opcount` reflect the paper's "largely save transistors"
+//!   complexity claim for sub-8-bit schemes on word-oriented hardware.
 
 use crate::nn::arch::{Arch, Layer};
 
@@ -97,6 +103,33 @@ pub fn lut_ops(arch: &Arch, m: LutCostModel) -> OpCounts {
     total
 }
 
+/// Bit-serial popcount GEMM cost over conv layers (the
+/// `fixedpoint::bitserial` path, Table 3 protocol): each output element of
+/// a layer with reduction length `K = cin/groups * k * k` costs
+/// `bits_a * bits_w * ceil(K / 64)` AND+popcount **word ops** (reported as
+/// `adds` — one 64-lane AND + population count + accumulate each), and the
+/// eq. 7 per-region affine epilogue costs 4 multiplies per region per
+/// output (one kernel-sized region per output under the paper's PerRow
+/// default, reported as `multiplies`). Compute scales with the *product of
+/// bit widths*: 2-bit codes cost 16x fewer word ops than one-MAC-per-element
+/// — the complexity story Fig. 8 tells for the FPGA, realized on 64-bit
+/// cores.
+pub fn bitserial_ops(arch: &Arch, bits_a: u8, bits_w: u8) -> OpCounts {
+    let mut total = OpCounts::default();
+    for l in &arch.layers {
+        if let Layer::Conv { cin, k, groups, .. } = *l {
+            let macs = conv_macs(arch, l);
+            let kdim = (cin / groups * k * k) as u64;
+            let outputs = macs / kdim; // cout * ho * wo
+            total.add(OpCounts {
+                adds: outputs * bits_a as u64 * bits_w as u64 * kdim.div_ceil(64),
+                multiplies: outputs * 4,
+            });
+        }
+    }
+    total
+}
+
 /// fc-layer MACs (not in Table 3, used by the Edison cost model).
 pub fn fc_macs(arch: &Arch) -> u64 {
     arch.layers
@@ -166,6 +199,30 @@ mod tests {
         assert!(f32_bytes > 500_000_000, "{f32_bytes}");
         let q8 = weight_bytes(&a, 8);
         assert!(q8 < f32_bytes / 3, "8-bit {q8} vs f32 {f32_bytes}");
+    }
+
+    #[test]
+    fn bitserial_word_ops_scale_with_bit_width() {
+        for a in [Arch::alexnet_full(), Arch::vgg16_full()] {
+            let o = original_ops(&a);
+            let b1 = bitserial_ops(&a, 1, 1);
+            let b2 = bitserial_ops(&a, 2, 2);
+            let b4 = bitserial_ops(&a, 4, 4);
+            // Compute scales with the product of bit widths (shared ceil(K/64)).
+            assert_eq!(b2.adds, 4 * b1.adds, "{}", a.name);
+            assert_eq!(b4.adds, 4 * b2.adds, "{}", a.name);
+            // 2-bit: 4 plane pairs over 64-lane words ≈ 16x fewer word ops
+            // than MACs (per-layer ceil(K/64) keeps it a bit under 16x).
+            let ratio2 = o.adds as f64 / b2.adds as f64;
+            assert!((12.0..=16.0).contains(&ratio2), "{}: {ratio2}", a.name);
+            // The epilogue multiply count is bit-width independent and tiny
+            // next to the dense multiply count.
+            assert_eq!(b1.multiplies, b4.multiplies, "{}", a.name);
+            assert!(b2.multiplies * 20 < o.multiplies, "{}", a.name);
+            // Mixed widths multiply out: 2-bit acts x 4-bit weights.
+            let b24 = bitserial_ops(&a, 2, 4);
+            assert_eq!(b24.adds, 2 * b2.adds, "{}", a.name);
+        }
     }
 
     #[test]

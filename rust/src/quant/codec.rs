@@ -1,10 +1,19 @@
 //! Dense bit-packing of quantization codes (1..8 bits per code).
 //!
 //! The paper's memory/bandwidth saving comes from shipping n-bit codes, not
-//! bytes. Codes are packed little-endian into a contiguous `u64` stream —
-//! code i occupies bits [i*n, (i+1)*n) of the stream. 6-bit codes straddle
-//! word boundaries; the codec handles splits transparently. The packed GEMM
-//! (`fixedpoint::gemm_packed`) reads this format directly.
+//! bytes. Two layouts:
+//!
+//! - **Code-major** ([`Packed`], [`pack`] / [`unpack`]): codes packed
+//!   little-endian into a contiguous `u64` stream — code i occupies bits
+//!   [i*n, (i+1)*n) of the stream. 6-bit codes straddle word boundaries; the
+//!   codec handles splits transparently. The packed GEMM
+//!   (`fixedpoint::gemm_packed`) reads this format directly.
+//! - **Plane-major** ([`Planes`], [`pack_planes`] / [`unpack_planes`]):
+//!   bit `b` of every code gathered into its own dense `u64` lane stream
+//!   (bit-plane decomposition). This is the operand layout of the
+//!   bit-serial popcount GEMM (`fixedpoint::bitserial`), where a dot
+//!   product over n-bit codes becomes `n^2` AND+popcount passes over the
+//!   plane pairs — compute cost finally scales with bit width.
 
 /// Packed code stream.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +84,81 @@ pub fn unpack_into(p: &Packed, out: &mut [u8]) {
     }
 }
 
+/// Plane-major bit-plane streams: plane `b` holds bit `b` of every code,
+/// one bit per position, packed little-endian into `u64` words (position
+/// `p` lives at bit `p % 64` of word `p / 64` of its plane).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Planes {
+    /// Code width in bits (1..=8) — one plane per bit.
+    pub bits: u8,
+    /// Number of codes in the stream.
+    pub len: usize,
+    /// Words per plane (`ceil(len / 64)`; tail bits zero-padded).
+    pub words_per_plane: usize,
+    /// `bits * words_per_plane` words, layout `[plane][word]`.
+    pub words: Vec<u64>,
+}
+
+/// Decompose `codes` (each < 2^bits) into plane-major bit-plane streams.
+pub fn pack_planes(codes: &[u8], bits: u8) -> Planes {
+    let wpp = codes.len().div_ceil(64);
+    let mut words = vec![0u64; bits as usize * wpp];
+    pack_planes_into(codes, bits, wpp, &mut words);
+    Planes { bits, len: codes.len(), words_per_plane: wpp, words }
+}
+
+/// Core plane-packing primitive: scatter `codes` into `bits` bit-planes at
+/// `stride` words per plane. `stride` may exceed `ceil(len / 64)` — the
+/// bit-serial GEMM uses this to keep every quantization region word-aligned
+/// (each region's planes start at a word boundary, tail regions zero-pad).
+/// The full `stride` of every plane is rewritten (pad words zeroed), so a
+/// reused scratch buffer never leaks stale bits into the popcounts.
+pub fn pack_planes_into(codes: &[u8], bits: u8, stride: usize, out: &mut [u64]) {
+    assert!((1..=8).contains(&bits));
+    let bits = bits as usize;
+    assert!(
+        stride >= codes.len().div_ceil(64),
+        "pack_planes_into: stride {stride} < {} words",
+        codes.len().div_ceil(64)
+    );
+    assert!(
+        out.len() >= bits * stride,
+        "pack_planes_into: buffer {} < {} words",
+        out.len(),
+        bits * stride
+    );
+    out[..bits * stride].fill(0);
+    for (wi, chunk) in codes.chunks(64).enumerate() {
+        for b in 0..bits {
+            let mut word = 0u64;
+            for (o, &c) in chunk.iter().enumerate() {
+                debug_assert!((c as usize) < (1 << bits), "code {c} exceeds {bits} bits");
+                word |= (((c >> b) & 1) as u64) << o;
+            }
+            out[b * stride + wi] = word;
+        }
+    }
+}
+
+/// Reassemble codes from plane-major streams (inverse of [`pack_planes`]).
+pub fn unpack_planes(p: &Planes) -> Vec<u8> {
+    let mut out = vec![0u8; p.len];
+    for b in 0..p.bits as usize {
+        let plane = &p.words[b * p.words_per_plane..(b + 1) * p.words_per_plane];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o |= (((plane[i / 64] >> (i % 64)) & 1) as u8) << b;
+        }
+    }
+    out
+}
+
+impl Planes {
+    /// Storage bytes of the plane streams.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
 impl Packed {
     /// Read code `i` without unpacking the stream.
     #[inline]
@@ -138,5 +222,60 @@ mod tests {
         let p = pack(&[], 4);
         assert_eq!(p.words.len(), 0);
         assert_eq!(unpack(&p), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn plane_roundtrip_all_widths() {
+        // Plane-major pack/unpack is lossless for every width and every
+        // length — including lengths that are not a multiple of 64 (the K
+        // tails the bit-serial GEMM pads), where the pad bits must be zero.
+        prop::check("planes-roundtrip", 0x9ACD, |rng, _| {
+            let bits = prop::gen_bits(rng) as u8;
+            let n = rng.index(0, 300);
+            let mask = ((1u16 << bits) - 1) as u8;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.below(256) as u8) & mask).collect();
+            let p = pack_planes(&codes, bits);
+            assert_eq!(p.words_per_plane, n.div_ceil(64));
+            assert_eq!(p.words.len(), bits as usize * p.words_per_plane);
+            assert_eq!(unpack_planes(&p), codes, "bits={bits} n={n}");
+            // Pad bits past `len` are zero in every plane: an AND against a
+            // padded stream can never contribute phantom popcounts.
+            if n % 64 != 0 && !codes.is_empty() {
+                for b in 0..bits as usize {
+                    let last = p.words[(b + 1) * p.words_per_plane - 1];
+                    assert_eq!(last >> (n % 64), 0, "pad bits set in plane {b}");
+                }
+            }
+            // Bit b of code i lands at bit i%64 of word i/64 of plane b.
+            for (i, &c) in codes.iter().enumerate() {
+                for b in 0..bits as usize {
+                    let got = (p.words[b * p.words_per_plane + i / 64] >> (i % 64)) & 1;
+                    assert_eq!(got as u8, (c >> b) & 1, "plane {b} code {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn plane_pack_with_oversized_stride() {
+        // The region-aligned layout packs short segments at a wider stride;
+        // the pad words must come out zero even from a dirty buffer.
+        let codes: Vec<u8> = (0..70).map(|i| (i % 4) as u8).collect();
+        let stride = 4; // ceil(70/64) = 2, two pad words per plane
+        let mut out = vec![u64::MAX; 2 * stride];
+        pack_planes_into(&codes, 2, stride, &mut out);
+        for b in 0..2usize {
+            assert_eq!(out[b * stride + 2], 0, "pad word not zeroed");
+            assert_eq!(out[b * stride + 3], 0, "pad word not zeroed");
+        }
+        // Same bits as the tight pack.
+        let tight = pack_planes(&codes, 2);
+        for b in 0..2usize {
+            assert_eq!(
+                &out[b * stride..b * stride + 2],
+                &tight.words[b * 2..(b + 1) * 2],
+                "plane {b} differs from tight pack"
+            );
+        }
     }
 }

@@ -8,7 +8,10 @@
 //! hardware, the `udot` tile; on x86-64 the AVX2 / VNNI tiles) must agree
 //! **bit-exactly** with the forced-scalar arm — integer accumulation is
 //! exact and the f32 correction is shared, so any difference is a kernel
-//! bug, not rounding. Plus the fused `im2col_quantized` vs `im2col` +
+//! bug, not rounding. The bit-serial popcount GEMM gets the same treatment:
+//! every arm's plane-dot, over every {1,2,4}-bit width pair, must equal the
+//! forced-scalar u8 panel oracle bit-exactly (flat and bit-packed
+//! activations). Plus the fused `im2col_quantized` vs `im2col` +
 //! `quantize_matrix` equivalence (including parallel vs single-threaded
 //! bit-identity), and the engine-level regression that prepared panels are
 //! cached (pointer identity across forward passes).
@@ -18,8 +21,9 @@ use std::collections::HashMap;
 use lqr::fixedpoint::gemm_packed::PackedMatrix;
 use lqr::fixedpoint::simd;
 use lqr::fixedpoint::{
-    gemm_lut_panel, gemm_lut_panel_with, gemm_panel, gemm_panel_packed, gemm_panel_packed_with,
-    gemm_panel_with, gemm_quantized_naive, im2col, im2col_quantized, WeightPanel,
+    gemm_bitserial_packed_with, gemm_bitserial_with, gemm_lut_panel, gemm_lut_panel_with,
+    gemm_panel, gemm_panel_packed, gemm_panel_packed_with, gemm_panel_with, gemm_quantized_naive,
+    im2col, im2col_quantized, WeightPanel,
 };
 use lqr::nn::forward::Scheme;
 use lqr::nn::{Arch, Engine, Layer, Precision};
@@ -193,6 +197,51 @@ fn every_supported_bucket_arm_matches_forced_scalar_lut() {
                 got.data(),
                 want.data(),
                 "lut kernel {}: m={m} n={n} k={k} bits={bits} region={region}",
+                kernel.name
+            );
+        }
+    });
+}
+
+#[test]
+fn bitserial_matches_u8_scalar_oracle_on_every_arm() {
+    // The bit-serial popcount GEMM must agree **bit-exactly** with the
+    // forced-scalar u8 panel path — the integer dot is the same number
+    // either way (sum of weighted plane popcounts == sum of code products)
+    // and the eq. 7 epilogue applies the identical f32 expression in the
+    // identical region order. Every supported dispatch arm (scalar
+    // count_ones, AVX2 nibble-LUT popcount, NEON vcntq — plus whatever the
+    // VNNI/udot kernels reuse), every width pair in {1,2,4}^2, shapes with
+    // multiple regions per row and ragged word tails (K % 64 != 0), thread
+    // counts 1/3, and bit-packed activation streams riding the same planes.
+    let scalar = simd::scalar_kernel();
+    prop::check_named("bitserial-vs-u8-oracle", 0x51D9, 48, |rng, _| {
+        let (m, n, k, region) = gen_case(rng);
+        let bits_a = [1u8, 2, 4][rng.below(3) as usize];
+        let bits_w = [1u8, 2, 4][rng.below(3) as usize];
+        let a = Tensor::new(&[m, k], prop::gen_values(rng, m * k));
+        let w = Tensor::new(&[n, k], prop::gen_values(rng, n * k));
+        let aq = quantize_matrix(&a, bits_a, region);
+        let wq = quantize_matrix(&w, bits_w, region);
+        let wp = WeightPanel::from_quantized(&wq);
+        assert!(wp.bit_planes().is_some(), "<=4-bit panel must carry bit planes");
+        let want = gemm_panel_with(&aq, &wp, 1, scalar);
+        let ap = PackedMatrix::from_quantized(&aq);
+        for kernel in simd::supported_kernels() {
+            for threads in [1usize, 3] {
+                let got = gemm_bitserial_with(&aq, &wp, threads, kernel);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "bitserial {} vs u8 scalar: m={m} n={n} k={k} a{bits_a}/w{bits_w} region={region} threads={threads}",
+                    kernel.name
+                );
+            }
+            let got_packed = gemm_bitserial_packed_with(&ap, &wp, 3, kernel);
+            assert_eq!(
+                got_packed.data(),
+                want.data(),
+                "bitserial-packed {}: m={m} n={n} k={k} a{bits_a}/w{bits_w} region={region}",
                 kernel.name
             );
         }
