@@ -41,6 +41,7 @@ fn run(max_batch: usize, max_wait_ms: u64, rate: f64, total: usize) -> (f64, f64
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
             queue_capacity: 8192,
+            ..Default::default()
         },
         Box::new(|| Ok(Box::new(AmortizedBackend) as Box<dyn Backend>)),
     )
@@ -57,7 +58,7 @@ fn run(max_batch: usize, max_wait_ms: u64, rate: f64, total: usize) -> (f64, f64
     let mut lat: Vec<f64> = rxs
         .into_iter()
         .map(|rx| {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().expect("mock backend never fails");
             (r.queue_time + r.execute_time).as_secs_f64() * 1e3
         })
         .collect();

@@ -25,6 +25,7 @@ struct RunResult {
     p50_ms: f64,
     p99_ms: f64,
     mean_batch: f64,
+    errors: usize,
 }
 
 fn drive(
@@ -39,6 +40,7 @@ fn drive(
         max_batch: 8,
         max_wait: Duration::from_millis(4),
         queue_capacity: 4096,
+        ..Default::default()
     };
     let (a, v) = (artifacts.to_string(), variant.to_string());
     let coord = Coordinator::start(
@@ -59,31 +61,43 @@ fn drive(
                     rxs.push(rx);
                     break;
                 }
-                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+                Err(lqr::coordinator::SubmitError::QueueFull(_)) => {
+                    std::thread::sleep(Duration::from_micros(100))
+                }
+                // Shut down / dead pool: retrying can never succeed.
+                Err(e) => anyhow::bail!("submit failed: {e}"),
             }
         }
         std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
     }
     let mut hits = 0usize;
+    let mut errors = 0usize;
     let mut lat_ms: Vec<f64> = Vec::with_capacity(total);
     let submit_done = t0.elapsed();
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let r = rx.recv()?;
-        lat_ms.push((r.queue_time + r.execute_time).as_secs_f64() * 1e3);
-        if r.predicted as i32 == label {
-            hits += 1;
+        match rx.recv()? {
+            Ok(r) => {
+                lat_ms.push((r.queue_time + r.execute_time).as_secs_f64() * 1e3);
+                if r.predicted as i32 == label {
+                    hits += 1;
+                }
+            }
+            // Typed error reply (shed/expired/backend): counted per run.
+            Err(_) => errors += 1,
         }
     }
+    anyhow::ensure!(!lat_ms.is_empty(), "every request errored — nothing to report");
     let wall = t0.elapsed().as_secs_f64().max(submit_done.as_secs_f64());
     let m = coord.shutdown();
     lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
     let pct = |p: f64| lat_ms[((lat_ms.len() - 1) as f64 * p) as usize];
     Ok(RunResult {
         throughput: total as f64 / wall,
-        accuracy: hits as f64 / total as f64,
+        accuracy: hits as f64 / (total - errors).max(1) as f64,
         p50_ms: pct(0.50),
         p99_ms: pct(0.99),
         mean_batch: m.mean_batch_size(),
+        errors,
     })
 }
 
@@ -95,7 +109,16 @@ fn main() -> Result<()> {
 
     let mut t = TableFmt::new(
         "E2E serving: MiniAlexNet, Poisson arrivals, dynamic batching (max_batch=8, max_wait=4ms)",
-        &["variant", "offered req/s", "achieved req/s", "top-1", "p50 ms", "p99 ms", "mean batch"],
+        &[
+            "variant",
+            "offered req/s",
+            "achieved req/s",
+            "top-1",
+            "p50 ms",
+            "p99 ms",
+            "mean batch",
+            "errors",
+        ],
     );
     for variant in ["f32", "lq"] {
         for rate in [100.0, 400.0, 1600.0] {
@@ -108,6 +131,7 @@ fn main() -> Result<()> {
                 format!("{:.2}", r.p50_ms),
                 format!("{:.2}", r.p99_ms),
                 format!("{:.2}", r.mean_batch),
+                r.errors.to_string(),
             ]);
         }
     }

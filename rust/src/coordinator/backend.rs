@@ -18,6 +18,14 @@ use crate::tensor::Tensor;
 
 /// A batch executor. Implementations need not be Send — each worker thread
 /// builds its own backend via [`BackendFactory`].
+///
+/// Fault contract (what the supervised worker does with misbehaviour):
+/// an `Err` from [`Backend::run_batch`] fails only that batch — the worker
+/// bisects and retries to isolate poison requests, and the backend is
+/// assumed reusable afterwards. A *panic* retires the whole worker (state
+/// unknown); the supervisor replaces it with a fresh backend. Returning a
+/// logits tensor whose row count differs from the input batch is treated
+/// as a batch failure, never silently mis-routed.
 pub trait Backend {
     /// Execute a `(B, C, H, W)` batch -> `(B, classes)` logits.
     fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor>;
@@ -25,7 +33,10 @@ pub trait Backend {
     fn describe(&self) -> String;
 }
 
-/// Thread-safe constructor for per-worker backends.
+/// Thread-safe constructor for per-worker backends. May be invoked many
+/// times over a coordinator's life: once per worker slot at start, and
+/// again whenever the supervisor replaces a crashed worker — it should be
+/// idempotent and safe to call concurrently.
 pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
 
 // ------------------------------------------------------------------ PJRT --

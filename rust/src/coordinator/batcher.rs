@@ -1,16 +1,30 @@
-//! Bounded FIFO queue + dynamic batching policy.
+//! Bounded FIFO queue + dynamic batching policy + admission control.
 //!
 //! The policy is the classic serving trade-off: a batch is released when
 //! either `max_batch` requests are queued (throughput) or the oldest queued
 //! request has waited `max_wait` (latency). The queue is bounded at
-//! `capacity`; when full, `submit` applies backpressure by returning
-//! [`SubmitError::QueueFull`] so the caller can shed or retry.
+//! `capacity`; when full, the [`ShedPolicy`] decides whether the *newest*
+//! request is rejected ([`SubmitError::QueueFull`]) or the *oldest* queued
+//! request is shed with a typed [`InferError::Shed`] reply to admit the new
+//! one — overload degrades latency-predictably instead of queue-deep.
+//!
+//! Requests carry an optional deadline; [`BatchQueue::pop_batch`] expires
+//! stale requests with [`InferError::DeadlineExceeded`] *before* forming
+//! batches, so workers never burn cycles computing answers nobody is
+//! waiting for.
+//!
+//! The queue also owns the coordinator's fail-fast state: when the
+//! supervisor declares the worker pool irrecoverably dead it calls
+//! [`BatchQueue::fail`], which flushes every queued request with
+//! [`InferError::NoWorkers`] and makes later submits return
+//! [`SubmitError::NoWorkers`] — no request ever hangs on a dead pool.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::request::InferRequest;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferError, InferRequest, ShedReason};
 
 /// Why a batch was released (recorded in metrics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,6 +38,9 @@ pub enum FlushReason {
 pub enum SubmitError {
     QueueFull(usize),
     ShutDown,
+    /// The worker pool is irrecoverably dead (every worker exhausted its
+    /// restart budget); the coordinator is in its fail-fast state.
+    NoWorkers,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -31,44 +48,82 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull(cap) => write!(f, "queue full (capacity {cap})"),
             SubmitError::ShutDown => write!(f, "coordinator shut down"),
+            SubmitError::NoWorkers => write!(f, "no live workers (pool is dead)"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
 
-/// Batch formation policy.
+/// What to do with a submission when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the incoming request: `submit` returns
+    /// [`SubmitError::QueueFull`] and the caller never gets a receiver.
+    RejectNewest,
+    /// Admit the incoming request by shedding the oldest queued one; the
+    /// victim's receiver gets [`InferError::Shed`]. Favors fresh traffic —
+    /// the requests most likely to still have a waiting client.
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI-style name (`reject-newest` | `drop-oldest`).
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "reject-newest" => Some(ShedPolicy::RejectNewest),
+            "drop-oldest" => Some(ShedPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// Batch formation + admission policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub capacity: usize,
+    pub shed: ShedPolicy,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), capacity: 1024 }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            capacity: 1024,
+            shed: ShedPolicy::RejectNewest,
+        }
     }
 }
 
 struct Inner {
     queue: VecDeque<InferRequest>,
     shutdown: bool,
+    /// Fail-fast: pool irrecoverably dead. Submits refuse, workers exit.
+    failed: bool,
 }
 
 /// Thread-safe batching queue shared between submitters and workers.
 pub struct BatchQueue {
     policy: BatchPolicy,
+    metrics: Arc<Metrics>,
     inner: Mutex<Inner>,
     cv: Condvar,
 }
 
 impl BatchQueue {
-    pub fn new(policy: BatchPolicy) -> BatchQueue {
+    pub fn new(policy: BatchPolicy, metrics: Arc<Metrics>) -> BatchQueue {
         assert!(policy.max_batch >= 1);
         BatchQueue {
             policy,
-            inner: Mutex::new(Inner { queue: VecDeque::new(), shutdown: false }),
+            metrics,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                shutdown: false,
+                failed: false,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -77,17 +132,35 @@ impl BatchQueue {
         self.policy
     }
 
-    /// Enqueue a request (FIFO). Fails when full or shut down.
+    /// Enqueue a request (FIFO). At capacity the [`ShedPolicy`] applies;
+    /// fails when shut down or the pool is dead.
     pub fn submit(&self, req: InferRequest) -> Result<(), SubmitError> {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.shutdown {
-            return Err(SubmitError::ShutDown);
+        let victim = {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.failed {
+                return Err(SubmitError::NoWorkers);
+            }
+            if inner.shutdown {
+                return Err(SubmitError::ShutDown);
+            }
+            let victim = if inner.queue.len() >= self.policy.capacity {
+                match self.policy.shed {
+                    ShedPolicy::RejectNewest => {
+                        return Err(SubmitError::QueueFull(self.policy.capacity))
+                    }
+                    ShedPolicy::DropOldest => inner.queue.pop_front(),
+                }
+            } else {
+                None
+            };
+            inner.queue.push_back(req);
+            self.cv.notify_one();
+            victim
+        };
+        // Reply to the shed victim outside the lock.
+        if let Some(v) = victim {
+            v.respond_err(InferError::Shed { reason: ShedReason::DropOldest }, &self.metrics);
         }
-        if inner.queue.len() >= self.policy.capacity {
-            return Err(SubmitError::QueueFull(self.policy.capacity));
-        }
-        inner.queue.push_back(req);
-        self.cv.notify_one();
         Ok(())
     }
 
@@ -96,12 +169,30 @@ impl BatchQueue {
         self.inner.lock().unwrap().queue.len()
     }
 
-    /// Block until a batch is ready, the deadline of the oldest request
-    /// expires, or shutdown. Returns `None` only when shut down *and* empty;
-    /// FIFO order is preserved within and across batches.
+    /// Block until a batch is ready, the wait deadline of the oldest request
+    /// expires, or shutdown. Expired requests are replied
+    /// [`InferError::DeadlineExceeded`] and never occupy batch slots.
+    /// Returns `None` when shut down *and* empty, or when the pool has been
+    /// failed; FIFO order is preserved within and across batches.
     pub fn pop_batch(&self) -> Option<(Vec<InferRequest>, FlushReason)> {
         let mut inner = self.inner.lock().unwrap();
         loop {
+            // Expire stale requests first (reply while holding the lock is
+            // fine: mpsc send never blocks and takes no lock of ours).
+            let now = Instant::now();
+            let mut i = 0;
+            while i < inner.queue.len() {
+                if inner.queue[i].expired(now) {
+                    if let Some(r) = inner.queue.remove(i) {
+                        r.respond_err(InferError::DeadlineExceeded, &self.metrics);
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            if inner.failed {
+                return None;
+            }
             if inner.queue.len() >= self.policy.max_batch {
                 let batch = drain(&mut inner.queue, self.policy.max_batch);
                 self.cv.notify_all(); // submitters may be watching depth
@@ -119,10 +210,16 @@ impl BatchQueue {
                     let n = inner.queue.len().min(self.policy.max_batch);
                     return Some((drain(&mut inner.queue, n), FlushReason::Shutdown));
                 }
-                // Wait out the remaining deadline (or a new arrival).
+                // Wait out the remaining flush window — or the nearest
+                // request deadline, whichever comes first, so expiry replies
+                // are prompt even under a long max_wait.
+                let mut wait = self.policy.max_wait - elapsed;
+                if let Some(dl) = inner.queue.iter().filter_map(|r| r.deadline).min() {
+                    wait = wait.min(dl.saturating_duration_since(now));
+                }
                 let (guard, _) = self
                     .cv
-                    .wait_timeout(inner, self.policy.max_wait - elapsed)
+                    .wait_timeout(inner, wait.max(Duration::from_micros(50)))
                     .unwrap();
                 inner = guard;
             } else {
@@ -144,6 +241,40 @@ impl BatchQueue {
     pub fn is_shutdown(&self) -> bool {
         self.inner.lock().unwrap().shutdown
     }
+
+    /// Flip into the fail-fast state: every queued request is replied
+    /// [`InferError::NoWorkers`], later submits refuse with
+    /// [`SubmitError::NoWorkers`], and workers blocked in `pop_batch` wake
+    /// and exit. Called by the supervisor when the pool is irrecoverably
+    /// dead.
+    pub fn fail(&self) {
+        let drained: Vec<InferRequest> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.failed = true;
+            self.cv.notify_all();
+            inner.queue.drain(..).collect()
+        };
+        for r in drained {
+            r.respond_err(InferError::NoWorkers, &self.metrics);
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.inner.lock().unwrap().failed
+    }
+
+    /// Teardown sweep: reply `err` to anything still queued. Used by
+    /// `Coordinator::shutdown` after the workers have exited, so a pool
+    /// that died mid-drain still resolves every outstanding receiver.
+    pub fn flush_pending(&self, err: InferError) {
+        let drained: Vec<InferRequest> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.queue.drain(..).collect()
+        };
+        for r in drained {
+            r.respond_err(err.clone(), &self.metrics);
+        }
+    }
 }
 
 fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
@@ -153,32 +284,40 @@ fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::InferReply;
     use crate::tensor::Tensor;
     use std::sync::mpsc;
-    use std::sync::Arc;
     use std::thread;
-    use std::time::Instant;
 
-    fn req(id: u64) -> (InferRequest, mpsc::Receiver<crate::coordinator::InferResponse>) {
+    fn req(id: u64) -> (InferRequest, mpsc::Receiver<InferReply>) {
+        req_ttl(id, None)
+    }
+
+    fn req_ttl(id: u64, ttl: Option<Duration>) -> (InferRequest, mpsc::Receiver<InferReply>) {
         let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
         (
             InferRequest {
                 id,
                 image: Tensor::zeros(&[1, 1, 2, 2]),
-                submitted_at: Instant::now(),
+                submitted_at: now,
+                deadline: ttl.map(|d| now + d),
                 reply: tx,
             },
             rx,
         )
     }
 
+    fn queue(max_batch: usize, max_wait: Duration, capacity: usize, shed: ShedPolicy) -> BatchQueue {
+        BatchQueue::new(
+            BatchPolicy { max_batch, max_wait, capacity, shed },
+            Arc::new(Metrics::default()),
+        )
+    }
+
     #[test]
     fn full_batch_released_immediately() {
-        let q = BatchQueue::new(BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_secs(10),
-            capacity: 100,
-        });
+        let q = queue(4, Duration::from_secs(10), 100, ShedPolicy::RejectNewest);
         let mut rxs = Vec::new();
         for i in 0..4 {
             let (r, rx) = req(i);
@@ -192,11 +331,7 @@ mod tests {
 
     #[test]
     fn deadline_flush_partial_batch() {
-        let q = BatchQueue::new(BatchPolicy {
-            max_batch: 64,
-            max_wait: Duration::from_millis(10),
-            capacity: 100,
-        });
+        let q = queue(64, Duration::from_millis(10), 100, ShedPolicy::RejectNewest);
         let (r, _rx) = req(7);
         q.submit(r).unwrap();
         let t0 = Instant::now();
@@ -207,12 +342,8 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_when_full() {
-        let q = BatchQueue::new(BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_secs(1),
-            capacity: 2,
-        });
+    fn backpressure_when_full_reject_newest() {
+        let q = queue(8, Duration::from_secs(1), 2, ShedPolicy::RejectNewest);
         let (a, _ra) = req(1);
         let (b, _rb) = req(2);
         let (c, _rc) = req(3);
@@ -222,12 +353,93 @@ mod tests {
     }
 
     #[test]
+    fn drop_oldest_sheds_victim_with_typed_reply() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(1),
+                capacity: 2,
+                shed: ShedPolicy::DropOldest,
+            },
+            Arc::clone(&metrics),
+        );
+        let (a, ra) = req(1);
+        let (b, _rb) = req(2);
+        let (c, _rc) = req(3);
+        q.submit(a).unwrap();
+        q.submit(b).unwrap();
+        q.submit(c).unwrap(); // admitted; request 1 shed
+        assert_eq!(q.depth(), 2);
+        match ra.try_recv().unwrap() {
+            Err(InferError::Shed { reason: ShedReason::DropOldest }) => {}
+            other => panic!("expected Shed reply, got {other:?}"),
+        }
+        assert_eq!(metrics.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        let (batch, _) = q.pop_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn expired_requests_replied_not_batched() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_secs(1),
+                capacity: 100,
+                shed: ShedPolicy::RejectNewest,
+            },
+            Arc::clone(&metrics),
+        );
+        let (stale, stale_rx) = req_ttl(1, Some(Duration::ZERO));
+        let (live, _live_rx) = req(2);
+        q.submit(stale).unwrap();
+        q.submit(live).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let (batch, _) = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 2, "expired request must not occupy a batch slot");
+        assert!(matches!(stale_rx.try_recv().unwrap(), Err(InferError::DeadlineExceeded)));
+        assert_eq!(metrics.expired.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn expiry_wakes_before_long_max_wait() {
+        // max_wait is 10s but the only request's TTL is 30ms: the worker
+        // must wake and reply DeadlineExceeded promptly, not sleep out the
+        // flush window.
+        let q = Arc::new(queue(64, Duration::from_secs(10), 100, ShedPolicy::RejectNewest));
+        let (r, rx) = req_ttl(1, Some(Duration::from_millis(30)));
+        q.submit(r).unwrap();
+        let qq = Arc::clone(&q);
+        let worker = thread::spawn(move || qq.pop_batch());
+        let reply = rx.recv_timeout(Duration::from_secs(2)).expect("prompt expiry reply");
+        assert!(matches!(reply, Err(InferError::DeadlineExceeded)));
+        q.shutdown();
+        assert!(worker.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn fail_flushes_and_refuses() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(BatchPolicy::default(), Arc::clone(&metrics));
+        let (a, ra) = req(1);
+        let (b, rb) = req(2);
+        q.submit(a).unwrap();
+        q.submit(b).unwrap();
+        q.fail();
+        assert!(matches!(ra.try_recv().unwrap(), Err(InferError::NoWorkers)));
+        assert!(matches!(rb.try_recv().unwrap(), Err(InferError::NoWorkers)));
+        let (c, _rc) = req(3);
+        assert_eq!(q.submit(c), Err(SubmitError::NoWorkers));
+        assert!(q.pop_batch().is_none(), "workers must exit a failed queue");
+        assert_eq!(metrics.failed.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
     fn shutdown_drains_then_none() {
-        let q = Arc::new(BatchQueue::new(BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_secs(10),
-            capacity: 100,
-        }));
+        let q = Arc::new(queue(4, Duration::from_secs(10), 100, ShedPolicy::RejectNewest));
         let (r, _rx) = req(1);
         q.submit(r).unwrap();
         q.shutdown();
@@ -240,12 +452,18 @@ mod tests {
     }
 
     #[test]
+    fn flush_pending_resolves_stragglers() {
+        let q = queue(4, Duration::from_secs(10), 100, ShedPolicy::RejectNewest);
+        let (r, rx) = req(1);
+        q.submit(r).unwrap();
+        q.flush_pending(InferError::ShuttingDown);
+        assert!(matches!(rx.try_recv().unwrap(), Err(InferError::ShuttingDown)));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
     fn fifo_across_batches_with_concurrent_worker() {
-        let q = Arc::new(BatchQueue::new(BatchPolicy {
-            max_batch: 3,
-            max_wait: Duration::from_millis(5),
-            capacity: 1000,
-        }));
+        let q = Arc::new(queue(3, Duration::from_millis(5), 1000, ShedPolicy::RejectNewest));
         let qq = Arc::clone(&q);
         let collector = thread::spawn(move || {
             let mut seen = Vec::new();

@@ -4,15 +4,33 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::request::InferError;
 use crate::util::stats::LatencyHistogram;
 
 /// Aggregated coordinator metrics. Cheap atomic counters on the hot path;
 /// histograms behind short-lived mutexes.
+///
+/// Every request is accounted for exactly once in
+/// `completed + failed + shed + expired + rejected` — failed work no longer
+/// vanishes (see `docs/serving-robustness.md`).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
+    /// Submissions refused synchronously (`SubmitError`): queue full under
+    /// reject-newest, shut down, or no live workers.
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests that got a typed error reply other than shed/expired:
+    /// `BackendFailed`, `ShapeMismatch`, `ShuttingDown`, `NoWorkers`.
+    pub failed: AtomicU64,
+    /// Requests load-shed after admission (drop-oldest victims).
+    pub shed: AtomicU64,
+    /// Requests expired by their deadline before execution.
+    pub expired: AtomicU64,
+    /// Worker threads respawned by the supervisor after a crash or init
+    /// failure.
+    pub worker_restarts: AtomicU64,
+    /// Backend invocations (bisection retries count individually).
     pub batches: AtomicU64,
     /// Sum of (unpadded) batch sizes — mean batch size = this / batches.
     pub batched_requests: AtomicU64,
@@ -39,6 +57,16 @@ impl Metrics {
         self.e2e_hist.lock().unwrap().record(e2e);
     }
 
+    /// Bucket a typed error reply into the matching counter.
+    pub fn record_error(&self, err: &InferError) {
+        let counter = match err {
+            InferError::Shed { .. } => &self.shed,
+            InferError::DeadlineExceeded => &self.expired,
+            _ => &self.failed,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -53,11 +81,16 @@ impl Metrics {
         let exe = self.execute_hist.lock().unwrap();
         let q = self.queue_hist.lock().unwrap();
         format!(
-            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
-             deadline_flushes={} | e2e p50={:?} p99={:?} | exec mean={:?} | queue mean={:?}",
+            "submitted={} completed={} failed={} shed={} expired={} rejected={} \
+             restarts={} batches={} mean_batch={:.2} deadline_flushes={} | \
+             e2e p50={:?} p99={:?} | exec mean={:?} | queue mean={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.worker_restarts.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.deadline_flushes.load(Ordering::Relaxed),
@@ -72,6 +105,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::ShedReason;
 
     #[test]
     fn batch_accounting() {
@@ -81,5 +115,21 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 6.0);
         assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 1);
         assert!(m.summary().contains("mean_batch=6.00"));
+    }
+
+    #[test]
+    fn error_buckets() {
+        let m = Metrics::default();
+        m.record_error(&InferError::BackendFailed { message: "x".into() });
+        m.record_error(&InferError::ShapeMismatch { expected: vec![1], got: vec![2] });
+        m.record_error(&InferError::NoWorkers);
+        m.record_error(&InferError::ShuttingDown);
+        m.record_error(&InferError::Shed { reason: ShedReason::DropOldest });
+        m.record_error(&InferError::DeadlineExceeded);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 4);
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("failed=4") && s.contains("shed=1") && s.contains("expired=1"));
     }
 }

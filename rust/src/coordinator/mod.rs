@@ -3,15 +3,25 @@
 //! A vLLM-router-shaped inference service for the quantized CNNs: callers
 //! submit single images; the coordinator queues them per model variant,
 //! forms dynamic batches (size- and deadline-bounded), executes them on
-//! worker threads — each owning a PJRT session or a rust-native quantized
-//! engine — and returns per-request responses with queue/execute timings.
+//! supervised worker threads — each owning a PJRT session or a rust-native
+//! quantized engine — and returns per-request responses with queue/execute
+//! timings.
 //!
-//! - [`request`]  — request/response types.
-//! - [`batcher`]  — bounded FIFO queue + dynamic batch formation policy.
+//! The serving plane is fault-tolerant by contract: every submitted request
+//! resolves to exactly one typed outcome (success, `BackendFailed`, `Shed`,
+//! `DeadlineExceeded`, `ShapeMismatch`, `ShuttingDown`, or `NoWorkers`),
+//! crashed workers are restarted with capped backoff, poison requests are
+//! isolated by batch bisection, and overload is shed by policy instead of
+//! queueing unboundedly. See `docs/serving-robustness.md`.
+//!
+//! - [`request`]  — request/response/error types (the reply protocol).
+//! - [`batcher`]  — bounded FIFO queue, batch formation, deadline expiry,
+//!   shed policy, fail-fast state.
 //! - [`backend`]  — execution backends: PJRT artifacts or the native engine.
-//! - [`worker`]   — worker threads draining batches into a backend.
+//! - [`worker`]   — supervised worker threads + poison-batch bisection.
 //! - [`server`]   — the public [`server::Coordinator`] facade.
-//! - [`metrics`]  — counters + latency histograms.
+//! - [`metrics`]  — counters (incl. failed/shed/expired/restarts) +
+//!   latency histograms.
 //! - [`router`]   — multi-model front door mapping requests to coordinators.
 pub mod backend;
 pub mod batcher;
@@ -22,5 +32,6 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use request::{InferRequest, InferResponse};
+pub use batcher::{ShedPolicy, SubmitError};
+pub use request::{InferError, InferReply, InferRequest, InferResponse, ShedReason};
 pub use server::{Coordinator, CoordinatorConfig};

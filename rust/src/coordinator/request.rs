@@ -1,12 +1,71 @@
-//! Request / response types for the serving path.
+//! Request / response / error types for the serving path.
+//!
+//! Every submitted request resolves to **exactly one** typed outcome: a
+//! successful [`InferResponse`] or a typed [`InferError`]. Workers and the
+//! queue send the reply; clients never have to interpret a channel
+//! disconnect (`RecvError`) as a failure signal. The full protocol is
+//! documented in `docs/serving-robustness.md`.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::metrics::Metrics;
 use crate::tensor::Tensor;
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
+
+/// Why a request was shed before execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue was full and the policy rejects new arrivals.
+    QueueFull,
+    /// The queue was full and the policy dropped this (oldest) request to
+    /// admit a newer one.
+    DropOldest,
+}
+
+/// Typed failure outcome for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// The backend returned an error (or panicked) and bisection retries
+    /// could not complete this request.
+    BackendFailed { message: String },
+    /// Load shedding dropped the request before execution.
+    Shed { reason: ShedReason },
+    /// The request's deadline expired before a batch could execute it.
+    DeadlineExceeded,
+    /// The image shape did not match the batch's expected shape (one route
+    /// serves one input geometry).
+    ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
+    /// The coordinator shut down before the request could execute.
+    ShuttingDown,
+    /// The worker pool is irrecoverably dead; no backend will ever run this.
+    NoWorkers,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::BackendFailed { message } => write!(f, "backend failed: {message}"),
+            InferError::Shed { reason } => match reason {
+                ShedReason::QueueFull => write!(f, "shed: queue full (reject-newest)"),
+                ShedReason::DropOldest => write!(f, "shed: dropped oldest under overload"),
+            },
+            InferError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            InferError::ShapeMismatch { expected, got } => {
+                write!(f, "image shape {got:?} does not match route shape {expected:?}")
+            }
+            InferError::ShuttingDown => write!(f, "coordinator shutting down"),
+            InferError::NoWorkers => write!(f, "no live workers (pool is dead)"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// What a request's receiver gets: exactly one of these.
+pub type InferReply = Result<InferResponse, InferError>;
 
 /// One inference request: a single image (1, C, H, W).
 #[derive(Debug)]
@@ -14,8 +73,31 @@ pub struct InferRequest {
     pub id: RequestId,
     pub image: Tensor,
     pub submitted_at: Instant,
-    /// Completion channel; the worker sends exactly one response.
-    pub reply: mpsc::Sender<InferResponse>,
+    /// Absolute deadline; requests still queued past it are expired with
+    /// [`InferError::DeadlineExceeded`] instead of occupying batch slots.
+    pub deadline: Option<Instant>,
+    /// Completion channel; exactly one [`InferReply`] is sent.
+    pub reply: mpsc::Sender<InferReply>,
+}
+
+impl InferRequest {
+    /// True when the deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Consume the request with a successful response. The receiver may have
+    /// given up; a dropped reply is fine.
+    pub fn respond_ok(self, resp: InferResponse) {
+        let _ = self.reply.send(Ok(resp));
+    }
+
+    /// Consume the request with a typed error, recording it in `metrics`
+    /// (`shed` / `expired` / `failed` depending on the error).
+    pub fn respond_err(self, err: InferError, metrics: &Metrics) {
+        metrics.record_error(&err);
+        let _ = self.reply.send(Err(err));
+    }
 }
 
 /// Completed inference for one request.
@@ -66,5 +148,43 @@ mod tests {
             1,
         );
         assert_eq!(r.predicted, 1);
+    }
+
+    #[test]
+    fn expiry_respects_deadline() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let r = InferRequest {
+            id: 0,
+            image: Tensor::zeros(&[1, 1, 2, 2]),
+            submitted_at: now,
+            deadline: Some(now + Duration::from_millis(5)),
+            reply: tx,
+        };
+        assert!(!r.expired(now));
+        assert!(r.expired(now + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn respond_err_records_and_delivers() {
+        let m = Metrics::default();
+        let (tx, rx) = mpsc::channel();
+        let r = InferRequest {
+            id: 3,
+            image: Tensor::zeros(&[1, 1, 2, 2]),
+            submitted_at: Instant::now(),
+            deadline: None,
+            reply: tx,
+        };
+        r.respond_err(InferError::DeadlineExceeded, &m);
+        assert!(matches!(rx.recv().unwrap(), Err(InferError::DeadlineExceeded)));
+        assert_eq!(m.expired.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn error_display_is_descriptive() {
+        let e = InferError::ShapeMismatch { expected: vec![1, 1, 2, 2], got: vec![1, 1, 3, 3] };
+        assert!(e.to_string().contains("[1, 1, 3, 3]"));
+        assert!(InferError::NoWorkers.to_string().contains("no live workers"));
     }
 }

@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::SubmitError;
-use crate::coordinator::request::InferResponse;
+use crate::coordinator::request::{InferReply, InferResponse};
 use crate::coordinator::server::{Coordinator, CoordinatorConfig};
 use crate::tensor::Tensor;
 
@@ -43,16 +43,18 @@ impl Router {
         self.routes.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Submit to a named route.
+    /// Submit to a named route. The receiver yields exactly one typed
+    /// [`InferReply`].
     pub fn submit(
         &self,
         route: &str,
         image: Tensor,
-    ) -> Result<std::sync::mpsc::Receiver<InferResponse>> {
+    ) -> Result<std::sync::mpsc::Receiver<InferReply>> {
         let c = self.routes.get(route).with_context(|| format!("no route {route}"))?;
         c.submit(image).map_err(|e| match e {
             SubmitError::QueueFull(cap) => anyhow::anyhow!("route {route}: queue full ({cap})"),
             SubmitError::ShutDown => anyhow::anyhow!("route {route}: shut down"),
+            SubmitError::NoWorkers => anyhow::anyhow!("route {route}: no live workers"),
         })
     }
 

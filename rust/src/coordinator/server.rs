@@ -1,4 +1,14 @@
 //! The coordinator facade: configuration, lifecycle, submission API.
+//!
+//! Failure semantics (full contract in `docs/serving-robustness.md`):
+//!
+//! - [`Coordinator::start`] fails fast if no worker backend initializes.
+//! - Every submitted request resolves to exactly one typed
+//!   [`InferReply`](crate::coordinator::request::InferReply) — success or a
+//!   typed [`InferError`]; clients never infer failure from `RecvError`.
+//! - A dead worker pool flips the coordinator into a fail-fast state:
+//!   `submit` returns [`SubmitError::NoWorkers`] and queued requests get
+//!   error replies instead of hanging.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -8,10 +18,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::backend::BackendFactory;
-use crate::coordinator::batcher::{BatchPolicy, BatchQueue, SubmitError};
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, ShedPolicy, SubmitError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferRequest, InferResponse};
-use crate::coordinator::worker::spawn_workers;
+use crate::coordinator::request::{InferError, InferReply, InferRequest, InferResponse};
+use crate::coordinator::worker::{supervise, SupervisorConfig};
 use crate::tensor::Tensor;
 
 /// Serving configuration.
@@ -21,6 +31,21 @@ pub struct CoordinatorConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_capacity: usize,
+    /// Overload behaviour at capacity: reject the newest submission or shed
+    /// the oldest queued request (see [`ShedPolicy`]).
+    pub shed: ShedPolicy,
+    /// TTL applied to every request that doesn't carry an explicit one
+    /// (`None` = requests never expire).
+    pub default_deadline: Option<Duration>,
+    /// Backend invocations allowed per popped batch (first attempt +
+    /// poison-bisection retries).
+    pub retry_budget: u32,
+    /// Consecutive failed worker respawns per slot before the slot is
+    /// abandoned (0 = never restart; a successful init resets the count).
+    pub restart_limit: u32,
+    /// Base supervisor backoff before a restart; doubles per consecutive
+    /// failure, capped at 1s.
+    pub restart_backoff: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -30,6 +55,11 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_capacity: 1024,
+            shed: ShedPolicy::RejectNewest,
+            default_deadline: None,
+            retry_budget: 16,
+            restart_limit: 5,
+            restart_backoff: Duration::from_millis(10),
         }
     }
 }
@@ -39,35 +69,80 @@ pub struct Coordinator {
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    workers: Vec<JoinHandle<()>>,
+    default_deadline: Option<Duration>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start workers over a backend factory (each worker builds its own
-    /// backend — PJRT sessions are thread-bound).
+    /// Start supervised workers over a backend factory (each worker builds
+    /// its own backend — PJRT sessions are thread-bound). Blocks until at
+    /// least one backend initializes; errors if every worker slot dies
+    /// without a single successful init, so a fully-dead pool is a
+    /// construction failure, not a hang at first `infer`.
     pub fn start(config: CoordinatorConfig, factory: BackendFactory) -> Result<Coordinator> {
         anyhow::ensure!(config.workers >= 1, "need at least one worker");
-        let queue = Arc::new(BatchQueue::new(BatchPolicy {
-            max_batch: config.max_batch,
-            max_wait: config.max_wait,
-            capacity: config.queue_capacity,
-        }));
         let metrics = Arc::new(Metrics::default());
-        let workers = spawn_workers(
-            config.workers,
+        let queue = Arc::new(BatchQueue::new(
+            BatchPolicy {
+                max_batch: config.max_batch,
+                max_wait: config.max_wait,
+                capacity: config.queue_capacity,
+                shed: config.shed,
+            },
+            Arc::clone(&metrics),
+        ));
+        let (supervisor, ready_rx) = supervise(
             Arc::clone(&queue),
             Arc::clone(&metrics),
             Arc::new(factory),
+            SupervisorConfig {
+                workers: config.workers,
+                restart_limit: config.restart_limit,
+                restart_backoff: config.restart_backoff,
+                retry_budget: config.retry_budget,
+            },
         );
-        Ok(Coordinator { queue, metrics, next_id: AtomicU64::new(0), workers })
+        if !ready_rx.recv().unwrap_or(false) {
+            queue.shutdown();
+            let _ = supervisor.join();
+            anyhow::bail!(
+                "coordinator start failed: no worker backend initialized ({} slot(s))",
+                config.workers
+            );
+        }
+        Ok(Coordinator {
+            queue,
+            metrics,
+            next_id: AtomicU64::new(0),
+            default_deadline: config.default_deadline,
+            supervisor: Some(supervisor),
+        })
     }
 
-    /// Submit one image; returns a receiver for the response. Applies
-    /// backpressure via [`SubmitError::QueueFull`].
-    pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<InferResponse>, SubmitError> {
+    /// Submit one image; returns a receiver that yields exactly one typed
+    /// [`InferReply`]. Applies backpressure via [`SubmitError`].
+    pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
+        self.submit_with_deadline(image, None)
+    }
+
+    /// Submit with an explicit TTL (overrides the config's
+    /// `default_deadline`). Requests still queued past their deadline are
+    /// expired with [`InferError::DeadlineExceeded`] instead of executing.
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor,
+        ttl: Option<Duration>,
+    ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferRequest { id, image, submitted_at: Instant::now(), reply: tx };
+        let now = Instant::now();
+        let req = InferRequest {
+            id,
+            image,
+            submitted_at: now,
+            deadline: ttl.or(self.default_deadline).map(|d| now + d),
+            reply: tx,
+        };
         match self.queue.submit(req) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -75,15 +150,35 @@ impl Coordinator {
             }
             Err(e) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                if matches!(e, SubmitError::QueueFull(_)) {
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                }
                 Err(e)
             }
         }
     }
 
-    /// Submit and wait (convenience for examples / tests).
+    /// Submit and wait (convenience for examples / tests). Maps the typed
+    /// reply protocol into `anyhow`: the error chain carries the concrete
+    /// [`InferError`] / [`SubmitError`], never a bare channel disconnect.
     pub fn infer(&self, image: Tensor) -> Result<InferResponse> {
-        let rx = self.submit(image).map_err(anyhow::Error::from)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped request (backend failure)"))
+        self.infer_with_deadline(image, None)
+    }
+
+    /// [`Coordinator::infer`] with an explicit TTL.
+    pub fn infer_with_deadline(
+        &self,
+        image: Tensor,
+        ttl: Option<Duration>,
+    ) -> Result<InferResponse> {
+        let rx = self.submit_with_deadline(image, ttl).map_err(anyhow::Error::from)?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(anyhow::Error::from(e)),
+            // Unreachable by protocol (every request gets exactly one typed
+            // reply); kept so a future bug degrades to an error, not a lie.
+            Err(_) => Err(anyhow::anyhow!(InferError::NoWorkers)),
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -94,22 +189,33 @@ impl Coordinator {
         self.queue.depth()
     }
 
-    /// Stop accepting work, drain the queue, join the workers.
+    /// True once the pool is irrecoverably dead (fail-fast state).
+    pub fn is_failed(&self) -> bool {
+        self.queue.is_failed()
+    }
+
+    /// Stop accepting work, drain the queue, join the supervisor (which
+    /// joins the workers), then resolve any stragglers with
+    /// [`InferError::ShuttingDown`] — every outstanding receiver resolves.
     pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.teardown();
+        Arc::clone(&self.metrics)
+    }
+
+    fn teardown(&mut self) {
         self.queue.shutdown();
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
-        Arc::clone(&self.metrics)
+        // Normally empty (workers drain on shutdown); non-empty only if the
+        // pool died mid-drain.
+        self.queue.flush_pending(InferError::ShuttingDown);
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.shutdown();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.teardown();
     }
 }
 
@@ -151,11 +257,12 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(50),
             queue_capacity: 256,
+            ..Default::default()
         };
         let c = Coordinator::start(cfg, mock_factory(2, Arc::clone(&calls))).unwrap();
         let rxs: Vec<_> = (0..32).map(|i| c.submit(img(i as f32)).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             assert_eq!(r.logits[0], 4.0 * i as f32, "response routed to wrong request");
         }
         let m = c.shutdown();
@@ -175,11 +282,12 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_capacity: 256,
+            ..Default::default()
         };
         let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
         let rxs: Vec<_> = (0..64).map(|i| c.submit(img(i as f32)).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap().logits[0], 4.0 * i as f32);
+            assert_eq!(rx.recv().unwrap().unwrap().logits[0], 4.0 * i as f32);
         }
     }
 
@@ -191,6 +299,7 @@ mod tests {
             max_batch: 2,
             max_wait: Duration::from_millis(200),
             queue_capacity: 4,
+            ..Default::default()
         };
         let c = Coordinator::start(cfg, mock_factory(100, calls)).unwrap();
         let mut rejected = false;
@@ -207,6 +316,7 @@ mod tests {
         }
         assert!(rejected, "backpressure never engaged");
         assert!(c.metrics().rejected.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics().shed.load(Ordering::Relaxed) >= 1);
     }
 
     #[test]
@@ -217,13 +327,39 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(500),
             queue_capacity: 256,
+            ..Default::default()
         };
         let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
         let rxs: Vec<_> = (0..6).map(|i| c.submit(img(i as f32)).unwrap()).collect();
         let m = c.shutdown(); // must flush the partial batch immediately
         assert_eq!(m.completed.load(Ordering::Relaxed), 6);
         for rx in rxs {
-            assert!(rx.recv().is_ok());
+            assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn default_deadline_applies_to_submissions() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 256,
+            default_deadline: Some(Duration::from_millis(30)),
+            ..Default::default()
+        };
+        // 80ms backend: the first request executes, the second expires
+        // while the first occupies the only worker.
+        let c = Coordinator::start(cfg, mock_factory(80, calls)).unwrap();
+        let rx1 = c.submit(img(1.0)).unwrap();
+        let rx2 = c.submit(img(2.0)).unwrap();
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        match rx2.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Err(InferError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let m = c.shutdown();
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,100 +1,419 @@
-//! Worker threads: drain batches from the queue into a backend.
+//! Worker threads + supervisor: drain batches from the queue into a
+//! backend, survive backend failures, and guarantee every request resolves.
+//!
+//! Three layers of fault tolerance (state machine in
+//! `docs/serving-robustness.md`):
+//!
+//! - **Batch level** ([`run_batch`]): per-request shape validation (a real
+//!   check, not a `debug_assert`), panic capture around
+//!   `Backend::run_batch` so co-batched requests get typed replies instead
+//!   of dropped senders, and poison isolation — a failed multi-request
+//!   batch is bisected and retried per-half under a bounded invocation
+//!   budget, so one bad request costs one `BackendFailed` reply while its
+//!   neighbors complete.
+//! - **Worker level**: a worker whose backend panicked exits (backend state
+//!   is unknown) after failing its in-flight batch; init failures are
+//!   reported, never silently swallowed.
+//! - **Pool level** ([`supervise`]): a supervisor thread restarts crashed
+//!   or init-failed workers with capped exponential backoff, and when every
+//!   slot has exhausted its restart budget it fails the queue —
+//!   submissions refuse with `NoWorkers` and queued requests get error
+//!   replies instead of hanging forever.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::{BatchQueue, FlushReason};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{InferError, InferRequest, InferResponse};
 use crate::tensor::Tensor;
 
-/// Spawn `n` workers; each builds its own backend (PJRT sessions are not
-/// Send) and loops `pop_batch -> run -> reply` until the queue shuts down
-/// and drains. Returns the join handles.
-pub fn spawn_workers(
-    n: usize,
+/// Supervision parameters (plumbed from `CoordinatorConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorConfig {
+    /// Worker slots (each runs one backend).
+    pub workers: usize,
+    /// Consecutive failed respawns per slot before the slot is abandoned;
+    /// a successful backend init resets the count. 0 = never restart.
+    pub restart_limit: u32,
+    /// Base backoff before the first restart; doubles per consecutive
+    /// failure, capped at 1s.
+    pub restart_backoff: Duration,
+    /// Max backend invocations per popped batch (first attempt + bisection
+    /// retries). Full bisection of a batch of n costs at most 2n-1.
+    pub retry_budget: u32,
+}
+
+/// How a worker thread ended.
+enum WorkerExit {
+    /// The backend factory returned an error; no batches were taken.
+    InitFailed(String),
+    /// The backend panicked (its state is unknown) or the worker itself
+    /// panicked; in-flight requests already got typed error replies.
+    Crashed(String),
+    /// The queue shut down (or failed) and drained; clean exit.
+    Drained,
+}
+
+enum WorkerEvent {
+    /// Backend built successfully; the worker is serving.
+    Ready(usize),
+    Exited(usize, WorkerExit),
+}
+
+/// Spawn `cfg.workers` supervised worker slots plus the supervisor thread.
+///
+/// Returns the supervisor's join handle and a one-shot readiness channel:
+/// it yields `true` as soon as any worker's backend initializes, or `false`
+/// once every slot died without a single successful init (the caller
+/// should then treat construction as failed — the supervisor has already
+/// failed the queue and is exiting).
+pub fn supervise(
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     factory: Arc<BackendFactory>,
-) -> Vec<thread::JoinHandle<()>> {
-    (0..n)
-        .map(|wid| {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            let factory = Arc::clone(&factory);
-            thread::Builder::new()
-                .name(format!("lqr-worker-{wid}"))
-                .spawn(move || {
-                    let mut backend = match factory() {
-                        Ok(b) => b,
-                        Err(e) => {
-                            log::error!("worker {wid}: backend init failed: {e:#}");
-                            return;
-                        }
-                    };
-                    log::info!("worker {wid}: {}", backend.describe());
-                    while let Some((batch, reason)) = queue.pop_batch() {
-                        run_batch(&mut *backend, batch, reason, &metrics);
-                    }
-                    log::debug!("worker {wid}: queue drained, exiting");
-                })
-                .expect("spawn worker")
-        })
-        .collect()
+    cfg: SupervisorConfig,
+) -> (thread::JoinHandle<()>, mpsc::Receiver<bool>) {
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let handle = thread::Builder::new()
+        .name("lqr-supervisor".into())
+        .spawn(move || supervisor_loop(queue, metrics, factory, cfg, ready_tx))
+        .expect("spawn supervisor");
+    (handle, ready_rx)
 }
 
-/// Assemble the image rows, execute, and reply to every request.
-fn run_batch(
+fn supervisor_loop(
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    factory: Arc<BackendFactory>,
+    cfg: SupervisorConfig,
+    ready_tx: mpsc::Sender<bool>,
+) {
+    let n = cfg.workers;
+    let (ev_tx, ev_rx) = mpsc::channel::<WorkerEvent>();
+    let mut handles: Vec<Option<thread::JoinHandle<()>>> = Vec::with_capacity(n);
+    for slot in 0..n {
+        handles.push(Some(spawn_worker(
+            slot,
+            Arc::clone(&queue),
+            Arc::clone(&metrics),
+            Arc::clone(&factory),
+            cfg.retry_budget,
+            ev_tx.clone(),
+        )));
+    }
+    // Per-slot state: consecutive respawn failures, and whether the slot is
+    // permanently dead or exited cleanly.
+    let mut failures = vec![0u32; n];
+    let mut dead = vec![false; n];
+    let mut drained = vec![false; n];
+    let mut ever_ready = false;
+    let mut init_reported = false;
+
+    loop {
+        if (0..n).all(|s| dead[s] || drained[s]) {
+            break;
+        }
+        // The supervisor holds an ev_tx clone, so recv() only errors on a
+        // logic bug; treat it as a signal to stop rather than panic.
+        let Ok(ev) = ev_rx.recv() else { break };
+        match ev {
+            WorkerEvent::Ready(slot) => {
+                failures[slot] = 0;
+                if !ever_ready {
+                    ever_ready = true;
+                    if !init_reported {
+                        init_reported = true;
+                        let _ = ready_tx.send(true);
+                    }
+                }
+            }
+            WorkerEvent::Exited(slot, WorkerExit::Drained) => {
+                drained[slot] = true;
+                if let Some(h) = handles[slot].take() {
+                    let _ = h.join();
+                }
+            }
+            WorkerEvent::Exited(slot, exit) => {
+                let why = match &exit {
+                    WorkerExit::InitFailed(e) => format!("backend init failed: {e}"),
+                    WorkerExit::Crashed(e) => format!("crashed: {e}"),
+                    WorkerExit::Drained => unreachable!(),
+                };
+                if let Some(h) = handles[slot].take() {
+                    let _ = h.join();
+                }
+                if queue.is_shutdown() || queue.is_failed() {
+                    log::warn!("worker {slot} {why}; not restarting (tearing down)");
+                    dead[slot] = true;
+                } else {
+                    failures[slot] += 1;
+                    if failures[slot] > cfg.restart_limit {
+                        log::error!(
+                            "worker {slot} {why}; restart budget ({}) exhausted — slot abandoned",
+                            cfg.restart_limit
+                        );
+                        dead[slot] = true;
+                    } else {
+                        let backoff = cfg
+                            .restart_backoff
+                            .saturating_mul(1u32 << (failures[slot] - 1).min(10))
+                            .min(Duration::from_secs(1));
+                        log::warn!(
+                            "worker {slot} {why}; restart {}/{} in {backoff:?}",
+                            failures[slot],
+                            cfg.restart_limit
+                        );
+                        thread::sleep(backoff);
+                        if queue.is_shutdown() || queue.is_failed() {
+                            dead[slot] = true;
+                        } else {
+                            metrics
+                                .worker_restarts
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            handles[slot] = Some(spawn_worker(
+                                slot,
+                                Arc::clone(&queue),
+                                Arc::clone(&metrics),
+                                Arc::clone(&factory),
+                                cfg.retry_budget,
+                                ev_tx.clone(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // All slots dead without a single successful init: report failed
+        // construction to a waiting `Coordinator::start`.
+        if !init_reported && (0..n).all(|s| dead[s]) {
+            init_reported = true;
+            let _ = ready_tx.send(false);
+        }
+    }
+    // Pool died (no slot exited via a clean drain) outside of shutdown:
+    // flip the fail-fast state so nothing ever hangs on this queue.
+    if (0..n).all(|s| dead[s]) && !queue.is_shutdown() {
+        log::error!("all {n} worker slots dead — failing the queue (NoWorkers)");
+        queue.fail();
+    }
+    if !init_reported {
+        let _ = ready_tx.send(ever_ready);
+    }
+    for h in handles.iter_mut().filter_map(|h| h.take()) {
+        let _ = h.join();
+    }
+}
+
+fn spawn_worker(
+    slot: usize,
+    queue: Arc<BatchQueue>,
+    metrics: Arc<Metrics>,
+    factory: Arc<BackendFactory>,
+    retry_budget: u32,
+    events: mpsc::Sender<WorkerEvent>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("lqr-worker-{slot}"))
+        .spawn(move || {
+            let ev2 = events.clone();
+            // Backstop: a panic anywhere in the worker loop (not just inside
+            // the backend call) still reports Crashed instead of vanishing.
+            let exit = catch_unwind(AssertUnwindSafe(|| {
+                worker_main(slot, &queue, &metrics, &factory, retry_budget, &ev2)
+            }))
+            .unwrap_or_else(|p| WorkerExit::Crashed(panic_message(&p)));
+            let _ = events.send(WorkerEvent::Exited(slot, exit));
+        })
+        .expect("spawn worker")
+}
+
+fn worker_main(
+    slot: usize,
+    queue: &BatchQueue,
+    metrics: &Metrics,
+    factory: &BackendFactory,
+    retry_budget: u32,
+    events: &mpsc::Sender<WorkerEvent>,
+) -> WorkerExit {
+    let mut backend = match factory() {
+        Ok(b) => b,
+        Err(e) => return WorkerExit::InitFailed(format!("{e:#}")),
+    };
+    let _ = events.send(WorkerEvent::Ready(slot));
+    log::info!("worker {slot}: {}", backend.describe());
+    while let Some((batch, reason)) = queue.pop_batch() {
+        if let BatchOutcome::WorkerPoisoned(msg) =
+            run_batch(&mut *backend, batch, reason, metrics, retry_budget)
+        {
+            return WorkerExit::Crashed(format!("backend panicked: {msg}"));
+        }
+    }
+    log::debug!("worker {slot}: queue drained, exiting");
+    WorkerExit::Drained
+}
+
+/// Result of [`run_batch`]: whether the worker may keep its backend.
+#[derive(Debug)]
+pub(crate) enum BatchOutcome {
+    /// All requests replied; backend state is trustworthy.
+    Completed,
+    /// The backend panicked — every request got a typed reply, but the
+    /// backend's internal state is unknown and the worker must be replaced.
+    WorkerPoisoned(String),
+}
+
+/// Execute one popped batch, replying exactly once to every request.
+///
+/// Mismatched image shapes are rejected per-request with
+/// [`InferError::ShapeMismatch`] (the batch's expected shape is the first
+/// request's — one route serves one geometry). Backend errors trigger
+/// bisection: the failing sub-batch is split and each half retried, bounded
+/// by `retry_budget` total invocations, isolating a poison request to a
+/// single `BackendFailed` reply. Backend panics are caught; the current
+/// sub-batch and all not-yet-run splits get `BackendFailed` replies and the
+/// caller is told to retire the worker.
+pub(crate) fn run_batch(
     backend: &mut dyn crate::coordinator::backend::Backend,
     batch: Vec<InferRequest>,
     reason: FlushReason,
     metrics: &Metrics,
-) {
-    let n = batch.len();
-    debug_assert!(n > 0);
+    retry_budget: u32,
+) -> BatchOutcome {
+    debug_assert!(!batch.is_empty());
     let formed_at = Instant::now();
-    // Assemble (n, C, H, W) from the per-request (1, C, H, W) images.
-    let shape = batch[0].image.shape().to_vec();
-    let per: usize = shape.iter().product();
-    let mut data = Vec::with_capacity(n * per);
-    for r in &batch {
-        debug_assert_eq!(r.image.shape(), &shape[..], "mixed image shapes in batch");
-        data.extend_from_slice(r.image.data());
+    // Release-mode shape screen: one route = one input geometry. The first
+    // request defines the batch shape; stragglers get typed errors instead
+    // of silently corrupting the assembled tensor.
+    let expected = batch[0].image.shape().to_vec();
+    let mut good = Vec::with_capacity(batch.len());
+    for r in batch {
+        if r.image.shape() != &expected[..] {
+            let got = r.image.shape().to_vec();
+            log::warn!("request {}: shape {got:?} != batch shape {expected:?}", r.id);
+            r.respond_err(
+                InferError::ShapeMismatch { expected: expected.clone(), got },
+                metrics,
+            );
+        } else {
+            good.push(r);
+        }
     }
-    let mut dims = vec![n];
-    dims.extend_from_slice(&shape[1..]);
-    let input = Tensor::new(&dims, data);
+    if good.is_empty() {
+        return BatchOutcome::Completed;
+    }
 
-    let t0 = Instant::now();
-    let result = backend.run_batch(&input);
-    let exec = t0.elapsed();
-    metrics.record_batch(n, exec, reason == FlushReason::Deadline);
-
-    match result {
-        Ok(logits) => {
-            let classes = logits.dim(1);
-            for (i, req) in batch.into_iter().enumerate() {
-                let queue_time = formed_at.duration_since(req.submitted_at);
-                let resp = InferResponse::from_logits(
-                    req.id,
-                    logits.data()[i * classes..(i + 1) * classes].to_vec(),
-                    queue_time,
-                    exec,
-                    n,
+    // Bisection worklist (LIFO so the left half runs first, preserving
+    // rough FIFO reply order).
+    let mut budget = retry_budget.max(1);
+    let mut first = true;
+    let mut pending: Vec<Vec<InferRequest>> = vec![good];
+    while let Some(mut reqs) = pending.pop() {
+        if budget == 0 {
+            for r in reqs {
+                r.respond_err(
+                    InferError::BackendFailed {
+                        message: "retry budget exhausted during bisection".into(),
+                    },
+                    metrics,
                 );
-                metrics.record_completion(queue_time, req.submitted_at.elapsed());
-                // Receiver may have given up; dropping the response is fine.
-                let _ = req.reply.send(resp);
+            }
+            continue;
+        }
+        budget -= 1;
+        let n = reqs.len();
+        let input = assemble(&reqs, &expected);
+        let t0 = Instant::now();
+        let result = catch_unwind(AssertUnwindSafe(|| backend.run_batch(&input)));
+        let exec = t0.elapsed();
+        metrics.record_batch(n, exec, first && reason == FlushReason::Deadline);
+        first = false;
+        match result {
+            Ok(Ok(logits)) => {
+                if logits.shape().len() != 2 || logits.dim(0) != n {
+                    let message = format!(
+                        "backend returned logits shape {:?} for a batch of {n}",
+                        logits.shape()
+                    );
+                    log::error!("{message}");
+                    for r in reqs {
+                        r.respond_err(
+                            InferError::BackendFailed { message: message.clone() },
+                            metrics,
+                        );
+                    }
+                    continue;
+                }
+                let classes = logits.dim(1);
+                for (i, req) in reqs.into_iter().enumerate() {
+                    let queue_time = formed_at.duration_since(req.submitted_at);
+                    let resp = InferResponse::from_logits(
+                        req.id,
+                        logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                        queue_time,
+                        exec,
+                        n,
+                    );
+                    metrics.record_completion(queue_time, req.submitted_at.elapsed());
+                    req.respond_ok(resp);
+                }
+            }
+            Ok(Err(e)) if n > 1 => {
+                // Poison isolation: split and retry each half independently.
+                log::warn!("batch of {n} failed ({e:#}); bisecting");
+                let right = reqs.split_off(n / 2);
+                pending.push(right);
+                pending.push(reqs);
+            }
+            Ok(Err(e)) => {
+                log::error!("request {} failed: {e:#}", reqs[0].id);
+                for r in reqs {
+                    r.respond_err(
+                        InferError::BackendFailed { message: format!("{e:#}") },
+                        metrics,
+                    );
+                }
+            }
+            Err(p) => {
+                let msg = panic_message(&p);
+                log::error!("backend panicked on a batch of {n}: {msg}");
+                let err = InferError::BackendFailed {
+                    message: format!("backend panicked: {msg}"),
+                };
+                for r in reqs.into_iter().chain(pending.into_iter().flatten()) {
+                    r.respond_err(err.clone(), metrics);
+                }
+                return BatchOutcome::WorkerPoisoned(msg);
             }
         }
-        Err(e) => {
-            log::error!("batch of {n} failed: {e:#}");
-            // Drop the reply senders: receivers observe a disconnect error.
-            drop(batch);
-        }
+    }
+    BatchOutcome::Completed
+}
+
+/// Assemble `(n, C, H, W)` from per-request `(1, C, H, W)` images (all
+/// pre-validated against `shape`).
+fn assemble(reqs: &[InferRequest], shape: &[usize]) -> Tensor {
+    let per: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(reqs.len() * per);
+    for r in reqs {
+        data.extend_from_slice(r.image.data());
+    }
+    let mut dims = vec![reqs.len()];
+    dims.extend_from_slice(&shape[1..]);
+    Tensor::new(&dims, data)
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
     }
 }
 
@@ -105,28 +424,184 @@ pub fn run_one(
     image: Tensor,
 ) -> anyhow::Result<InferResponse> {
     let (tx, rx) = mpsc::channel();
-    let req = InferRequest { id: 0, image, submitted_at: Instant::now(), reply: tx };
-    run_batch(backend, vec![req], FlushReason::Full, &Metrics::default());
-    rx.recv().map_err(|_| anyhow::anyhow!("backend failed"))
+    let req = InferRequest {
+        id: 0,
+        image,
+        submitted_at: Instant::now(),
+        deadline: None,
+        reply: tx,
+    };
+    let _ = run_batch(backend, vec![req], FlushReason::Full, &Metrics::default(), 1);
+    match rx.recv() {
+        Ok(Ok(resp)) => Ok(resp),
+        Ok(Err(e)) => Err(e.into()),
+        Err(_) => Err(anyhow::anyhow!("no reply (worker bug)")),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::MockBackend;
-    use std::sync::atomic::AtomicU64;
+    use crate::coordinator::backend::{Backend, MockBackend};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn mock() -> MockBackend {
+        MockBackend {
+            classes: 3,
+            delay: Duration::ZERO,
+            calls: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn req(id: u64, v: f32) -> (InferRequest, mpsc::Receiver<crate::coordinator::request::InferReply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferRequest {
+                id,
+                image: Tensor::filled(&[1, 1, 2, 2], v),
+                submitted_at: Instant::now(),
+                deadline: None,
+                reply: tx,
+            },
+            rx,
+        )
+    }
 
     #[test]
     fn run_one_mock() {
-        let mut b = MockBackend {
-            classes: 3,
-            delay: std::time::Duration::ZERO,
-            calls: Arc::new(AtomicU64::new(0)),
-        };
+        let mut b = mock();
         let img = Tensor::new(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]);
         let resp = run_one(&mut b, img).unwrap();
         assert_eq!(resp.logits, vec![4.0, 0.0, 0.0]);
         assert_eq!(resp.predicted, 0);
         assert_eq!(resp.batch_size, 1);
+    }
+
+    /// Backend that errors whenever the batch contains a poison row (sum
+    /// over the magic value threshold).
+    struct PoisonSensitive {
+        inner: MockBackend,
+    }
+
+    impl Backend for PoisonSensitive {
+        fn run_batch(&mut self, batch: &Tensor) -> anyhow::Result<Tensor> {
+            let n = batch.dim(0);
+            let per = batch.len() / n;
+            for i in 0..n {
+                let s: f32 = batch.data()[i * per..(i + 1) * per].iter().sum();
+                if s >= 1000.0 {
+                    anyhow::bail!("poison row {i}");
+                }
+            }
+            self.inner.run_batch(batch)
+        }
+
+        fn describe(&self) -> String {
+            "poison-sensitive".into()
+        }
+    }
+
+    #[test]
+    fn bisection_isolates_poison_request() {
+        let mut b = PoisonSensitive { inner: mock() };
+        let metrics = Metrics::default();
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            // Request 5 is poison: each of its 4 pixels is 500 (sum 2000).
+            let v = if i == 5 { 500.0 } else { i as f32 };
+            let (r, rx) = req(i, v);
+            reqs.push(r);
+            rxs.push(rx);
+        }
+        let out = run_batch(&mut b, reqs, FlushReason::Full, &metrics, 2 * 8);
+        assert!(matches!(out, BatchOutcome::Completed));
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.try_recv().expect("every request replied");
+            if i == 5 {
+                assert!(matches!(reply, Err(InferError::BackendFailed { .. })));
+            } else {
+                let resp = reply.expect("neighbor of poison must succeed");
+                assert_eq!(resp.logits[0], 4.0 * i as f32);
+            }
+        }
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 7);
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn retry_budget_bounds_bisection() {
+        struct AlwaysFails;
+        impl Backend for AlwaysFails {
+            fn run_batch(&mut self, _b: &Tensor) -> anyhow::Result<Tensor> {
+                anyhow::bail!("nope")
+            }
+            fn describe(&self) -> String {
+                "always-fails".into()
+            }
+        }
+        let metrics = Metrics::default();
+        let (reqs, rxs): (Vec<_>, Vec<_>) = (0..8u64).map(|i| req(i, 1.0)).unzip();
+        let out = run_batch(&mut AlwaysFails, reqs, FlushReason::Full, &metrics, 3);
+        assert!(matches!(out, BatchOutcome::Completed));
+        // Only 3 invocations allowed; every request still resolves.
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
+        for rx in rxs {
+            assert!(matches!(rx.try_recv().unwrap(), Err(InferError::BackendFailed { .. })));
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_not_corrupted() {
+        let mut b = mock();
+        let metrics = Metrics::default();
+        let (r0, rx0) = req(0, 1.0);
+        let (tx, rx1) = mpsc::channel();
+        let odd = InferRequest {
+            id: 1,
+            image: Tensor::filled(&[1, 1, 3, 3], 1.0),
+            submitted_at: Instant::now(),
+            deadline: None,
+            reply: tx,
+        };
+        let out = run_batch(&mut b, vec![r0, odd], FlushReason::Full, &metrics, 4);
+        assert!(matches!(out, BatchOutcome::Completed));
+        assert!(rx0.try_recv().unwrap().is_ok());
+        match rx1.try_recv().unwrap() {
+            Err(InferError::ShapeMismatch { expected, got }) => {
+                assert_eq!(expected, vec![1, 1, 2, 2]);
+                assert_eq!(got, vec![1, 1, 3, 3]);
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn backend_panic_yields_typed_replies_and_poisons_worker() {
+        struct Panics;
+        impl Backend for Panics {
+            fn run_batch(&mut self, _b: &Tensor) -> anyhow::Result<Tensor> {
+                panic!("kaboom")
+            }
+            fn describe(&self) -> String {
+                "panics".into()
+            }
+        }
+        let metrics = Metrics::default();
+        let (reqs, rxs): (Vec<_>, Vec<_>) = (0..4u64).map(|i| req(i, 1.0)).unzip();
+        let out = run_batch(&mut Panics, reqs, FlushReason::Full, &metrics, 8);
+        match out {
+            BatchOutcome::WorkerPoisoned(msg) => assert!(msg.contains("kaboom")),
+            other => panic!("expected WorkerPoisoned, got {other:?}"),
+        }
+        for rx in rxs {
+            match rx.try_recv().unwrap() {
+                Err(InferError::BackendFailed { message }) => {
+                    assert!(message.contains("panicked"), "{message}");
+                }
+                other => panic!("expected BackendFailed, got {other:?}"),
+            }
+        }
     }
 }

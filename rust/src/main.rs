@@ -14,7 +14,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use lqr::coordinator::backend::{Backend, PjrtBackend};
-use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::coordinator::{Coordinator, CoordinatorConfig, ShedPolicy};
 use lqr::dataset::Dataset;
 use lqr::eval::sweep;
 use lqr::nn::Arch;
@@ -78,6 +78,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("workers", "1", "worker threads (each owns a PJRT session)")
         .flag("max-batch", "8", "dynamic batch size cap")
         .flag("max-wait-ms", "5", "batch deadline in milliseconds")
+        .flag("deadline-ms", "0", "per-request TTL in milliseconds (0 = no deadline)")
+        .flag("shed", "reject-newest", "overload policy: reject-newest | drop-oldest")
         .flag("rate", "200", "request arrival rate (Poisson, req/s)")
         .flag("requests", "500", "total requests to send")
         .parse_from(argv)
@@ -86,11 +88,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let artifacts = p.get("artifacts").to_string();
     let model = p.get("model").to_string();
     let variant = p.get("variant").to_string();
+    let shed = ShedPolicy::parse(p.get("shed"))
+        .ok_or_else(|| anyhow::anyhow!("--shed must be reject-newest or drop-oldest"))?;
+    let deadline_ms = p.get_u64("deadline-ms");
     let cfg = CoordinatorConfig {
         workers: p.get_usize("workers"),
         max_batch: p.get_usize("max-batch"),
         max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
         queue_capacity: 4096,
+        shed,
+        default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        ..Default::default()
     };
     let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
     let (a2, m2, v2) = (artifacts.clone(), model.clone(), variant.clone());
@@ -116,22 +124,32 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                     break;
                 }
                 // Backpressure: wait for the queue to drain a little.
-                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                Err(lqr::coordinator::SubmitError::QueueFull(_)) => {
+                    std::thread::sleep(Duration::from_micros(200))
+                }
+                // Shut down / dead pool: retrying can never succeed.
+                Err(e) => anyhow::bail!("submit failed: {e}"),
             }
         }
         std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
     }
     let mut hits = 0usize;
+    let mut errors = 0usize;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let resp = rx.recv()?;
-        if resp.predicted as i32 == label {
-            hits += 1;
+        match rx.recv()? {
+            Ok(resp) => {
+                if resp.predicted as i32 == label {
+                    hits += 1;
+                }
+            }
+            // Typed failure (shed / expired / backend): counted, not fatal.
+            Err(_) => errors += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.shutdown();
     println!(
-        "done in {wall:.2}s  throughput={:.1} req/s  accuracy={:.1}%",
+        "done in {wall:.2}s  throughput={:.1} req/s  accuracy={:.1}%  errors={errors}",
         total as f64 / wall,
         100.0 * hits as f64 / total as f64
     );
@@ -175,6 +193,7 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
                     max_batch: p.get_usize("max-batch"),
                     max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
                     queue_capacity: 4096,
+                    ..Default::default()
                 },
                 Box::new(move || {
                     Ok(Box::new(PjrtBackend::open(&a, &m, &v)?) as Box<dyn Backend>)

@@ -28,6 +28,7 @@ fn serve_pjrt_f32_batch_correctness() {
         max_batch: 8,
         max_wait: Duration::from_millis(4),
         queue_capacity: 256,
+        ..Default::default()
     };
     let d2 = dir.clone();
     let coord = Coordinator::start(
@@ -43,7 +44,10 @@ fn serve_pjrt_f32_batch_correctness() {
     let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.image(i)).unwrap()).collect();
     let mut hits = 0;
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("reply within deadline")
+            .expect("typed success");
         assert_eq!(resp.logits.len(), 16);
         if resp.predicted as i32 == ds.labels[i] {
             hits += 1;
@@ -64,6 +68,7 @@ fn serve_native_lq2_still_classifies() {
         max_batch: 4,
         max_wait: Duration::from_millis(2),
         queue_capacity: 64,
+        ..Default::default()
     };
     let d2 = dir.clone();
     let coord = Coordinator::start(
@@ -79,7 +84,10 @@ fn serve_native_lq2_still_classifies() {
     let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.image(i)).unwrap()).collect();
     let mut hits = 0;
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("reply within deadline")
+            .expect("typed success");
         if resp.predicted as i32 == ds.labels[i] {
             hits += 1;
         }

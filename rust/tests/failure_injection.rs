@@ -1,18 +1,50 @@
-//! Failure injection: the coordinator must degrade cleanly when a backend
-//! misbehaves — failed batches drop their reply senders (receivers see a
-//! disconnect, not a hang), healthy workers keep serving, and metrics stay
-//! consistent.
+//! Failure injection: the liveness invariant under injected faults.
+//!
+//! Every submitted request must resolve to exactly one typed outcome —
+//! success, `BackendFailed`, `Shed`, `DeadlineExceeded`, `ShapeMismatch`,
+//! `ShuttingDown`, or `NoWorkers` — within a bounded time. No test here
+//! relies on `RecvError` to detect failure, and none can hang: all receives
+//! go through `recv_timeout`.
+//!
+//! Scenarios: flaky backend, poison request inside a healthy batch, worker
+//! death at init and mid-stream (supervisor restarts), pool death into the
+//! fail-fast state, deadline expiry under a stalled worker, drop-oldest
+//! load shedding, and shutdown under load.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::Result;
 use lqr::coordinator::backend::{Backend, MockBackend};
-use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::coordinator::{
+    Coordinator, CoordinatorConfig, InferError, InferReply, ShedPolicy, ShedReason, SubmitError,
+};
 use lqr::tensor::Tensor;
 
-/// Backend that fails every `fail_every`-th batch.
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn img(v: f32) -> Tensor {
+    Tensor::filled(&[1, 1, 2, 2], v)
+}
+
+fn mock(classes: usize, delay: Duration) -> MockBackend {
+    MockBackend { classes, delay, calls: Arc::new(AtomicU64::new(0)) }
+}
+
+/// Resolve a receiver within the global timeout; a timeout is a liveness
+/// bug, a disconnect is a reply-protocol bug — both fail loudly.
+fn resolve(rx: mpsc::Receiver<InferReply>) -> InferReply {
+    match rx.recv_timeout(RECV_TIMEOUT) {
+        Ok(reply) => reply,
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!("liveness violation: request hung"),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            panic!("protocol violation: sender dropped without a typed reply")
+        }
+    }
+}
+
+/// Backend that fails every `fail_every`-th call.
 struct FlakyBackend {
     inner: MockBackend,
     calls: u64,
@@ -23,6 +55,11 @@ impl Backend for FlakyBackend {
     fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
         self.calls += 1;
         if self.calls % self.fail_every == 0 {
+            // Failures cost the same wall-clock as successes would, so a
+            // fail-everything backend can't starve a healthy peer worker.
+            if !self.inner.delay.is_zero() {
+                std::thread::sleep(self.inner.delay);
+            }
             anyhow::bail!("injected failure on call {}", self.calls);
         }
         self.inner.run_batch(batch)
@@ -33,27 +70,68 @@ impl Backend for FlakyBackend {
     }
 }
 
-fn img(v: f32) -> Tensor {
-    Tensor::filled(&[1, 1, 2, 2], v)
+/// Backend that errors on any batch containing a poison row (pixel sum
+/// >= 1000) and otherwise behaves like the mock.
+struct PoisonSensitive {
+    inner: MockBackend,
+}
+
+impl Backend for PoisonSensitive {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.dim(0);
+        let per = batch.len() / n;
+        for i in 0..n {
+            let s: f32 = batch.data()[i * per..(i + 1) * per].iter().sum();
+            if s >= 1000.0 {
+                anyhow::bail!("poison row {i}");
+            }
+        }
+        self.inner.run_batch(batch)
+    }
+
+    fn describe(&self) -> String {
+        "poison-sensitive".into()
+    }
+}
+
+/// Backend that panics on any batch containing a magic row.
+struct PanicOnMagic {
+    inner: MockBackend,
+}
+
+impl Backend for PanicOnMagic {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.dim(0);
+        let per = batch.len() / n;
+        for i in 0..n {
+            let s: f32 = batch.data()[i * per..(i + 1) * per].iter().sum();
+            if s >= 1000.0 {
+                panic!("magic row {i} detonated");
+            }
+        }
+        self.inner.run_batch(batch)
+    }
+
+    fn describe(&self) -> String {
+        "panic-on-magic".into()
+    }
 }
 
 #[test]
-fn failed_batches_disconnect_not_hang() {
+fn failed_batches_get_typed_errors_not_disconnects() {
     let cfg = CoordinatorConfig {
         workers: 1,
         max_batch: 1, // one request per batch -> deterministic failure mapping
         max_wait: Duration::from_millis(1),
         queue_capacity: 256,
+        retry_budget: 1, // single-request batches: no bisection to retry
+        ..Default::default()
     };
     let coord = Coordinator::start(
         cfg,
         Box::new(|| {
             Ok(Box::new(FlakyBackend {
-                inner: MockBackend {
-                    classes: 4,
-                    delay: Duration::ZERO,
-                    calls: Arc::new(AtomicU64::new(0)),
-                },
+                inner: mock(4, Duration::ZERO),
                 calls: 0,
                 fail_every: 3,
             }) as Box<dyn Backend>)
@@ -66,46 +144,351 @@ fn failed_batches_disconnect_not_hang() {
     let mut ok = 0;
     let mut failed = 0;
     for rx in rxs {
-        match rx.recv_timeout(Duration::from_secs(10)) {
+        match resolve(rx) {
             Ok(_) => ok += 1,
-            Err(_) => failed += 1, // disconnect == injected failure
+            Err(InferError::BackendFailed { message }) => {
+                assert!(message.contains("injected failure"), "{message}");
+                failed += 1;
+            }
+            Err(other) => panic!("unexpected error kind: {other:?}"),
         }
     }
     assert_eq!(ok + failed, n);
     assert_eq!(failed, n / 3, "every 3rd single-request batch fails");
     let m = coord.shutdown();
     assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+    assert_eq!(m.failed.load(Ordering::Relaxed), failed as u64, "failed work must be visible");
 }
 
 #[test]
-fn broken_backend_factory_degrades_to_error_not_panic() {
+fn poison_request_is_isolated_neighbors_complete() {
     let cfg = CoordinatorConfig {
         workers: 1,
-        max_batch: 2,
-        max_wait: Duration::from_millis(1),
-        queue_capacity: 8,
+        max_batch: 8,
+        max_wait: Duration::from_millis(500), // wait for the full batch
+        queue_capacity: 256,
+        ..Default::default()
     };
     let coord = Coordinator::start(
         cfg,
-        Box::new(|| anyhow::bail!("backend init exploded")),
+        Box::new(|| Ok(Box::new(PoisonSensitive { inner: mock(4, Duration::ZERO) }) as Box<dyn Backend>)),
     )
     .unwrap();
-    // The worker exits at init; requests get disconnects, not hangs.
-    let rx = coord.submit(img(1.0)).unwrap();
-    assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+
+    // 8 requests co-batched; index 5 is poison (4 pixels of 500 = sum 2000).
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            let v = if i == 5 { 500.0 } else { i as f32 };
+            coord.submit(img(v)).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match resolve(rx) {
+            Ok(resp) => {
+                assert_ne!(i, 5, "poison request must not succeed");
+                assert_eq!(resp.logits[0], 4.0 * i as f32);
+            }
+            Err(InferError::BackendFailed { .. }) => {
+                assert_eq!(i, 5, "only the poison request may fail");
+            }
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 7);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    assert!(
+        m.batches.load(Ordering::Relaxed) > 1,
+        "bisection must have retried sub-batches"
+    );
+}
+
+#[test]
+fn all_workers_dead_at_init_fails_start_not_first_infer() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        restart_limit: 1, // fail construction quickly
+        restart_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = Coordinator::start(
+        cfg,
+        Box::new(|| -> Result<Box<dyn Backend>> { anyhow::bail!("backend init exploded") }),
+    );
+    let err = result.err().expect("start must fail when no backend initializes");
+    assert!(format!("{err:#}").contains("no worker backend initialized"), "{err:#}");
+    assert!(t0.elapsed() < RECV_TIMEOUT, "start must fail fast, not hang");
+}
+
+#[test]
+fn transient_init_failure_is_restarted_through() {
+    // First two factory calls fail, the third succeeds: the supervisor's
+    // restart loop must bring the pool up and serve traffic.
+    let attempts = Arc::new(AtomicU64::new(0));
+    let a2 = Arc::clone(&attempts);
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        restart_limit: 5,
+        restart_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || {
+            if a2.fetch_add(1, Ordering::SeqCst) < 2 {
+                anyhow::bail!("transient init failure");
+            }
+            Ok(Box::new(mock(4, Duration::ZERO)) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+    let resp = coord.infer(img(1.0)).unwrap();
+    assert_eq!(resp.logits[0], 4.0);
+    let m = coord.shutdown();
+    assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2);
+    assert!(attempts.load(Ordering::SeqCst) >= 3);
+}
+
+#[test]
+fn worker_panic_mid_stream_recovers_with_typed_replies() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+        restart_limit: 5,
+        restart_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(PanicOnMagic { inner: mock(4, Duration::ZERO) }) as Box<dyn Backend>)),
+    )
+    .unwrap();
+
+    // Healthy request works.
+    assert!(resolve(coord.submit(img(1.0)).unwrap()).is_ok());
+    // Magic request detonates the backend: typed reply, not a hang.
+    match resolve(coord.submit(img(500.0)).unwrap()) {
+        Err(InferError::BackendFailed { message }) => {
+            assert!(message.contains("panicked"), "{message}");
+        }
+        other => panic!("expected BackendFailed after panic, got {other:?}"),
+    }
+    // Supervisor replaced the worker: traffic flows again.
+    let resp = resolve(coord.submit(img(2.0)).unwrap()).expect("pool must recover after restart");
+    assert_eq!(resp.logits[0], 8.0);
+    let m = coord.shutdown();
+    assert!(m.worker_restarts.load(Ordering::Relaxed) >= 1, "restart must be counted");
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn dead_pool_flips_to_fail_fast_no_hangs() {
+    // Factory succeeds once with a backend that panics on everything, then
+    // fails forever: after the restart budget burns down, the pool is dead
+    // — queued requests get NoWorkers and submits refuse fast.
+    let attempts = Arc::new(AtomicU64::new(0));
+    let a2 = Arc::clone(&attempts);
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+        restart_limit: 2,
+        restart_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(move || {
+            if a2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Ok(Box::new(PanicOnMagic { inner: mock(4, Duration::ZERO) }) as Box<dyn Backend>)
+            } else {
+                anyhow::bail!("backend gone")
+            }
+        }),
+    )
+    .unwrap();
+
+    // Detonate the only worker; replacement inits fail until the budget is
+    // exhausted and the supervisor fails the queue.
+    let rx_boom = coord.submit(img(500.0)).unwrap();
+    let rx_queued = coord.submit(img(1.0)).unwrap();
+    assert!(matches!(resolve(rx_boom), Err(InferError::BackendFailed { .. })));
+    match resolve(rx_queued) {
+        Err(InferError::NoWorkers) => {}
+        other => panic!("queued request on a dead pool must get NoWorkers, got {other:?}"),
+    }
+    // Fail-fast state: submit refuses immediately once the pool is dead.
+    let t0 = std::time::Instant::now();
+    while !coord.is_failed() {
+        assert!(t0.elapsed() < RECV_TIMEOUT, "pool never entered fail-fast state");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    match coord.submit(img(2.0)) {
+        Err(SubmitError::NoWorkers) => {}
+        other => panic!("expected NoWorkers from submit, got {other:?}"),
+    }
+    // infer on a dead pool errors fast instead of blocking forever.
+    let t0 = std::time::Instant::now();
+    assert!(coord.infer(img(3.0)).is_err());
+    assert!(t0.elapsed() < Duration::from_secs(1), "infer must not block on a dead pool");
+    let m = coord.shutdown();
+    assert_eq!(m.worker_restarts.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn deadlines_expire_under_stalled_worker() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+        ..Default::default()
+    };
+    // 300ms backend stalls the single worker.
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(mock(4, Duration::from_millis(300))) as Box<dyn Backend>)),
+    )
+    .unwrap();
+    let rx_head = coord.submit(img(1.0)).unwrap();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            coord
+                .submit_with_deadline(img(10.0 + i as f32), Some(Duration::from_millis(20)))
+                .unwrap()
+        })
+        .collect();
+    assert!(resolve(rx_head).is_ok(), "head-of-line request executes normally");
+    for rx in rxs {
+        match resolve(rx) {
+            Err(InferError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.expired.load(Ordering::Relaxed), 3);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn drop_oldest_sheds_stale_keeps_fresh() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 2,
+        shed: ShedPolicy::DropOldest,
+        ..Default::default()
+    };
+    // Slow backend so the queue saturates while the worker is busy.
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(mock(4, Duration::from_millis(50))) as Box<dyn Backend>)),
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..8).map(|i| coord.submit(img(i as f32)).unwrap()).collect();
+    let mut shed = 0;
+    let mut ok = 0;
+    let mut last_ok = None;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match resolve(rx) {
+            Ok(_) => {
+                ok += 1;
+                last_ok = Some(i);
+            }
+            Err(InferError::Shed { reason: ShedReason::DropOldest }) => shed += 1,
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, 8, "every request resolves exactly once");
+    assert!(shed > 0, "overload must shed under drop-oldest");
+    assert_eq!(last_ok, Some(7), "drop-oldest favors the freshest request");
+    let m = coord.shutdown();
+    assert_eq!(m.shed.load(Ordering::Relaxed), shed as u64);
+    assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+}
+
+#[test]
+fn shutdown_under_load_resolves_every_receiver() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 1024,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(mock(4, Duration::from_millis(3))) as Box<dyn Backend>)),
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..200).map(|i| coord.submit(img(i as f32)).unwrap()).collect();
+    let m = coord.shutdown();
+    let mut ok = 0;
+    let mut shutdown_replies = 0;
+    for rx in rxs {
+        match resolve(rx) {
+            Ok(_) => ok += 1,
+            Err(InferError::ShuttingDown) => shutdown_replies += 1,
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+    }
+    assert_eq!(ok + shutdown_replies, 200, "every outstanding receiver resolves");
+    assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+}
+
+#[test]
+fn mixed_shape_request_gets_typed_error_neighbors_survive() {
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 4,
+        max_wait: Duration::from_millis(500),
+        queue_capacity: 256,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(mock(4, Duration::ZERO)) as Box<dyn Backend>)),
+    )
+    .unwrap();
+    let rx0 = coord.submit(img(0.0)).unwrap();
+    let rx1 = coord.submit(img(1.0)).unwrap();
+    let rx_odd = coord.submit(Tensor::filled(&[1, 1, 3, 3], 1.0)).unwrap();
+    let rx3 = coord.submit(img(3.0)).unwrap();
+    for (rx, v) in [(rx0, 0.0), (rx1, 4.0), (rx3, 12.0)] {
+        let resp = resolve(rx).expect("same-shape request must survive the odd one");
+        assert_eq!(resp.logits[0], v);
+    }
+    match resolve(rx_odd) {
+        Err(InferError::ShapeMismatch { expected, got }) => {
+            assert_eq!(expected, vec![1, 1, 2, 2]);
+            assert_eq!(got, vec![1, 1, 3, 3]);
+        }
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
 }
 
 #[test]
 fn healthy_worker_carries_flaky_peer() {
     // Two workers: one whose backend always fails, one healthy. Every
-    // request must eventually succeed or disconnect — and a majority
-    // succeed because the healthy worker keeps draining.
+    // request resolves typed — and a majority succeed because the healthy
+    // worker keeps draining (failed singles are not retried: batch of 1).
     let flaky_first = Arc::new(AtomicU64::new(0));
     let cfg = CoordinatorConfig {
         workers: 2,
         max_batch: 1,
         max_wait: Duration::from_millis(1),
         queue_capacity: 256,
+        retry_budget: 1,
+        restart_limit: 0, // errors (not crashes) never kill workers anyway
+        ..Default::default()
     };
     let ff = Arc::clone(&flaky_first);
     let coord = Coordinator::start(
@@ -113,56 +496,48 @@ fn healthy_worker_carries_flaky_peer() {
         Box::new(move || {
             if ff.fetch_add(1, Ordering::SeqCst) == 0 {
                 Ok(Box::new(FlakyBackend {
-                    inner: MockBackend {
-                        classes: 4,
-                        delay: Duration::ZERO,
-                        calls: Arc::new(AtomicU64::new(0)),
-                    },
+                    // 1ms per (failed) call: slower than the healthy peer,
+                    // so the flaky worker cannot drain the whole stream.
+                    inner: mock(4, Duration::from_millis(1)),
                     calls: 0,
                     fail_every: 1, // always fails
                 }) as Box<dyn Backend>)
             } else {
-                Ok(Box::new(MockBackend {
-                    classes: 4,
-                    delay: Duration::from_micros(100),
-                    calls: Arc::new(AtomicU64::new(0)),
-                }) as Box<dyn Backend>)
+                Ok(Box::new(mock(4, Duration::from_micros(100))) as Box<dyn Backend>)
             }
         }),
     )
     .unwrap();
     let n = 40;
     let rxs: Vec<_> = (0..n).map(|i| coord.submit(img(i as f32)).unwrap()).collect();
-    let ok = rxs
-        .into_iter()
-        .filter(|rx| rx.recv_timeout(Duration::from_secs(10)).is_ok())
-        .count();
+    let mut ok = 0;
+    for rx in rxs {
+        match resolve(rx) {
+            Ok(_) => ok += 1,
+            Err(InferError::BackendFailed { .. }) => {}
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+    }
     assert!(ok > 0, "healthy worker should complete some requests");
     let m = coord.shutdown();
     assert_eq!(m.completed.load(Ordering::Relaxed), ok as u64);
+    assert_eq!(m.failed.load(Ordering::Relaxed), (n - ok) as u64);
 }
 
 #[test]
-fn oversized_then_normal_requests_keep_serving() {
-    // A mixed-shape batch would be a caller bug; the worker asserts shapes
-    // only in debug builds, so the coordinator contract is "one route = one
-    // shape". This test pins the *documented* behaviour that single-shape
-    // streams keep flowing after queue-full rejections.
+fn backpressure_then_recovery_keeps_serving() {
+    // Reject-newest under a saturated queue: accepted requests all resolve,
+    // rejected ones are visible in metrics, and the stream keeps flowing.
     let cfg = CoordinatorConfig {
         workers: 1,
         max_batch: 2,
         max_wait: Duration::from_millis(5),
         queue_capacity: 2,
+        ..Default::default()
     };
     let coord = Coordinator::start(
         cfg,
-        Box::new(|| {
-            Ok(Box::new(MockBackend {
-                classes: 2,
-                delay: Duration::from_millis(20),
-                calls: Arc::new(AtomicU64::new(0)),
-            }) as Box<dyn Backend>)
-        }),
+        Box::new(|| Ok(Box::new(mock(2, Duration::from_millis(20))) as Box<dyn Backend>)),
     )
     .unwrap();
     let mut accepted = Vec::new();
@@ -170,14 +545,18 @@ fn oversized_then_normal_requests_keep_serving() {
     for i in 0..20 {
         match coord.submit(img(i as f32)) {
             Ok(rx) => accepted.push(rx),
-            Err(_) => {
+            Err(SubmitError::QueueFull(_)) => {
                 rejected += 1;
                 std::thread::sleep(Duration::from_millis(5));
             }
+            Err(e) => panic!("unexpected submit error {e}"),
         }
     }
     assert!(rejected > 0, "expected backpressure");
     for rx in accepted {
-        assert!(rx.recv_timeout(Duration::from_secs(10)).is_ok());
+        assert!(resolve(rx).is_ok());
     }
+    let m = coord.shutdown();
+    assert_eq!(m.rejected.load(Ordering::Relaxed), rejected as u64);
+    assert_eq!(m.shed.load(Ordering::Relaxed), rejected as u64);
 }
