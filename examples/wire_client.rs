@@ -1,0 +1,98 @@
+//! Wire-protocol walkthrough: typed status codes, retry classification,
+//! and the hardened-ingress behaviors, demonstrated against an in-process
+//! server over a mock backend (no artifacts needed).
+//!
+//! Shows what a remote client of `lqr serve-tcp` sees: a successful round,
+//! the health built-in, a terminal rejection (`NoRoute`), an in-sync
+//! `BadRequest` (the connection keeps working afterwards), and accept-time
+//! shedding (`Busy`) when the handler pool is full — each classified with
+//! `ClientError::retryable()`.
+//!
+//! ```sh
+//! cargo run --release --example wire_client
+//! ```
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use lqr::coordinator::backend::{Backend, MockBackend};
+use lqr::coordinator::net::{ImageSpec, NetClient, NetConfig, NetServer};
+use lqr::coordinator::router::Router;
+use lqr::coordinator::CoordinatorConfig;
+use lqr::tensor::Tensor;
+
+fn report(label: &str, result: std::result::Result<(Vec<f32>, usize), lqr::coordinator::net::ClientError>) {
+    match result {
+        Ok((logits, predicted)) => {
+            println!("{label:<28} Ok: predicted={predicted} logits[0]={:.2}", logits[0]);
+        }
+        Err(e) => {
+            let kind = match e.wire_status() {
+                Some(s) => format!("{s:?}"),
+                None => "transport".into(),
+            };
+            println!("{label:<28} {kind} (retryable={}): {e}", e.retryable());
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+
+    // A tiny mock route: logits[0] = sum of the 2x2 input pixels.
+    let mut router = Router::new();
+    router.add_route(
+        "demo",
+        CoordinatorConfig::default(),
+        Box::new(|| {
+            Ok(Box::new(MockBackend {
+                classes: 4,
+                delay: Duration::from_millis(1),
+                calls: Arc::new(AtomicU64::new(0)),
+            }) as Box<dyn Backend>)
+        }),
+    )?;
+    let spec = ImageSpec { c: 1, h: 2, w: 2 };
+    let cfg = NetConfig {
+        max_conns: 2, // small on purpose, to demonstrate Busy shedding
+        io_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    let server = NetServer::serve_with("127.0.0.1:0", Arc::new(router), spec, cfg)?;
+    println!("serving on {} (max_conns=2)\n", server.addr);
+
+    let mut client = NetClient::connect(server.addr)?;
+    client.set_io_timeout(Some(Duration::from_secs(10)))?;
+
+    // 1. A successful round: Ok status, logits + argmax.
+    report("classify demo", client.classify("demo", &Tensor::filled(&[1, 1, 2, 2], 0.25)));
+
+    // 2. The health built-in: readiness + queue/pool occupancy.
+    println!("{:<28} {}", "health", client.health().map_err(anyhow::Error::from)?);
+
+    // 3. Terminal rejection: no such route. retryable=false — don't loop.
+    report("classify missing route", client.classify("nope", &Tensor::filled(&[1, 1, 2, 2], 0.25)));
+
+    // 4. In-sync BadRequest: wrong image geometry. The reply is typed and
+    //    the stream stays usable — the next round on the SAME connection
+    //    succeeds.
+    report("classify wrong shape", client.classify("demo", &Tensor::filled(&[1, 1, 3, 3], 0.25)));
+    report("same conn, next round", client.classify("demo", &Tensor::filled(&[1, 1, 2, 2], 1.0)));
+
+    // 5. Accept-time shedding: hold both pool slots, then connect once more.
+    //    The extra connection gets a typed Busy reply (retryable=true) and
+    //    is closed; the held connections keep working.
+    let mut holder = NetClient::connect(server.addr)?;
+    holder.set_io_timeout(Some(Duration::from_secs(10)))?;
+    holder.classify("demo", &Tensor::filled(&[1, 1, 2, 2], 0.5)).map_err(anyhow::Error::from)?;
+    let mut shed = NetClient::connect(server.addr)?;
+    shed.set_io_timeout(Some(Duration::from_secs(10)))?;
+    report("flood past max_conns", shed.classify("demo", &Tensor::filled(&[1, 1, 2, 2], 0.5)));
+    report("holder still serving", holder.classify("demo", &Tensor::filled(&[1, 1, 2, 2], 0.5)));
+
+    let metrics = server.shutdown();
+    println!("\n{}", metrics.summary());
+    Ok(())
+}

@@ -102,6 +102,63 @@ impl Metrics {
     }
 }
 
+/// Wire-ingress metrics for the TCP front door (`coordinator/net.rs`),
+/// shared between the accept loop, per-connection handlers and the server
+/// handle via `Arc`. All counters are monotonic except `active_conns`,
+/// which is a gauge mirroring the connection registry.
+///
+/// Accounting invariants:
+/// - every accepted socket increments `total_conns` exactly once; it is
+///   then either admitted (tracked in `active_conns` until its handler
+///   exits) or refused with a busy reply (`rejected_conns`);
+/// - `malformed` counts frames rejected by validation (bad lengths,
+///   non-UTF-8 / empty routes, oversized frames) — never well-formed
+///   requests that fail inference (those land in the per-route
+///   [`Metrics`]);
+/// - `timed_out` counts connections dropped by read/write/idle timeouts;
+/// - `bytes_in` / `bytes_out` count wire payload actually parsed/written,
+///   excluding bytes discarded from rejected frames.
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Connections accepted over the server's lifetime.
+    pub total_conns: AtomicU64,
+    /// Currently admitted connections (gauge).
+    pub active_conns: AtomicU64,
+    /// Connections refused at accept time (pool full → busy reply + close).
+    pub rejected_conns: AtomicU64,
+    /// Connections dropped because a read or write hit the I/O timeout.
+    pub timed_out: AtomicU64,
+    /// Frames rejected by validation before reaching the router.
+    pub malformed: AtomicU64,
+    /// Transient accept-loop errors survived via backoff (EMFILE etc.).
+    pub accept_errors: AtomicU64,
+    /// Well-formed inference frames parsed.
+    pub frames: AtomicU64,
+    /// Request bytes parsed off the wire.
+    pub bytes_in: AtomicU64,
+    /// Reply bytes written to the wire.
+    pub bytes_out: AtomicU64,
+}
+
+impl NetMetrics {
+    /// One-line summary for logs / the `lqr serve` exit report.
+    pub fn summary(&self) -> String {
+        format!(
+            "net: conns total={} active={} rejected={} timed_out={} | \
+             frames={} malformed={} accept_errors={} | bytes in={} out={}",
+            self.total_conns.load(Ordering::Relaxed),
+            self.active_conns.load(Ordering::Relaxed),
+            self.rejected_conns.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+            self.frames.load(Ordering::Relaxed),
+            self.malformed.load(Ordering::Relaxed),
+            self.accept_errors.load(Ordering::Relaxed),
+            self.bytes_in.load(Ordering::Relaxed),
+            self.bytes_out.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +188,33 @@ mod tests {
         assert_eq!(m.expired.load(Ordering::Relaxed), 1);
         let s = m.summary();
         assert!(s.contains("failed=4") && s.contains("shed=1") && s.contains("expired=1"));
+    }
+
+    #[test]
+    fn net_metrics_summary_reports_every_counter() {
+        let n = NetMetrics::default();
+        n.total_conns.store(7, Ordering::Relaxed);
+        n.active_conns.store(2, Ordering::Relaxed);
+        n.rejected_conns.store(3, Ordering::Relaxed);
+        n.timed_out.store(1, Ordering::Relaxed);
+        n.malformed.store(4, Ordering::Relaxed);
+        n.accept_errors.store(5, Ordering::Relaxed);
+        n.frames.store(11, Ordering::Relaxed);
+        n.bytes_in.store(123, Ordering::Relaxed);
+        n.bytes_out.store(456, Ordering::Relaxed);
+        let s = n.summary();
+        for needle in [
+            "total=7",
+            "active=2",
+            "rejected=3",
+            "timed_out=1",
+            "frames=11",
+            "malformed=4",
+            "accept_errors=5",
+            "in=123",
+            "out=456",
+        ] {
+            assert!(s.contains(needle), "summary missing {needle}: {s}");
+        }
     }
 }

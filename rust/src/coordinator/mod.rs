@@ -23,6 +23,9 @@
 //! - [`metrics`]  — counters (incl. failed/shed/expired/restarts) +
 //!   latency histograms.
 //! - [`router`]   — multi-model front door mapping requests to coordinators.
+//! - [`net`]      — hardened TCP ingress: bounded frames, typed
+//!   [`net::WireStatus`] replies, a capped handler pool with accept-time
+//!   shedding, I/O timeouts, and drain-on-shutdown.
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
@@ -33,5 +36,7 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{ShedPolicy, SubmitError};
+pub use net::{ClientError, ImageSpec, NetClient, NetConfig, NetServer, WireError, WireStatus};
 pub use request::{InferError, InferReply, InferRequest, InferResponse, ShedReason};
+pub use router::{RouteError, Router};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -5,33 +5,206 @@
 //! Wire format (little-endian):
 //! ```text
 //! request : u32 route_len | route utf8 | u32 n_floats | n_floats x f32 (CHW image)
-//! response: u8 status (0=ok, 1=error) |
-//!           ok:   u32 n_logits | n x f32 | u32 predicted
-//!           err:  u32 msg_len | msg utf8
+//! reply   : u8 status (see WireStatus) |
+//!           Ok:      u32 n_logits | n x f32 | u32 predicted
+//!           Health:  u32 len | report utf8
+//!           errors:  u32 len | message utf8
 //! ```
-//! One request per connection round; connections are persistent (clients may
-//! pipeline rounds sequentially). The accept loop and per-connection handlers
-//! run on plain threads (the vendor set has no async runtime — and the
-//! payloads are single images, so blocking I/O per connection is adequate).
+//! One request per round; connections are persistent (clients pipeline
+//! rounds sequentially). The accept loop and per-connection handlers run on
+//! plain threads (the vendor set has no async runtime — and the payloads are
+//! single images, so blocking I/O per connection is adequate).
+//!
+//! This is a *hardened* ingress — the wire end of the fault contract in
+//! `docs/serving-robustness.md`:
+//!
+//! - **Bounded frames.** `route_len` and `n_floats` are validated against
+//!   [`NetConfig`] limits and the route's [`ImageSpec`] *before* any
+//!   payload-sized allocation; a corrupt length prefix can never make the
+//!   server allocate attacker-controlled gigabytes.
+//! - **Typed status codes.** Every reply opens with a [`WireStatus`] byte
+//!   carrying the coordinator's typed
+//!   [`InferError`](crate::coordinator::request::InferError) outcome, so
+//!   [`NetClient`] can distinguish retryable overload (`Shed`, `Busy`,
+//!   `DeadlineExceeded`, `ShuttingDown`) from terminal rejections.
+//! - **Never desync.** A malformed-but-parseable frame gets an in-sync
+//!   typed reply and the connection keeps serving; a frame that violates the
+//!   wire grammar or a hard limit gets a typed reply and then the connection
+//!   closes. The stream position is never ambiguous.
+//! - **Bounded handler pool.** At most `max_conns` live handler threads;
+//!   excess connections get a [`WireStatus::Busy`] reply at accept time and
+//!   are closed. Handlers are tracked and joined — never detached.
+//! - **Timeout-guarded I/O.** Per-connection read/write timeouts
+//!   (`io_timeout`) bound how long a slowloris client can pin a handler.
+//! - **Resilient accept loop.** Transient accept errors (`EMFILE`,
+//!   `ECONNABORTED`, ...) back off and retry; only `shutdown` stops the
+//!   listener.
+//! - **Drain on shutdown.** [`NetServer::shutdown`] stops accepting,
+//!   half-closes idle connections (their handlers see EOF and exit), waits
+//!   up to `drain_timeout` for in-flight requests to resolve, force-closes
+//!   stragglers, and joins every handler thread.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::coordinator::router::Router;
+use crate::coordinator::metrics::NetMetrics;
+use crate::coordinator::router::{RouteError, Router};
 use crate::tensor::Tensor;
 
-/// A running TCP server wrapping a [`Router`].
-pub struct NetServer {
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    pub connections: Arc<AtomicU64>,
+/// Built-in route answered by the server itself with a readiness report
+/// ([`WireStatus::Health`] reply). Model routes with this name are shadowed.
+pub const HEALTH_ROUTE: &str = "health";
+
+// ---------------------------------------------------------------- status --
+
+/// First byte of every reply: the typed outcome of one wire round.
+///
+/// Codes mirror the coordinator's
+/// [`InferError`](crate::coordinator::request::InferError) variants so the
+/// serving plane's fault contract survives the wire instead of flattening
+/// into an opaque error string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireStatus {
+    /// Inference succeeded; body is `n_logits | logits | predicted`.
+    Ok = 0,
+    /// The frame violated the wire grammar or a hard limit (oversized
+    /// `route_len`/`n_floats`, frame past `max_frame_bytes`). The stream
+    /// position is unrecoverable: the server closes after the reply.
+    BadFrame = 1,
+    /// Parseable frame with invalid contents (wrong float count, empty or
+    /// non-UTF-8 route name). The stream stays in sync; keep pipelining.
+    BadRequest = 2,
+    /// No such route registered.
+    NoRoute = 3,
+    /// Load-shed: queue full (reject-newest) or evicted (drop-oldest).
+    Shed = 4,
+    /// The request's deadline expired before a batch could execute it.
+    DeadlineExceeded = 5,
+    /// The backend errored or panicked on this request.
+    BackendFailed = 6,
+    /// The route's worker pool is irrecoverably dead.
+    NoWorkers = 7,
+    /// The coordinator (or server) is shutting down.
+    ShuttingDown = 8,
+    /// Image shape did not match the route's expected geometry.
+    ShapeMismatch = 9,
+    /// Accept-time shed: the handler pool is at `max_conns`. The server
+    /// closes the connection after this reply; retry after backoff.
+    Busy = 10,
+    /// Reply to the [`HEALTH_ROUTE`] built-in; body is a text report.
+    Health = 11,
 }
+
+impl WireStatus {
+    pub fn from_code(c: u8) -> Option<WireStatus> {
+        Some(match c {
+            0 => WireStatus::Ok,
+            1 => WireStatus::BadFrame,
+            2 => WireStatus::BadRequest,
+            3 => WireStatus::NoRoute,
+            4 => WireStatus::Shed,
+            5 => WireStatus::DeadlineExceeded,
+            6 => WireStatus::BackendFailed,
+            7 => WireStatus::NoWorkers,
+            8 => WireStatus::ShuttingDown,
+            9 => WireStatus::ShapeMismatch,
+            10 => WireStatus::Busy,
+            11 => WireStatus::Health,
+            _ => return None,
+        })
+    }
+
+    /// Transient conditions a client may reasonably retry (after backoff,
+    /// or against another replica). Terminal codes mean the request as
+    /// posed will never succeed here.
+    pub fn retryable(self) -> bool {
+        matches!(
+            self,
+            WireStatus::Shed
+                | WireStatus::Busy
+                | WireStatus::DeadlineExceeded
+                | WireStatus::ShuttingDown
+        )
+    }
+
+    /// Map a typed routing/inference failure onto its wire code + message.
+    fn of_route_error(e: &RouteError) -> (WireStatus, String) {
+        use crate::coordinator::batcher::SubmitError;
+        use crate::coordinator::request::InferError;
+        let status = match e {
+            RouteError::NoRoute(_) => WireStatus::NoRoute,
+            RouteError::Rejected(SubmitError::QueueFull(_)) => WireStatus::Shed,
+            RouteError::Rejected(SubmitError::ShutDown) => WireStatus::ShuttingDown,
+            RouteError::Rejected(SubmitError::NoWorkers) => WireStatus::NoWorkers,
+            RouteError::Infer(err) => match err {
+                InferError::BackendFailed { .. } => WireStatus::BackendFailed,
+                InferError::Shed { .. } => WireStatus::Shed,
+                InferError::DeadlineExceeded => WireStatus::DeadlineExceeded,
+                InferError::ShapeMismatch { .. } => WireStatus::ShapeMismatch,
+                InferError::ShuttingDown => WireStatus::ShuttingDown,
+                InferError::NoWorkers => WireStatus::NoWorkers,
+            },
+        };
+        (status, e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------- config --
+
+/// Ingress resource bounds and timeouts.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Handler-pool bound: connections accepted while this many are live
+    /// get a [`WireStatus::Busy`] reply and are closed.
+    pub max_conns: usize,
+    /// Per-connection read *and* write timeout — also the idle cap between
+    /// frames, so a stalled reader or writer can pin a handler for at most
+    /// this long. `Duration::ZERO` disables the timeouts.
+    pub io_timeout: Duration,
+    /// Hard cap on one request frame's total bytes (headers + route +
+    /// payload). Frames past it get [`WireStatus::BadFrame`] and the
+    /// connection closes — *before* any payload-sized allocation.
+    pub max_frame_bytes: usize,
+    /// Route-name length cap (grammar limit, checked before reading).
+    pub max_route_len: usize,
+    /// How long [`NetServer::shutdown`] waits for in-flight handlers to
+    /// resolve before force-closing their connections.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 64,
+            io_timeout: Duration::from_secs(10),
+            max_frame_bytes: 16 << 20,
+            max_route_len: 4096,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+fn timeout_opt(d: Duration) -> Option<Duration> {
+    if d.is_zero() {
+        None
+    } else {
+        Some(d)
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+// ---------------------------------------------------------------- frames --
 
 /// Image geometry accepted by the server (validated per request).
 #[derive(Debug, Clone, Copy)]
@@ -41,57 +214,34 @@ pub struct ImageSpec {
     pub w: usize,
 }
 
-impl NetServer {
-    /// Bind and serve `router` on `addr` (use port 0 for an ephemeral port).
-    pub fn serve(addr: &str, router: Arc<Router>, spec: ImageSpec) -> Result<NetServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-        let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let connections = Arc::new(AtomicU64::new(0));
-        let (stop2, conns2) = (Arc::clone(&stop), Arc::clone(&connections));
-        let accept_thread = std::thread::Builder::new()
-            .name("lqr-net-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            conns2.fetch_add(1, Ordering::Relaxed);
-                            let router = Arc::clone(&router);
-                            stream.set_nonblocking(false).ok();
-                            std::thread::spawn(move || {
-                                if let Err(e) = handle_conn(stream, &router, spec) {
-                                    log::debug!("connection ended: {e:#}");
-                                }
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(e) => {
-                            log::error!("accept failed: {e}");
-                            break;
-                        }
-                    }
-                }
-            })?;
-        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread), connections })
-    }
-
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
-    }
+/// One parsed request frame.
+enum Frame {
+    /// Well-formed inference request (payload length already validated
+    /// against the [`ImageSpec`]).
+    Infer { route: String, image: Vec<f32> },
+    /// The [`HEALTH_ROUTE`] built-in.
+    Health,
+    /// Client closed cleanly at a frame boundary.
+    Eof,
 }
 
-impl Drop for NetServer {
-    fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+/// Why a frame was not parsed.
+enum FrameError {
+    /// Typed rejection. `fatal` marks the stream desynced (reply then
+    /// close); otherwise the reader is positioned at the next frame and the
+    /// connection keeps serving.
+    Reject { status: WireStatus, message: String, fatal: bool },
+    /// Transport failure (mid-frame disconnect, timeout, ...).
+    Io(std::io::Error),
+}
+
+impl FrameError {
+    fn fatal(status: WireStatus, message: String) -> FrameError {
+        FrameError::Reject { status, message, fatal: true }
+    }
+
+    fn in_sync(status: WireStatus, message: String) -> FrameError {
+        FrameError::Reject { status, message, fatal: false }
     }
 }
 
@@ -101,63 +251,569 @@ fn rd_u32(r: &mut impl Read) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-fn handle_conn(stream: TcpStream, router: &Router, spec: ImageSpec) -> Result<()> {
+/// Read and discard exactly `n` payload bytes (bounded by the frame-size
+/// check upstream) so the stream stays positioned at the next frame.
+fn discard(r: &mut impl Read, mut n: u64) -> Result<(), FrameError> {
+    let mut buf = [0u8; 8192];
+    while n > 0 {
+        let take = n.min(buf.len() as u64) as usize;
+        r.read_exact(&mut buf[..take]).map_err(FrameError::Io)?;
+        n -= take as u64;
+    }
+    Ok(())
+}
+
+/// Parse one request frame. Every limit is enforced *before* the
+/// corresponding allocation: the largest buffer this function creates is
+/// `min(route_len, max_route_len)` + the spec-validated image payload.
+fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Frame, FrameError> {
+    let route_len = match rd_u32(r) {
+        Ok(n) => n as u64,
+        // EOF at the frame boundary is a clean close. (`read_exact` can't
+        // distinguish 0-of-4 from 2-of-4 bytes; a client dying mid-prefix
+        // folds into the same outcome, which costs nothing.)
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(Frame::Eof),
+        Err(e) => return Err(FrameError::Io(e)),
+    };
+    if route_len > cfg.max_route_len as u64 {
+        return Err(FrameError::fatal(
+            WireStatus::BadFrame,
+            format!("route_len {route_len} exceeds max_route_len {}", cfg.max_route_len),
+        ));
+    }
+    let mut route = vec![0u8; route_len as usize];
+    r.read_exact(&mut route).map_err(FrameError::Io)?;
+    let n_floats = rd_u32(r).map_err(FrameError::Io)? as u64;
+    let payload_bytes = n_floats * 4;
+    let frame_bytes = 8 + route_len + payload_bytes;
+    if frame_bytes > cfg.max_frame_bytes as u64 {
+        return Err(FrameError::fatal(
+            WireStatus::BadFrame,
+            format!(
+                "frame of {frame_bytes} bytes ({n_floats} floats) exceeds max_frame_bytes {}",
+                cfg.max_frame_bytes
+            ),
+        ));
+    }
+    // From here the payload is within the frame budget: it can be skipped,
+    // so content errors reply in sync and the connection keeps serving.
+    let route = match String::from_utf8(route) {
+        Ok(s) => s,
+        Err(_) => {
+            discard(r, payload_bytes)?;
+            return Err(FrameError::in_sync(
+                WireStatus::BadRequest,
+                "route name is not valid UTF-8".into(),
+            ));
+        }
+    };
+    if route.is_empty() {
+        discard(r, payload_bytes)?;
+        return Err(FrameError::in_sync(WireStatus::BadRequest, "empty route name".into()));
+    }
+    if route == HEALTH_ROUTE {
+        // Health probes carry no image; tolerate (and skip) a stray payload.
+        discard(r, payload_bytes)?;
+        return Ok(Frame::Health);
+    }
+    let expect = spec.c * spec.h * spec.w;
+    if n_floats != expect as u64 {
+        discard(r, payload_bytes)?;
+        return Err(FrameError::in_sync(
+            WireStatus::BadRequest,
+            format!("expected {expect} floats, got {n_floats}"),
+        ));
+    }
+    // Validated against the spec — this allocation is bounded by the model's
+    // input geometry, not by client-controlled bytes.
+    let mut payload = vec![0u8; expect * 4];
+    r.read_exact(&mut payload).map_err(FrameError::Io)?;
+    let image: Vec<f32> = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Frame::Infer { route, image })
+}
+
+// --------------------------------------------------------------- replies --
+
+/// Write an error/health reply (`status | u32 len | utf8`); returns bytes
+/// written. Messages are truncated to keep replies small and parseable.
+fn write_msg(w: &mut impl Write, status: WireStatus, msg: &str) -> std::io::Result<u64> {
+    let bytes = msg.as_bytes();
+    let bytes = &bytes[..bytes.len().min(4096)];
+    w.write_all(&[status as u8])?;
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(5 + bytes.len() as u64)
+}
+
+/// Write a success reply; returns bytes written.
+fn write_ok(w: &mut impl Write, logits: &[f32], predicted: usize) -> std::io::Result<u64> {
+    w.write_all(&[WireStatus::Ok as u8])?;
+    w.write_all(&(logits.len() as u32).to_le_bytes())?;
+    for v in logits {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&(predicted as u32).to_le_bytes())?;
+    w.flush()?;
+    Ok(9 + logits.len() as u64 * 4)
+}
+
+// -------------------------------------------------------------- registry --
+
+/// Tracks live connections (a control clone per handler, used to wake and
+/// force-close during drain) and their joinable handler threads.
+#[derive(Default)]
+struct RegistryInner {
+    next_id: u64,
+    conns: HashMap<u64, TcpStream>,
+    handles: HashMap<u64, JoinHandle<()>>,
+    /// Handler ids that finished (their `JoinHandle` is now quick to join).
+    finished: Vec<u64>,
+}
+
+struct Registry {
+    max_conns: usize,
+    inner: Mutex<RegistryInner>,
+}
+
+impl Registry {
+    fn new(max_conns: usize) -> Registry {
+        Registry { max_conns: max_conns.max(1), inner: Mutex::new(RegistryInner::default()) }
+    }
+
+    /// Admit a connection if the pool has a free slot; the semaphore is the
+    /// map itself, so a slot frees exactly when its handler deregisters.
+    fn try_admit(&self, control: TcpStream) -> Option<u64> {
+        let mut g = self.inner.lock().unwrap();
+        if g.conns.len() >= self.max_conns {
+            return None;
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.conns.insert(id, control);
+        Some(id)
+    }
+
+    fn attach(&self, id: u64, h: JoinHandle<()>) {
+        self.inner.lock().unwrap().handles.insert(id, h);
+    }
+
+    /// Handler deregistration: frees the pool slot and marks the thread
+    /// reapable. Called as the handler's last act.
+    fn finish(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.conns.remove(&id);
+        g.finished.push(id);
+    }
+
+    /// Collect handles of finished handlers (joined by the caller, outside
+    /// the lock). Ids raced ahead of `attach` stay queued for next time.
+    fn reap(&self) -> Vec<JoinHandle<()>> {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let mut out = Vec::new();
+        let mut keep = Vec::new();
+        for id in std::mem::take(&mut inner.finished) {
+            match inner.handles.remove(&id) {
+                Some(h) => out.push(h),
+                None => keep.push(id),
+            }
+        }
+        inner.finished = keep;
+        out
+    }
+
+    fn active(&self) -> usize {
+        self.inner.lock().unwrap().conns.len()
+    }
+
+    fn for_each_conn(&self, f: impl Fn(&TcpStream)) {
+        for s in self.inner.lock().unwrap().conns.values() {
+            f(s);
+        }
+    }
+
+    fn take_handles(&self) -> Vec<JoinHandle<()>> {
+        let mut g = self.inner.lock().unwrap();
+        g.finished.clear();
+        g.handles.drain().map(|(_, h)| h).collect()
+    }
+}
+
+// ---------------------------------------------------------------- server --
+
+/// A running TCP server wrapping a [`Router`].
+pub struct NetServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    registry: Arc<Registry>,
+    metrics: Arc<NetMetrics>,
+    drain_timeout: Duration,
+}
+
+impl NetServer {
+    /// Bind and serve `router` on `addr` (use port 0 for an ephemeral port)
+    /// with default [`NetConfig`] bounds.
+    pub fn serve(addr: &str, router: Arc<Router>, spec: ImageSpec) -> Result<NetServer> {
+        NetServer::serve_with(addr, router, spec, NetConfig::default())
+    }
+
+    /// [`NetServer::serve`] with explicit resource bounds.
+    pub fn serve_with(
+        addr: &str,
+        router: Arc<Router>,
+        spec: ImageSpec,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let registry = Arc::new(Registry::new(cfg.max_conns));
+        let metrics = Arc::new(NetMetrics::default());
+        let (stop2, reg2, met2) = (Arc::clone(&stop), Arc::clone(&registry), Arc::clone(&metrics));
+        let accept_thread = std::thread::Builder::new()
+            .name("lqr-net-accept".into())
+            .spawn(move || accept_loop(listener, router, spec, cfg, stop2, reg2, met2))?;
+        Ok(NetServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            registry,
+            metrics,
+            drain_timeout: cfg.drain_timeout,
+        })
+    }
+
+    /// Ingress counters (connections, rejections, timeouts, bytes).
+    pub fn metrics(&self) -> &NetMetrics {
+        &self.metrics
+    }
+
+    /// Live handler count (pool occupancy).
+    pub fn active_connections(&self) -> usize {
+        self.registry.active()
+    }
+
+    /// Stop accepting, drain in-flight requests under `drain_timeout`,
+    /// force-close stragglers, and join every handler thread. Returns the
+    /// ingress metrics for reporting.
+    pub fn shutdown(mut self) -> Arc<NetMetrics> {
+        self.teardown();
+        Arc::clone(&self.metrics)
+    }
+
+    fn teardown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // Half-close every connection: handlers idle-blocked at a frame
+        // boundary read EOF and exit; handlers mid-request keep their write
+        // side and deliver the in-flight reply.
+        self.registry.for_each_conn(|s| {
+            let _ = s.shutdown(Shutdown::Read);
+        });
+        let deadline = Instant::now() + self.drain_timeout;
+        while self.registry.active() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Stragglers (e.g. a stalled writer still inside its send timeout)
+        // lose the connection; their handlers unblock and exit.
+        self.registry.for_each_conn(|s| {
+            let _ = s.shutdown(Shutdown::Both);
+        });
+        for h in self.registry.take_handles() {
+            let _ = h.join();
+        }
+        self.metrics.active_conns.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    spec: ImageSpec,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    registry: Arc<Registry>,
+    metrics: Arc<NetMetrics>,
+) {
+    let base_backoff = Duration::from_millis(1);
+    let mut backoff = base_backoff;
+    while !stop.load(Ordering::Relaxed) {
+        // Reap finished handlers so the handle map stays bounded on
+        // long-lived servers (joins are instant: the threads already exited).
+        for h in registry.reap() {
+            let _ = h.join();
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                backoff = base_backoff;
+                metrics.total_conns.fetch_add(1, Ordering::Relaxed);
+                stream.set_nonblocking(false).ok();
+                admit(stream, &router, spec, &cfg, &stop, &registry, &metrics);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                // Transient resource exhaustion (EMFILE/ENFILE from an fd
+                // flood, ECONNABORTED, ...): the listener must outlive the
+                // spike. Back off and retry — `break` is reserved for stop.
+                metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                log::warn!("accept failed (retrying in {backoff:?}): {e}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Try to hand `stream` to a pooled handler thread; shed with a typed
+/// [`WireStatus::Busy`] reply when the pool (or the OS spawn path) is full.
+fn admit(
+    stream: TcpStream,
+    router: &Arc<Router>,
+    spec: ImageSpec,
+    cfg: &NetConfig,
+    stop: &Arc<AtomicBool>,
+    registry: &Arc<Registry>,
+    metrics: &Arc<NetMetrics>,
+) {
+    let control = match stream.try_clone() {
+        Ok(c) => c,
+        Err(e) => {
+            log::debug!("connection dropped (clone failed): {e}");
+            return;
+        }
+    };
+    let id = match registry.try_admit(control) {
+        Some(id) => id,
+        None => {
+            metrics.rejected_conns.fetch_add(1, Ordering::Relaxed);
+            busy_reply(stream, cfg, "handler pool full (max_conns)");
+            return;
+        }
+    };
+    // Gauge before the handler runs: a health probe served by this very
+    // connection must already see itself counted.
+    metrics.active_conns.store(registry.active() as u64, Ordering::Relaxed);
+    let (router, cfg2, stop2, reg2, met2) =
+        (Arc::clone(router), *cfg, Arc::clone(stop), Arc::clone(registry), Arc::clone(metrics));
+    let spawned = std::thread::Builder::new().name(format!("lqr-net-conn-{id}")).spawn(move || {
+        if let Err(e) = handle_conn(stream, &router, spec, &cfg2, &stop2, &met2) {
+            // Write-side timeouts land here (read-side ones close cleanly
+            // inside the loop); both count as a timed-out connection.
+            if is_timeout(&e) {
+                met2.timed_out.fetch_add(1, Ordering::Relaxed);
+            }
+            log::debug!("connection {id} ended: {e}");
+        }
+        reg2.finish(id);
+        met2.active_conns.store(reg2.active() as u64, Ordering::Relaxed);
+    });
+    match spawned {
+        Ok(h) => registry.attach(id, h),
+        Err(e) => {
+            // Thread exhaustion is an overload condition like a full pool.
+            registry.finish(id);
+            for h in registry.reap() {
+                let _ = h.join();
+            }
+            metrics.active_conns.store(registry.active() as u64, Ordering::Relaxed);
+            metrics.rejected_conns.fetch_add(1, Ordering::Relaxed);
+            log::warn!("handler spawn failed, shedding connection: {e}");
+        }
+    }
+}
+
+/// Best-effort `Busy` reply to a connection shed at accept time. A short
+/// write timeout keeps a hostile peer from pinning the accept thread; the
+/// ~40-byte reply fits any socket send buffer anyway.
+fn busy_reply(stream: TcpStream, cfg: &NetConfig, msg: &str) {
+    let t = if cfg.io_timeout.is_zero() {
+        Duration::from_secs(1)
+    } else {
+        cfg.io_timeout.min(Duration::from_secs(1))
+    };
+    let _ = stream.set_write_timeout(Some(t));
+    let mut w = BufWriter::new(stream);
+    let _ = write_msg(&mut w, WireStatus::Busy, msg);
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    spec: ImageSpec,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    metrics: &NetMetrics,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(timeout_opt(cfg.io_timeout))?;
+    stream.set_write_timeout(timeout_opt(cfg.io_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
-        // Route name.
-        let route_len = match rd_u32(&mut reader) {
-            Ok(n) => n as usize,
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
-            Err(e) => return Err(e.into()),
-        };
-        if route_len > 4096 {
-            bail!("route name too long");
+        // Drain: after `shutdown` flips the flag, finish no further rounds.
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
         }
-        let mut route = vec![0u8; route_len];
-        reader.read_exact(&mut route)?;
-        let route = String::from_utf8(route).context("route not utf8")?;
-        // Image payload.
-        let n_floats = rd_u32(&mut reader)? as usize;
-        let expect = spec.c * spec.h * spec.w;
-        let mut payload = vec![0u8; n_floats * 4];
-        reader.read_exact(&mut payload)?;
-        let result = if n_floats != expect {
-            Err(anyhow::anyhow!("expected {expect} floats, got {n_floats}"))
-        } else {
-            let data: Vec<f32> = payload
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            let img = Tensor::new(&[1, spec.c, spec.h, spec.w], data);
-            router.infer(&route, img)
-        };
-        match result {
-            Ok(resp) => {
-                writer.write_all(&[0u8])?;
-                writer.write_all(&(resp.logits.len() as u32).to_le_bytes())?;
-                for v in &resp.logits {
-                    writer.write_all(&v.to_le_bytes())?;
+        match read_frame(&mut reader, spec, cfg) {
+            Ok(Frame::Eof) => return Ok(()),
+            Ok(Frame::Health) => {
+                metrics.bytes_in.fetch_add(8 + HEALTH_ROUTE.len() as u64, Ordering::Relaxed);
+                let report = health_report(router, metrics);
+                let out = write_msg(&mut writer, WireStatus::Health, &report)?;
+                metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
+            }
+            Ok(Frame::Infer { route, image }) => {
+                metrics.frames.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .bytes_in
+                    .fetch_add(8 + route.len() as u64 + image.len() as u64 * 4, Ordering::Relaxed);
+                let img = Tensor::new(&[1, spec.c, spec.h, spec.w], image);
+                let out = match router.infer_typed(&route, img) {
+                    Ok(resp) => write_ok(&mut writer, &resp.logits, resp.predicted)?,
+                    Err(e) => {
+                        let (status, msg) = WireStatus::of_route_error(&e);
+                        write_msg(&mut writer, status, &msg)?
+                    }
+                };
+                metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
+            }
+            Err(FrameError::Reject { status, message, fatal }) => {
+                metrics.malformed.fetch_add(1, Ordering::Relaxed);
+                let out = write_msg(&mut writer, status, &message)?;
+                metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
+                if fatal {
+                    return Ok(());
                 }
-                writer.write_all(&(resp.predicted as u32).to_le_bytes())?;
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                writer.write_all(&[1u8])?;
-                writer.write_all(&(msg.len() as u32).to_le_bytes())?;
-                writer.write_all(msg.as_bytes())?;
+            Err(FrameError::Io(e)) => {
+                if is_timeout(&e) {
+                    metrics.timed_out.fetch_add(1, Ordering::Relaxed);
+                    // Idle/stalled past io_timeout: close; the client can
+                    // reconnect. No reply — the stream may be mid-frame.
+                    return Ok(());
+                }
+                return Err(e);
             }
         }
-        writer.flush()?;
+    }
+}
+
+/// Text body of a [`WireStatus::Health`] reply: readiness + per-route
+/// queue/pool state + connection-pool occupancy.
+fn health_report(router: &Router, metrics: &NetMetrics) -> String {
+    let mut ready = false;
+    let mut routes = Vec::new();
+    for name in router.route_names() {
+        if let Some(c) = router.coordinator(name) {
+            let failed = c.is_failed();
+            ready |= !failed;
+            routes.push(format!(
+                "{name} depth={}/{} {}",
+                c.queue_depth(),
+                c.queue_capacity(),
+                if failed { "dead" } else { "up" }
+            ));
+        }
+    }
+    format!(
+        "ready={ready} active_conns={} total_conns={} | {}",
+        metrics.active_conns.load(Ordering::Relaxed),
+        metrics.total_conns.load(Ordering::Relaxed),
+        routes.join("; ")
+    )
+}
+
+// ---------------------------------------------------------------- client --
+
+/// A typed non-OK reply from the server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub status: WireStatus,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server replied {:?}: {}", self.status, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// What a [`NetClient`] call can fail with: a transport error or a typed
+/// server rejection. The vendored `anyhow` subset has no downcasting, so
+/// the client API keeps the error concrete — `?` still converts into
+/// `anyhow::Error` where callers don't care.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The transport failed (connection closed, timeout, protocol desync).
+    Io(std::io::Error),
+    /// The server answered with a typed non-OK [`WireStatus`].
+    Wire(WireError),
+}
+
+impl ClientError {
+    /// True when retrying (after backoff, or elsewhere) can succeed:
+    /// transient overload codes only. Transport errors are *not* marked
+    /// retryable — the caller can't tell whether the request executed.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ClientError::Wire(w) if w.status.retryable())
+    }
+
+    /// The typed status, when the server got far enough to send one.
+    pub fn wire_status(&self) -> Option<WireStatus> {
+        match self {
+            ClientError::Wire(w) => Some(w.status),
+            ClientError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "wire transport error: {e}"),
+            ClientError::Wire(w) => write!(f, "{w}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e)
     }
 }
 
 /// Minimal blocking client for the wire protocol (used by tests, examples
-/// and external tooling).
+/// and external tooling). Errors are typed: match on
+/// [`ClientError::Wire`] / [`WireStatus`] to distinguish retryable overload
+/// from terminal rejections.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
+
+/// Client-side sanity caps so a rogue server can't make *us* allocate
+/// unboundedly (mirrors the server's frame limits).
+const MAX_REPLY_MSG: usize = 1 << 16;
+const MAX_REPLY_LOGITS: usize = 1 << 22;
 
 impl NetClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<NetClient> {
@@ -165,33 +821,92 @@ impl NetClient {
         Ok(NetClient { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
     }
 
+    /// Bound this client's own socket reads/writes (`None` = blocking).
+    pub fn set_io_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(t)?;
+        self.writer.get_ref().set_write_timeout(t)
+    }
+
     /// Classify one CHW image on `route`; returns (logits, predicted).
-    pub fn classify(&mut self, route: &str, image: &Tensor) -> Result<(Vec<f32>, usize)> {
+    pub fn classify(
+        &mut self,
+        route: &str,
+        image: &Tensor,
+    ) -> Result<(Vec<f32>, usize), ClientError> {
+        self.send_frame(route, image.data())?;
+        match self.read_reply()? {
+            Reply::Ok(logits, predicted) => Ok((logits, predicted)),
+            Reply::Msg(status, message) => Err(ClientError::Wire(WireError { status, message })),
+        }
+    }
+
+    /// Query the [`HEALTH_ROUTE`] built-in; returns the report text.
+    pub fn health(&mut self) -> Result<String, ClientError> {
+        self.send_frame(HEALTH_ROUTE, &[])?;
+        match self.read_reply()? {
+            Reply::Msg(WireStatus::Health, report) => Ok(report),
+            Reply::Msg(status, message) => Err(ClientError::Wire(WireError { status, message })),
+            Reply::Ok(..) => Err(ClientError::Io(std::io::Error::new(
+                ErrorKind::InvalidData,
+                "Ok reply to a health probe",
+            ))),
+        }
+    }
+
+    fn send_frame(&mut self, route: &str, floats: &[f32]) -> Result<(), ClientError> {
         self.writer.write_all(&(route.len() as u32).to_le_bytes())?;
         self.writer.write_all(route.as_bytes())?;
-        self.writer.write_all(&(image.len() as u32).to_le_bytes())?;
-        for v in image.data() {
+        self.writer.write_all(&(floats.len() as u32).to_le_bytes())?;
+        for v in floats {
             self.writer.write_all(&v.to_le_bytes())?;
         }
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_reply(&mut self) -> Result<Reply, ClientError> {
         let mut status = [0u8; 1];
         self.reader.read_exact(&mut status)?;
-        if status[0] != 0 {
-            let n = rd_u32(&mut self.reader)? as usize;
+        let status = WireStatus::from_code(status[0]).ok_or_else(|| {
+            ClientError::Io(std::io::Error::new(
+                ErrorKind::InvalidData,
+                format!("unknown wire status {}", status[0]),
+            ))
+        })?;
+        if status == WireStatus::Ok {
+            let n = rd_u32(&mut self.reader).map_err(ClientError::Io)? as usize;
+            if n > MAX_REPLY_LOGITS {
+                return Err(ClientError::Io(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("implausible logits count {n}"),
+                )));
+            }
+            let mut logits = Vec::with_capacity(n);
+            let mut buf = [0u8; 4];
+            for _ in 0..n {
+                self.reader.read_exact(&mut buf)?;
+                logits.push(f32::from_le_bytes(buf));
+            }
+            let predicted = rd_u32(&mut self.reader).map_err(ClientError::Io)? as usize;
+            Ok(Reply::Ok(logits, predicted))
+        } else {
+            let n = rd_u32(&mut self.reader).map_err(ClientError::Io)? as usize;
+            if n > MAX_REPLY_MSG {
+                return Err(ClientError::Io(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("implausible message length {n}"),
+                )));
+            }
             let mut msg = vec![0u8; n];
             self.reader.read_exact(&mut msg)?;
-            bail!("server error: {}", String::from_utf8_lossy(&msg));
+            Ok(Reply::Msg(status, String::from_utf8_lossy(&msg).into_owned()))
         }
-        let n = rd_u32(&mut self.reader)? as usize;
-        let mut logits = Vec::with_capacity(n);
-        let mut buf = [0u8; 4];
-        for _ in 0..n {
-            self.reader.read_exact(&mut buf)?;
-            logits.push(f32::from_le_bytes(buf));
-        }
-        let predicted = rd_u32(&mut self.reader)? as usize;
-        Ok((logits, predicted))
     }
+}
+
+enum Reply {
+    Ok(Vec<f32>, usize),
+    Msg(WireStatus, String),
 }
 
 #[cfg(test)]
@@ -199,6 +914,7 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::{Backend, MockBackend};
     use crate::coordinator::server::CoordinatorConfig;
+    use crate::util::prop;
     use std::sync::atomic::AtomicU64;
 
     fn test_router() -> Arc<Router> {
@@ -218,11 +934,12 @@ mod tests {
         Arc::new(r)
     }
 
+    const SPEC: ImageSpec = ImageSpec { c: 1, h: 2, w: 2 };
+
     #[test]
     fn round_trip_over_tcp() {
         let router = test_router();
-        let spec = ImageSpec { c: 1, h: 2, w: 2 };
-        let server = NetServer::serve("127.0.0.1:0", router, spec).unwrap();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
         let mut client = NetClient::connect(server.addr).unwrap();
         let img = Tensor::filled(&[1, 1, 2, 2], 0.25);
         let (logits, predicted) = client.classify("mock", &img).unwrap();
@@ -231,40 +948,43 @@ mod tests {
         // Pipelined second round on the same connection.
         let (logits2, _) = client.classify("mock", &Tensor::filled(&[1, 1, 2, 2], 0.5)).unwrap();
         assert_eq!(logits2[0], 2.0);
+        let m = server.shutdown();
+        assert_eq!(m.frames.load(Ordering::Relaxed), 2);
+        assert!(m.bytes_in.load(Ordering::Relaxed) > 0);
+        assert!(m.bytes_out.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn unknown_route_reports_typed_error() {
+        let router = test_router();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let err = client.classify("nope", &Tensor::filled(&[1, 1, 2, 2], 0.1)).unwrap_err();
+        assert_eq!(err.wire_status(), Some(WireStatus::NoRoute));
+        assert!(!err.retryable(), "NoRoute is terminal");
+        assert!(err.to_string().contains("no route"), "{err}");
         server.shutdown();
     }
 
     #[test]
-    fn unknown_route_reports_error() {
+    fn wrong_image_size_reports_error_and_stays_in_sync() {
         let router = test_router();
-        let server =
-            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
         let mut client = NetClient::connect(server.addr).unwrap();
-        let err = client
-            .classify("nope", &Tensor::filled(&[1, 1, 2, 2], 0.1))
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("no route"), "{err:#}");
-        server.shutdown();
-    }
-
-    #[test]
-    fn wrong_image_size_reports_error() {
-        let router = test_router();
-        let server =
-            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
-        let mut client = NetClient::connect(server.addr).unwrap();
-        let err = client
-            .classify("mock", &Tensor::filled(&[1, 1, 3, 3], 0.1))
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("expected 4 floats"), "{err:#}");
-        server.shutdown();
+        let err = client.classify("mock", &Tensor::filled(&[1, 1, 3, 3], 0.1)).unwrap_err();
+        assert_eq!(err.wire_status(), Some(WireStatus::BadRequest));
+        assert!(err.to_string().contains("expected 4 floats"), "{err}");
+        // The stream is still in sync: the next round succeeds.
+        let (logits, _) = client.classify("mock", &Tensor::filled(&[1, 1, 2, 2], 1.0)).unwrap();
+        assert_eq!(logits[0], 4.0);
+        let m = server.shutdown();
+        assert_eq!(m.malformed.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn concurrent_clients() {
         let router = test_router();
-        let server =
-            NetServer::serve("127.0.0.1:0", router, ImageSpec { c: 1, h: 2, w: 2 }).unwrap();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
         let addr = server.addr;
         let handles: Vec<_> = (0..4)
             .map(|t| {
@@ -282,7 +1002,128 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert!(server.connections.load(Ordering::Relaxed) >= 4);
+        assert!(server.metrics().total_conns.load(Ordering::Relaxed) >= 4);
+        let m = server.shutdown();
+        assert_eq!(m.active_conns.load(Ordering::Relaxed), 0, "handlers must drain");
+    }
+
+    #[test]
+    fn health_route_reports_readiness() {
+        let router = test_router();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let report = client.health().unwrap();
+        assert!(report.contains("ready=true"), "{report}");
+        assert!(report.contains("mock"), "{report}");
         server.shutdown();
+    }
+
+    #[test]
+    fn status_codes_round_trip() {
+        for code in 0..=11u8 {
+            let s = WireStatus::from_code(code).unwrap();
+            assert_eq!(s as u8, code);
+        }
+        assert_eq!(WireStatus::from_code(12), None);
+        assert_eq!(WireStatus::from_code(255), None);
+        assert!(WireStatus::Busy.retryable());
+        assert!(WireStatus::Shed.retryable());
+        assert!(!WireStatus::BadFrame.retryable());
+        assert!(!WireStatus::NoWorkers.retryable());
+    }
+
+    // ---- frame parser (pure, over in-memory readers) ----
+
+    fn parse(bytes: &[u8], cfg: &NetConfig) -> Result<Frame, FrameError> {
+        read_frame(&mut std::io::Cursor::new(bytes.to_vec()), SPEC, cfg)
+    }
+
+    fn valid_frame(route: &str, floats: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&(route.len() as u32).to_le_bytes());
+        b.extend_from_slice(route.as_bytes());
+        b.extend_from_slice(&(floats.len() as u32).to_le_bytes());
+        for v in floats {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parser_rejects_oversized_counts_before_allocating() {
+        let cfg = NetConfig::default();
+        // n_floats = u32::MAX: the ~16 GiB allocation must never happen;
+        // the frame-size check fires on the prefix alone.
+        let mut b = valid_frame("mock", &[]);
+        let n = b.len();
+        b[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        match parse(&b, &cfg) {
+            Err(FrameError::Reject { status: WireStatus::BadFrame, fatal: true, .. }) => {}
+            _ => panic!("oversized n_floats must be a fatal BadFrame"),
+        }
+        // Oversized route_len likewise.
+        let mut b = vec![0u8; 4];
+        b.copy_from_slice(&u32::MAX.to_le_bytes());
+        match parse(&b, &cfg) {
+            Err(FrameError::Reject { status: WireStatus::BadFrame, fatal: true, .. }) => {}
+            _ => panic!("oversized route_len must be a fatal BadFrame"),
+        }
+    }
+
+    #[test]
+    fn parser_in_sync_rejections_consume_whole_frame() {
+        let cfg = NetConfig::default();
+        // Wrong float count / empty route / non-UTF-8 route: the payload is
+        // consumed so the next frame parses cleanly.
+        let mut cases: Vec<Vec<u8>> = Vec::new();
+        cases.push(valid_frame("mock", &[1.0; 9])); // wrong count
+        cases.push(valid_frame("", &[1.0; 4])); // empty route
+        let mut bad_utf8 = valid_frame("mk", &[1.0; 4]);
+        bad_utf8[4] = 0xFF; // corrupt a route byte
+        bad_utf8[5] = 0xFE;
+        cases.push(bad_utf8);
+        for case in cases {
+            let mut stream = case.clone();
+            stream.extend_from_slice(&valid_frame("mock", &[2.0; 4]));
+            let mut r = std::io::Cursor::new(stream);
+            match read_frame(&mut r, SPEC, &cfg) {
+                Err(FrameError::Reject { status: WireStatus::BadRequest, fatal: false, .. }) => {}
+                _ => panic!("expected in-sync BadRequest"),
+            }
+            match read_frame(&mut r, SPEC, &cfg) {
+                Ok(Frame::Infer { route, image }) => {
+                    assert_eq!(route, "mock");
+                    assert_eq!(image, vec![2.0; 4]);
+                }
+                _ => panic!("stream must stay in sync after an in-sync reject"),
+            }
+        }
+    }
+
+    #[test]
+    fn parser_never_panics_on_random_prefixes() {
+        let cfg = NetConfig::default();
+        prop::check("net-frame-parser-total", 0x5EED_0007, |rng, _| {
+            let len = rng.below(96) as usize;
+            let mut bytes = Vec::with_capacity(len);
+            while bytes.len() < len {
+                bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+            }
+            bytes.truncate(len);
+            // Half the cases: corrupt/truncate a valid frame instead of
+            // pure noise, to exercise the deeper parser states.
+            if rng.below(2) == 0 {
+                let mut f = valid_frame("mock", &[1.0, 2.0, 3.0, 4.0]);
+                let cut = rng.below(f.len() as u64 + 1) as usize;
+                f.truncate(cut);
+                if !f.is_empty() {
+                    let i = rng.below(f.len() as u64) as usize;
+                    f[i] ^= rng.next_u64() as u8;
+                }
+                bytes = f;
+            }
+            // Must return (any variant), never panic.
+            let _ = parse(&bytes, &cfg);
+        });
     }
 }

@@ -44,6 +44,21 @@ pub enum InferError {
     NoWorkers,
 }
 
+impl InferError {
+    /// True for transient overload/lifecycle outcomes a client may
+    /// reasonably retry (after backoff, or against another replica):
+    /// shed, deadline expiry, shutdown. Backend, shape and dead-pool
+    /// failures are terminal for the request as posed. The wire path
+    /// (`coordinator/net.rs`) forwards this split to remote clients via
+    /// `WireStatus::retryable`.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            InferError::Shed { .. } | InferError::DeadlineExceeded | InferError::ShuttingDown
+        )
+    }
+}
+
 impl std::fmt::Display for InferError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -186,5 +201,16 @@ mod tests {
         let e = InferError::ShapeMismatch { expected: vec![1, 1, 2, 2], got: vec![1, 1, 3, 3] };
         assert!(e.to_string().contains("[1, 1, 3, 3]"));
         assert!(InferError::NoWorkers.to_string().contains("no live workers"));
+    }
+
+    #[test]
+    fn retryable_split_is_transient_vs_terminal() {
+        assert!(InferError::Shed { reason: ShedReason::QueueFull }.retryable());
+        assert!(InferError::Shed { reason: ShedReason::DropOldest }.retryable());
+        assert!(InferError::DeadlineExceeded.retryable());
+        assert!(InferError::ShuttingDown.retryable());
+        assert!(!InferError::BackendFailed { message: "x".into() }.retryable());
+        assert!(!InferError::ShapeMismatch { expected: vec![1], got: vec![2] }.retryable());
+        assert!(!InferError::NoWorkers.retryable());
     }
 }

@@ -7,9 +7,36 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::SubmitError;
-use crate::coordinator::request::{InferReply, InferResponse};
+use crate::coordinator::request::{InferError, InferReply, InferResponse};
 use crate::coordinator::server::{Coordinator, CoordinatorConfig};
 use crate::tensor::Tensor;
+
+/// Typed failure of a routed inference: the route lookup, the synchronous
+/// admission, or the coordinator's typed reply. Carries the concrete
+/// [`SubmitError`] / [`InferError`] so front doors (the TCP wire path) can
+/// translate instead of flattening everything into one error string.
+#[derive(Debug)]
+pub enum RouteError {
+    /// No route registered under this name.
+    NoRoute(String),
+    /// The submission was refused synchronously (queue full, shut down,
+    /// dead pool); no request was admitted.
+    Rejected(SubmitError),
+    /// The request was admitted and resolved to a typed error reply.
+    Infer(InferError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoRoute(name) => write!(f, "no route {name}"),
+            RouteError::Rejected(e) => write!(f, "{e}"),
+            RouteError::Infer(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// Routes inference traffic across models/variants.
 pub struct Router {
@@ -58,10 +85,28 @@ impl Router {
         })
     }
 
-    /// Submit and wait.
+    /// Submit and wait, with a typed outcome: callers can distinguish a
+    /// missing route from admission refusal from a typed inference error.
+    /// This is the wire path's entry point (`coordinator/net.rs` maps each
+    /// variant onto a `WireStatus` code).
+    pub fn infer_typed(&self, route: &str, image: Tensor) -> Result<InferResponse, RouteError> {
+        let c = self
+            .routes
+            .get(route)
+            .ok_or_else(|| RouteError::NoRoute(route.to_string()))?;
+        let rx = c.submit(image).map_err(RouteError::Rejected)?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(RouteError::Infer(e)),
+            // Unreachable by the reply protocol (every admitted request gets
+            // exactly one typed reply); degrade to an error, never a lie.
+            Err(_) => Err(RouteError::Infer(InferError::NoWorkers)),
+        }
+    }
+
+    /// Submit and wait (anyhow convenience over [`Router::infer_typed`]).
     pub fn infer(&self, route: &str, image: Tensor) -> Result<InferResponse> {
-        let c = self.routes.get(route).with_context(|| format!("no route {route}"))?;
-        c.infer(image)
+        self.infer_typed(route, image).map_err(anyhow::Error::from)
     }
 
     pub fn coordinator(&self, route: &str) -> Option<&Coordinator> {
@@ -109,6 +154,23 @@ mod tests {
         assert!(r.infer("c", img).is_err());
         let summaries = r.shutdown();
         assert_eq!(summaries.len(), 2);
+    }
+
+    #[test]
+    fn infer_typed_distinguishes_outcomes() {
+        let mut r = Router::new();
+        r.add_route("a", CoordinatorConfig::default(), factory(2)).unwrap();
+        let img = Tensor::filled(&[1, 1, 2, 2], 1.0);
+        assert!(r.infer_typed("a", img.clone()).is_ok());
+        match r.infer_typed("missing", img) {
+            Err(RouteError::NoRoute(name)) => assert_eq!(name, "missing"),
+            other => panic!("expected NoRoute, got {other:?}"),
+        }
+        assert_eq!(RouteError::NoRoute("x".into()).to_string(), "no route x");
+        assert_eq!(
+            RouteError::Infer(InferError::DeadlineExceeded).to_string(),
+            InferError::DeadlineExceeded.to_string()
+        );
     }
 
     #[test]

@@ -189,6 +189,12 @@ impl Coordinator {
         self.queue.depth()
     }
 
+    /// Configured queue capacity (the `queue_capacity` knob), for health /
+    /// readiness reporting alongside [`Coordinator::queue_depth`].
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.policy().capacity
+    }
+
     /// True once the pool is irrecoverably dead (fail-fast state).
     pub fn is_failed(&self) -> bool {
         self.queue.is_failed()
@@ -243,6 +249,7 @@ mod tests {
     fn end_to_end_single() {
         let calls = Arc::new(AU64::new(0));
         let c = Coordinator::start(CoordinatorConfig::default(), mock_factory(0, calls)).unwrap();
+        assert_eq!(c.queue_capacity(), CoordinatorConfig::default().queue_capacity);
         let resp = c.infer(img(0.5)).unwrap();
         assert_eq!(resp.logits[0], 2.0); // 4 pixels * 0.5
         let m = c.shutdown();

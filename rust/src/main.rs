@@ -158,7 +158,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
-    use lqr::coordinator::net::{ImageSpec, NetServer};
+    use lqr::coordinator::net::{ImageSpec, NetConfig, NetServer};
     use lqr::coordinator::router::Router;
     use std::sync::Arc;
 
@@ -170,6 +170,10 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
         .flag("workers", "1", "workers per route")
         .flag("max-batch", "8", "dynamic batch cap")
         .flag("max-wait-ms", "5", "batch deadline (ms)")
+        .flag("max-conns", "64", "handler pool size; excess connections get a Busy reply")
+        .flag("io-timeout-ms", "10000", "per-connection read/write timeout (0 = no timeout)")
+        .flag("max-frame-bytes", "16777216", "hard cap on one request frame's total bytes")
+        .flag("drain-ms", "5000", "shutdown drain deadline for in-flight requests")
         .flag("duration", "30", "seconds to serve before shutdown (0 = forever)")
         .parse_from(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
@@ -204,7 +208,15 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
     }
     let (c, h, w) = manifest.models.values().next().unwrap().input_shape;
     let router = Arc::new(router);
-    let server = NetServer::serve(p.get("listen"), Arc::clone(&router), ImageSpec { c, h, w })?;
+    let net_cfg = NetConfig {
+        max_conns: p.get_usize("max-conns"),
+        io_timeout: Duration::from_millis(p.get_u64("io-timeout-ms")),
+        max_frame_bytes: p.get_usize("max-frame-bytes"),
+        drain_timeout: Duration::from_millis(p.get_u64("drain-ms")),
+        ..Default::default()
+    };
+    let server =
+        NetServer::serve_with(p.get("listen"), Arc::clone(&router), ImageSpec { c, h, w }, net_cfg)?;
     println!("listening on {}", server.addr);
     let secs = p.get_u64("duration");
     if secs == 0 {
@@ -213,8 +225,9 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
         }
     }
     std::thread::sleep(Duration::from_secs(secs));
-    server.shutdown();
+    let net_metrics = server.shutdown();
     println!("shut down after {secs}s");
+    println!("{}", net_metrics.summary());
     Ok(())
 }
 

@@ -1,0 +1,410 @@
+//! Wire-level fault injection: the ingress half of the liveness contract.
+//!
+//! The server half of `tests/failure_injection.rs`: every connection — even
+//! a hostile one — must resolve to a typed outcome in bounded time, and no
+//! fault on one connection may degrade service on another. No test here can
+//! hang: every socket read carries a timeout, and every shutdown is raced
+//! against a deadline on a separate thread.
+//!
+//! Scenarios: oversized length prefixes (the `u32::MAX` DoS), random
+//! garbage, truncated frames and mid-frame disconnects, zero-length and
+//! non-UTF-8 routes, pipelining across an error reply, slowloris (stalled
+//! reader), a stalled writer pinned by a multi-megabyte reply, a connection
+//! flood past `max_conns`, shutdown under load, and the health built-in.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use lqr::coordinator::backend::{Backend, MockBackend};
+use lqr::coordinator::net::{ImageSpec, NetClient, NetConfig, NetServer, WireStatus};
+use lqr::coordinator::router::Router;
+use lqr::coordinator::CoordinatorConfig;
+use lqr::tensor::Tensor;
+use lqr::util::rng::Rng;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+const SPEC: ImageSpec = ImageSpec { c: 1, h: 2, w: 2 };
+
+fn router_with(classes: usize, delay: Duration) -> Arc<Router> {
+    let mut r = Router::new();
+    r.add_route(
+        "mock",
+        CoordinatorConfig::default(),
+        Box::new(move || {
+            Ok(Box::new(MockBackend { classes, delay, calls: Arc::new(AtomicU64::new(0)) })
+                as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+    Arc::new(r)
+}
+
+fn img(v: f32) -> Tensor {
+    Tensor::filled(&[1, 1, 2, 2], v)
+}
+
+/// Encode one request frame (`route_len | route | n_floats | floats`).
+fn frame(route: &[u8], floats: &[f32]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&(route.len() as u32).to_le_bytes());
+    b.extend_from_slice(route);
+    b.extend_from_slice(&(floats.len() as u32).to_le_bytes());
+    for v in floats {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b
+}
+
+/// Raw connection with every read bounded by `RECV_TIMEOUT` — a hung read
+/// here is a server liveness bug, surfaced as a test failure not a hang.
+fn raw_connect(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    s.set_write_timeout(Some(RECV_TIMEOUT)).unwrap();
+    s
+}
+
+/// Read one reply status byte; `None` on EOF/timeout.
+fn read_status(s: &mut TcpStream) -> Option<u8> {
+    let mut b = [0u8; 1];
+    s.read_exact(&mut b).ok().map(|_| b[0])
+}
+
+/// Read the `u32 len | utf8` body that follows a non-Ok status.
+fn read_msg_body(s: &mut TcpStream) -> String {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    s.read_exact(&mut body).unwrap();
+    String::from_utf8_lossy(&body).into_owned()
+}
+
+/// Assert a healthy round still works — the "no collateral damage" check
+/// run after every fault scenario.
+fn assert_healthy(addr: std::net::SocketAddr) {
+    let mut c = NetClient::connect(addr).unwrap();
+    c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let (logits, predicted) = c.classify("mock", &img(0.5)).unwrap();
+    assert_eq!(logits[0], 2.0);
+    assert_eq!(predicted, 0);
+}
+
+/// Run `NetServer::shutdown` on a separate thread and require it to finish
+/// within `bound` — a drain that hangs fails the test instead of the suite.
+/// Returns (elapsed, ingress metrics).
+fn shutdown_within(
+    server: NetServer,
+    bound: Duration,
+) -> (Duration, Arc<lqr::coordinator::metrics::NetMetrics>) {
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    std::thread::spawn(move || {
+        let _ = tx.send(server.shutdown());
+    });
+    match rx.recv_timeout(bound) {
+        Ok(m) => (t0.elapsed(), m),
+        Err(_) => panic!("liveness violation: shutdown did not finish within {bound:?}"),
+    }
+}
+
+// ------------------------------------------------------------- bad frames --
+
+#[test]
+fn oversized_n_floats_is_rejected_before_allocation() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+
+    // The classic DoS: a 12-byte frame whose length prefix promises
+    // u32::MAX floats (~16 GiB). The server must answer with a typed
+    // BadFrame — without allocating — and close.
+    let mut s = raw_connect(server.addr);
+    let mut b = frame(b"mock", &[]);
+    let n = b.len();
+    b[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&b).unwrap();
+    assert_eq!(read_status(&mut s), Some(WireStatus::BadFrame as u8));
+    let msg = read_msg_body(&mut s);
+    assert!(msg.contains("max_frame_bytes"), "{msg}");
+    // Fatal reject: the server closes after the reply.
+    assert_eq!(read_status(&mut s), None, "connection must close after BadFrame");
+
+    // Meanwhile a well-behaved client is unaffected.
+    assert_healthy(server.addr);
+    let m = server.shutdown();
+    assert_eq!(m.malformed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn oversized_route_len_is_rejected() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+    let mut s = raw_connect(server.addr);
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    assert_eq!(read_status(&mut s), Some(WireStatus::BadFrame as u8));
+    let msg = read_msg_body(&mut s);
+    assert!(msg.contains("max_route_len"), "{msg}");
+    assert_eq!(read_status(&mut s), None);
+    assert_healthy(server.addr);
+    server.shutdown();
+}
+
+#[test]
+fn random_garbage_never_takes_the_server_down() {
+    let router = router_with(4, Duration::ZERO);
+    let cfg = NetConfig { io_timeout: Duration::from_millis(300), ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+
+    let mut rng = Rng::new(0x5EED_0008);
+    for _ in 0..16 {
+        let len = rng.below(256) as usize;
+        let mut bytes = Vec::with_capacity(len + 8);
+        while bytes.len() < len {
+            bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        bytes.truncate(len);
+        let mut s = raw_connect(server.addr);
+        // The server's 300ms io_timeout closes each stalled connection; 2s
+        // here is a generous bound, not the expected wait.
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let _ = s.write_all(&bytes);
+        // Drain whatever the server replies until it closes or times out;
+        // the only requirement is a typed reaction, not a specific one.
+        let mut sink = [0u8; 256];
+        while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+        // Service must be intact after every hostile connection.
+        assert_healthy(server.addr);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_then_reconnect_works() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+
+    // Send half a valid frame, then disconnect mid-frame.
+    let full = frame(b"mock", &[1.0, 2.0, 3.0, 4.0]);
+    let mut s = raw_connect(server.addr);
+    s.write_all(&full[..full.len() / 2]).unwrap();
+    drop(s);
+
+    // The handler sees the mid-frame EOF as an I/O error and cleans up;
+    // a reconnect gets a fresh, fully working connection.
+    assert_healthy(server.addr);
+    let m = server.shutdown();
+    assert_eq!(m.active_conns.load(Ordering::Relaxed), 0);
+}
+
+// --------------------------------------------------- in-sync error replies --
+
+#[test]
+fn zero_length_and_non_utf8_routes_stay_in_sync() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+
+    // Pipeline three frames before reading anything: empty route, non-UTF-8
+    // route, then a valid request. The two rejects must each consume their
+    // whole frame so the third parses cleanly on the same connection.
+    let mut s = raw_connect(server.addr);
+    s.write_all(&frame(b"", &[1.0; 4])).unwrap();
+    s.write_all(&frame(&[0xFF, 0xFE, 0x80], &[1.0; 4])).unwrap();
+    s.write_all(&frame(b"mock", &[1.0; 4])).unwrap();
+
+    assert_eq!(read_status(&mut s), Some(WireStatus::BadRequest as u8));
+    assert!(read_msg_body(&mut s).contains("empty route"));
+    assert_eq!(read_status(&mut s), Some(WireStatus::BadRequest as u8));
+    assert!(read_msg_body(&mut s).contains("UTF-8"));
+    assert_eq!(read_status(&mut s), Some(WireStatus::Ok as u8), "stream desynced");
+
+    let m = server.shutdown();
+    assert_eq!(m.malformed.load(Ordering::Relaxed), 2);
+    assert_eq!(m.frames.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn wrong_float_count_then_pipelined_request_succeeds() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+    let mut s = raw_connect(server.addr);
+    // Wrong count (9 floats for a 4-float spec) followed immediately by a
+    // correct frame — written back-to-back before any reply is read.
+    s.write_all(&frame(b"mock", &[1.0; 9])).unwrap();
+    s.write_all(&frame(b"mock", &[0.25; 4])).unwrap();
+    assert_eq!(read_status(&mut s), Some(WireStatus::BadRequest as u8));
+    assert!(read_msg_body(&mut s).contains("expected 4 floats"));
+    assert_eq!(read_status(&mut s), Some(WireStatus::Ok as u8));
+    server.shutdown();
+}
+
+// ------------------------------------------------------------------ stalls --
+
+#[test]
+fn slowloris_reader_is_timed_out() {
+    let router = router_with(4, Duration::ZERO);
+    let cfg = NetConfig { io_timeout: Duration::from_millis(100), ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+
+    // Connect and send nothing: the read timeout must reclaim the handler.
+    let mut s = raw_connect(server.addr);
+    let deadline = Instant::now() + RECV_TIMEOUT;
+    loop {
+        if server.metrics().timed_out.load(Ordering::Relaxed) >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "stalled reader was never timed out");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // The server closed our socket (EOF), and service is unaffected.
+    assert_eq!(read_status(&mut s), None);
+    assert_healthy(server.addr);
+    server.shutdown();
+}
+
+#[test]
+fn stalled_writer_cannot_pin_a_handler() {
+    // 4M classes make the Ok reply ~16 MiB — far past any socket buffer —
+    // so a client that never reads stalls the server's write path.
+    let router = router_with(1 << 22, Duration::ZERO);
+    let cfg = NetConfig { io_timeout: Duration::from_millis(200), ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+
+    let mut s = raw_connect(server.addr);
+    s.write_all(&frame(b"mock", &[1.0; 4])).unwrap();
+    // Never read. The write timeout must fire and free the handler.
+    let deadline = Instant::now() + RECV_TIMEOUT;
+    loop {
+        if server.metrics().timed_out.load(Ordering::Relaxed) >= 1
+            && server.active_connections() == 0
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "stalled writer was never timed out");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Shutdown stays prompt — nothing is pinned.
+    shutdown_within(server, Duration::from_secs(5));
+}
+
+// ------------------------------------------------------------------- flood --
+
+#[test]
+fn connection_flood_is_shed_with_busy_and_slots_recycle() {
+    let router = router_with(4, Duration::ZERO);
+    let cfg = NetConfig { max_conns: 2, ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+
+    // Two holders occupy the whole pool (a completed round proves each is
+    // admitted, not just queued in the accept backlog).
+    let mut holders: Vec<NetClient> = (0..2)
+        .map(|_| {
+            let mut c = NetClient::connect(server.addr).unwrap();
+            c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+            c.classify("mock", &img(1.0)).unwrap();
+            c
+        })
+        .collect();
+
+    // Flood: every further connection gets a typed Busy reply, then close.
+    for _ in 0..8 {
+        let mut s = raw_connect(server.addr);
+        assert_eq!(read_status(&mut s), Some(WireStatus::Busy as u8));
+        assert!(read_msg_body(&mut s).contains("max_conns"));
+        assert_eq!(read_status(&mut s), None, "shed connection must be closed");
+    }
+    assert!(server.metrics().rejected_conns.load(Ordering::Relaxed) >= 8);
+
+    // Holders still work while the flood is being shed.
+    for c in holders.iter_mut() {
+        c.classify("mock", &img(0.5)).unwrap();
+    }
+
+    // Dropping a holder frees its slot for new clients.
+    drop(holders);
+    let deadline = Instant::now() + RECV_TIMEOUT;
+    loop {
+        if server.active_connections() == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "freed slots were never reclaimed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_healthy(server.addr);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------- shutdown --
+
+#[test]
+fn shutdown_under_load_resolves_every_in_flight_request() {
+    // Slow backend so requests are genuinely in flight when shutdown hits.
+    let router = router_with(4, Duration::from_millis(300));
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+    let addr = server.addr;
+
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = NetClient::connect(addr).unwrap();
+                c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+                c.classify("mock", &img(i as f32 * 0.1))
+            })
+        })
+        .collect();
+
+    // Let every request reach its handler (the 300ms backend is the only
+    // slow stage), then shut down while they are all mid-inference.
+    std::thread::sleep(Duration::from_millis(150));
+    let (elapsed, _) = shutdown_within(server, Duration::from_secs(8));
+    // Drain, not abort: shutdown waited for the in-flight replies...
+    assert!(elapsed < Duration::from_secs(6), "drain took {elapsed:?}");
+
+    // ...and every client got its answer.
+    for (i, h) in clients.into_iter().enumerate() {
+        let (logits, _) = h.join().unwrap().unwrap();
+        assert!((logits[0] - 4.0 * (i as f32 * 0.1)).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn shutdown_with_idle_connections_is_prompt() {
+    let router = router_with(4, Duration::ZERO);
+    // Long io_timeout: promptness must come from the drain logic
+    // (half-close waking idle readers), not from timeouts expiring.
+    let cfg = NetConfig { io_timeout: Duration::from_secs(60), ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+
+    let mut idle: Vec<NetClient> = (0..3)
+        .map(|_| {
+            let mut c = NetClient::connect(server.addr).unwrap();
+            c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+            c.classify("mock", &img(1.0)).unwrap();
+            c
+        })
+        .collect();
+    let (elapsed, metrics) = shutdown_within(server, Duration::from_secs(5));
+    assert!(elapsed < Duration::from_secs(3), "idle drain took {elapsed:?}");
+    assert_eq!(metrics.active_conns.load(Ordering::Relaxed), 0);
+    // Idle clients observe a clean close on their next round.
+    for c in idle.iter_mut() {
+        assert!(c.classify("mock", &img(1.0)).is_err());
+    }
+}
+
+// ------------------------------------------------------------------ health --
+
+#[test]
+fn health_reports_pool_and_queue_state() {
+    let router = router_with(4, Duration::ZERO);
+    let cfg = NetConfig { max_conns: 7, ..Default::default() };
+    let server = NetServer::serve_with("127.0.0.1:0", router, SPEC, cfg).unwrap();
+    let mut c = NetClient::connect(server.addr).unwrap();
+    c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let report = c.health().unwrap();
+    assert!(report.contains("ready=true"), "{report}");
+    assert!(report.contains("mock depth=0/1024 up"), "{report}");
+    assert!(report.contains("active_conns=1"), "{report}");
+    server.shutdown();
+}
