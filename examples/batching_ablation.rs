@@ -18,6 +18,7 @@ use lqr::coordinator::{Coordinator, CoordinatorConfig};
 use lqr::eval::TableFmt;
 use lqr::tensor::Tensor;
 use lqr::util::rng::Rng;
+use lqr::util::stats::percentile;
 
 /// Mock with batch-size-dependent cost: base 2 ms + 0.25 ms/row.
 struct AmortizedBackend;
@@ -55,7 +56,7 @@ fn run(max_batch: usize, max_wait_ms: u64, rate: f64, total: usize) -> (f64, f64
             rx
         })
         .collect();
-    let mut lat: Vec<f64> = rxs
+    let lat: Vec<f64> = rxs
         .into_iter()
         .map(|rx| {
             let r = rx.recv().unwrap().expect("mock backend never fails");
@@ -64,9 +65,9 @@ fn run(max_batch: usize, max_wait_ms: u64, rate: f64, total: usize) -> (f64, f64
         .collect();
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.shutdown();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
-    (total as f64 / wall, pct(0.5), pct(0.99), m.mean_batch_size())
+    // Same nearest-rank definition as serve_workload / Summary, so the
+    // ablation's tail numbers are comparable with the saturation bench.
+    (total as f64 / wall, percentile(&lat, 0.5), percentile(&lat, 0.99), m.mean_batch_size())
 }
 
 fn main() {

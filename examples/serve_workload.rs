@@ -1,29 +1,49 @@
-//! E2E serving driver (the repo's end-to-end validation run).
+//! E2E serving driver (the repo's end-to-end validation run) plus the
+//! saturation benchmark for the sharded batching core.
 //!
-//! Loads the trained MiniAlexNet artifacts, starts the coordinator with
-//! dynamic batching, drives a Poisson request stream sampled from the
-//! validation set at several arrival rates, and reports latency percentiles,
-//! throughput, achieved batch sizes and accuracy for both the f32 baseline
-//! and the 8-bit LQ variant. Recorded in EXPERIMENTS.md §E2E.
+//! Two modes:
+//!
+//! **Artifact mode** (default): loads the trained MiniAlexNet artifacts,
+//! starts the coordinator with dynamic batching, drives a Poisson request
+//! stream sampled from the validation set at several arrival rates, and
+//! reports latency percentiles (p50/p99/p999), throughput, achieved batch
+//! sizes and accuracy for both the f32 baseline and the 8-bit LQ variant.
+//! Recorded in EXPERIMENTS.md §E2E.
+//!
+//! **Saturation mode** (`--saturate`): needs no artifacts. Drives a
+//! fixed-cost synthetic backend to the throughput knee — ramping offered
+//! load from multiple submitter threads at 1/2/4/8 workers, sharded
+//! (one shard per worker, work stealing on) vs single-queue — and records
+//! p50/p99/p999 latency plus the peak sustained RPS per configuration to
+//! `BENCH_serve.json` at the repo root. `--smoke` shrinks the sweep to a
+//! few seconds for CI.
 //!
 //! ```sh
 //! cargo run --release --example serve_workload [artifacts_dir]
+//! cargo run --release --example serve_workload -- --saturate [--smoke]
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use lqr::coordinator::backend::{Backend, PjrtBackend};
-use lqr::coordinator::{Coordinator, CoordinatorConfig};
+use lqr::coordinator::{Coordinator, CoordinatorConfig, Priority, SubmitError};
 use lqr::dataset::Dataset;
 use lqr::eval::TableFmt;
+use lqr::tensor::Tensor;
 use lqr::util::rng::Rng;
+use lqr::util::stats::percentile;
+
+// ------------------------------------------------------------- artifacts --
 
 struct RunResult {
     throughput: f64,
     accuracy: f64,
     p50_ms: f64,
     p99_ms: f64,
+    p999_ms: f64,
     mean_batch: f64,
     errors: usize,
 }
@@ -61,9 +81,7 @@ fn drive(
                     rxs.push(rx);
                     break;
                 }
-                Err(lqr::coordinator::SubmitError::QueueFull(_)) => {
-                    std::thread::sleep(Duration::from_micros(100))
-                }
+                Err(SubmitError::QueueFull(_)) => std::thread::sleep(Duration::from_micros(100)),
                 // Shut down / dead pool: retrying can never succeed.
                 Err(e) => anyhow::bail!("submit failed: {e}"),
             }
@@ -89,21 +107,18 @@ fn drive(
     anyhow::ensure!(!lat_ms.is_empty(), "every request errored — nothing to report");
     let wall = t0.elapsed().as_secs_f64().max(submit_done.as_secs_f64());
     let m = coord.shutdown();
-    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let pct = |p: f64| lat_ms[((lat_ms.len() - 1) as f64 * p) as usize];
     Ok(RunResult {
         throughput: total as f64 / wall,
         accuracy: hits as f64 / (total - errors).max(1) as f64,
-        p50_ms: pct(0.50),
-        p99_ms: pct(0.99),
+        p50_ms: percentile(&lat_ms, 0.50),
+        p99_ms: percentile(&lat_ms, 0.99),
+        p999_ms: percentile(&lat_ms, 0.999),
         mean_batch: m.mean_batch_size(),
         errors,
     })
 }
 
-fn main() -> Result<()> {
-    lqr::util::logging::init();
-    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+fn artifact_mode(artifacts: &str) -> Result<()> {
     let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
     let total = 400;
 
@@ -116,13 +131,14 @@ fn main() -> Result<()> {
             "top-1",
             "p50 ms",
             "p99 ms",
+            "p999 ms",
             "mean batch",
             "errors",
         ],
     );
     for variant in ["f32", "lq"] {
         for rate in [100.0, 400.0, 1600.0] {
-            let r = drive(&artifacts, variant, rate, total, &ds)?;
+            let r = drive(artifacts, variant, rate, total, &ds)?;
             t.row(&[
                 variant.into(),
                 format!("{rate:.0}"),
@@ -130,6 +146,7 @@ fn main() -> Result<()> {
                 format!("{:.1}%", r.accuracy * 100.0),
                 format!("{:.2}", r.p50_ms),
                 format!("{:.2}", r.p99_ms),
+                format!("{:.2}", r.p999_ms),
                 format!("{:.2}", r.mean_batch),
                 r.errors.to_string(),
             ]);
@@ -137,4 +154,250 @@ fn main() -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+// ------------------------------------------------------------ saturation --
+
+/// Fixed-cost backend for the saturation sweep: cost(batch) = base +
+/// per_row * rows — the amortization regime where batching pays. Spin-free
+/// (sleep), so the measurement is the *scheduling plane*, not the CPU.
+struct SyntheticBackend {
+    base_us: u64,
+    per_row_us: u64,
+}
+
+impl Backend for SyntheticBackend {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        let n = batch.dim(0);
+        std::thread::sleep(Duration::from_micros(self.base_us + self.per_row_us * n as u64));
+        Ok(Tensor::zeros(&[n, 4]))
+    }
+
+    fn describe(&self) -> String {
+        "synthetic-fixed-cost".into()
+    }
+}
+
+const BASE_US: u64 = 200;
+const PER_ROW_US: u64 = 25;
+
+struct SatRow {
+    workers: usize,
+    mode: &'static str,
+    shards: usize,
+    steal: bool,
+    offered_rps: f64,
+    achieved_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    completed: u64,
+    errors: u64,
+}
+
+/// One measured point: `total` requests offered open-loop at `offered_rps`
+/// from `submitters` threads (~20% on the bulk lane); overflow is shed, not
+/// retried, so the offered rate stays honest under saturation.
+fn sat_point(
+    workers: usize,
+    mode: &'static str,
+    offered_rps: f64,
+    total: usize,
+    submitters: usize,
+) -> Result<SatRow> {
+    let shards = match mode {
+        "sharded" => workers,
+        _ => 1,
+    };
+    let cfg = CoordinatorConfig {
+        workers,
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 4096,
+        shards,
+        steal: mode == "sharded",
+        ..Default::default()
+    };
+    let steal = cfg.steal;
+    let coord = Arc::new(Coordinator::start(
+        cfg,
+        Box::new(|| {
+            Ok(Box::new(SyntheticBackend { base_us: BASE_US, per_row_us: PER_ROW_US })
+                as Box<dyn Backend>)
+        }),
+    )?);
+
+    let errors = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..submitters)
+        .map(|s| {
+            let coord = Arc::clone(&coord);
+            let errors = Arc::clone(&errors);
+            let per_thread = total / submitters;
+            let rate = offered_rps / submitters as f64;
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xBEEF + s as u64);
+                let mut rxs = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    let pri = if i % 5 == 0 { Priority::Bulk } else { Priority::Interactive };
+                    match coord.submit_with_options(Tensor::zeros(&[1, 1, 4, 4]), None, pri) {
+                        Ok(rx) => rxs.push(rx),
+                        // Open loop: overload is shed and counted, never
+                        // retried (retrying would throttle the offered rate).
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+                }
+                let mut lat_ms = Vec::with_capacity(rxs.len());
+                for rx in rxs {
+                    match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(Ok(r)) => {
+                            lat_ms.push((r.queue_time + r.execute_time).as_secs_f64() * 1e3)
+                        }
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                lat_ms
+            })
+        })
+        .collect();
+    let mut lat_ms = Vec::with_capacity(total);
+    for h in handles {
+        lat_ms.extend(h.join().expect("submitter thread panicked"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(!lat_ms.is_empty(), "every request errored at {offered_rps} req/s");
+    Ok(SatRow {
+        workers,
+        mode,
+        shards,
+        steal,
+        offered_rps,
+        achieved_rps: lat_ms.len() as f64 / wall,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p99_ms: percentile(&lat_ms, 0.99),
+        p999_ms: percentile(&lat_ms, 0.999),
+        completed: lat_ms.len() as u64,
+        errors: errors.load(Ordering::Relaxed),
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_bench_json(rows: &[SatRow], smoke: bool) -> std::io::Result<()> {
+    // Peak sustained RPS per (workers, mode): the knee of the ramp.
+    let mut peaks: Vec<(usize, &str, f64)> = Vec::new();
+    for r in rows {
+        match peaks.iter_mut().find(|(w, m, _)| *w == r.workers && *m == r.mode) {
+            Some(p) => p.2 = p.2.max(r.achieved_rps),
+            None => peaks.push((r.workers, r.mode, r.achieved_rps)),
+        }
+    }
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"serve_saturation\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!(
+        "  \"backend\": \"{}\",\n",
+        json_escape(&format!(
+            "synthetic: {BASE_US}us + {PER_ROW_US}us/row, max_batch=8, max_wait=2ms"
+        ))
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {}, \"mode\": \"{}\", \"shards\": {}, \"steal\": {}, \
+             \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \"p50_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"p999_ms\": {:.3}, \"completed\": {}, \"errors\": {}}}{}\n",
+            r.workers,
+            r.mode,
+            r.shards,
+            r.steal,
+            r.offered_rps,
+            r.achieved_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.p999_ms,
+            r.completed,
+            r.errors,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"peaks\": [\n");
+    for (i, (w, m, rps)) in peaks.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workers\": {w}, \"mode\": \"{m}\", \"peak_rps\": {rps:.1}}}{}\n",
+            if i + 1 < peaks.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, s)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn saturate_mode(smoke: bool) -> Result<()> {
+    let (worker_counts, ramp, total, submitters): (&[usize], &[f64], usize, usize) = if smoke {
+        (&[1, 4], &[1000.0, 4000.0], 400, 2)
+    } else {
+        (&[1, 2, 4, 8], &[500.0, 1000.0, 2000.0, 4000.0, 8000.0], 2000, 4)
+    };
+    let mut t = TableFmt::new(
+        &format!(
+            "Saturation ramp: synthetic backend ({BASE_US}us + {PER_ROW_US}us/row), \
+             sharded (1 shard/worker, stealing) vs single queue"
+        ),
+        &[
+            "workers",
+            "mode",
+            "offered req/s",
+            "achieved req/s",
+            "p50 ms",
+            "p99 ms",
+            "p999 ms",
+            "errors",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &workers in worker_counts {
+        for mode in ["single", "sharded"] {
+            for &rate in ramp {
+                let r = sat_point(workers, mode, rate, total, submitters)?;
+                t.row(&[
+                    workers.to_string(),
+                    mode.into(),
+                    format!("{rate:.0}"),
+                    format!("{:.0}", r.achieved_rps),
+                    format!("{:.2}", r.p50_ms),
+                    format!("{:.2}", r.p99_ms),
+                    format!("{:.2}", r.p999_ms),
+                    r.errors.to_string(),
+                ]);
+                rows.push(r);
+            }
+        }
+    }
+    t.print();
+    write_bench_json(&rows, smoke)?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--saturate") {
+        return saturate_mode(args.iter().any(|a| a == "--smoke"));
+    }
+    let artifacts =
+        args.iter().find(|a| !a.starts_with("--")).cloned().unwrap_or_else(|| "artifacts".into());
+    artifact_mode(&artifacts)
 }

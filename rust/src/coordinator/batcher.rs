@@ -1,30 +1,51 @@
-//! Bounded FIFO queue + dynamic batching policy + admission control.
+//! Sharded, shape-bucketed, lane-aware batching queue + admission control.
 //!
-//! The policy is the classic serving trade-off: a batch is released when
-//! either `max_batch` requests are queued (throughput) or the oldest queued
-//! request has waited `max_wait` (latency). The queue is bounded at
-//! `capacity`; when full, the [`ShedPolicy`] decides whether the *newest*
-//! request is rejected ([`SubmitError::QueueFull`]) or the *oldest* queued
-//! request is shed with a typed [`InferError::Shed`] reply to admit the new
-//! one — overload degrades latency-predictably instead of queue-deep.
+//! The seed design was one `Mutex+Condvar` FIFO; under many submitter
+//! threads the submit lock — not GEMM throughput — became the ceiling.
+//! This queue is rebuilt for saturation:
 //!
-//! Requests carry an optional deadline; [`BatchQueue::pop_batch`] expires
-//! stale requests with [`InferError::DeadlineExceeded`] *before* forming
-//! batches, so workers never burn cycles computing answers nobody is
-//! waiting for.
+//! - **N shards**, each its own `Mutex+Condvar`. A submitting thread is
+//!   pinned to one shard (submitter-local pick), so submit contention drops
+//!   ~N×. `BatchPolicy::shards` sizes the array.
+//! - **Shape buckets**: within a shard, requests group by image shape, and
+//!   a formed batch always comes from exactly one bucket — mixed-shape
+//!   traffic no longer fragments batches or triggers `ShapeMismatch`
+//!   screening in the worker. (One route owns one queue, so the effective
+//!   bucket key is `(route, shape)`.)
+//! - **Priority lanes**: each shard holds an interactive and a bulk lane
+//!   ([`Priority`]). When both lanes have releasable work, interactive
+//!   forms first; lane-aware shedding victimizes bulk first, and a bulk
+//!   arrival may never evict interactive work.
+//! - **Work stealing**: a worker drains its home shard
+//!   (`worker % shards`), then steals the *stalest* releasable bucket from
+//!   siblings (`BatchPolicy::steal`); an idle stealer re-scans every
+//!   [`IDLE_POLL`] so no shard strands behind a busy home worker. With
+//!   `steal` off every shard must be some worker's home
+//!   (`Coordinator::start` clamps `shards <= workers` in that mode).
 //!
-//! The queue also owns the coordinator's fail-fast state: when the
-//! supervisor declares the worker pool irrecoverably dead it calls
-//! [`BatchQueue::fail`], which flushes every queued request with
-//! [`InferError::NoWorkers`] and makes later submits return
-//! [`SubmitError::NoWorkers`] — no request ever hangs on a dead pool.
+//! Release rules per bucket are the classic trade-off, unchanged: a batch
+//! is released when the bucket holds `max_batch` requests (throughput) or
+//! its oldest request has waited `max_wait` (latency). The queue stays
+//! bounded at `capacity` **globally** across shards; at capacity the
+//! [`ShedPolicy`] either refuses the newcomer ([`SubmitError::QueueFull`])
+//! or evicts the *globally* stalest victim (per-shard heads are compared)
+//! with a typed [`InferError::Shed`] reply.
+//!
+//! All PR-5 semantics survive: deadlines expire inside
+//! [`BatchQueue::pop_batch_from`] with [`InferError::DeadlineExceeded`]
+//! before batch formation, and [`BatchQueue::fail`] flushes every shard
+//! with [`InferError::NoWorkers`] and makes later submits refuse — no
+//! request ever hangs on a dead pool. `tests/batch_scale.rs` pins the
+//! conservation invariant (every admitted request resolves exactly once)
+//! under concurrent submitters × workers.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferError, InferRequest, ShedReason};
+use crate::coordinator::request::{InferError, InferRequest, Priority, ShedReason};
 
 /// Why a batch was released (recorded in metrics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,9 +82,12 @@ pub enum ShedPolicy {
     /// Refuse the incoming request: `submit` returns
     /// [`SubmitError::QueueFull`] and the caller never gets a receiver.
     RejectNewest,
-    /// Admit the incoming request by shedding the oldest queued one; the
-    /// victim's receiver gets [`InferError::Shed`]. Favors fresh traffic —
-    /// the requests most likely to still have a waiting client.
+    /// Admit the incoming request by shedding the globally stalest queued
+    /// one; the victim's receiver gets [`InferError::Shed`]. Favors fresh
+    /// traffic — the requests most likely to still have a waiting client.
+    /// With priority lanes on, victims come from the bulk lane first, and
+    /// a bulk arrival may not victimize interactive work (it is refused
+    /// with [`SubmitError::QueueFull`] instead).
     DropOldest,
 }
 
@@ -83,8 +107,18 @@ impl ShedPolicy {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Global queue bound, across all shards and lanes.
     pub capacity: usize,
     pub shed: ShedPolicy,
+    /// Number of submission shards (>= 1).
+    pub shards: usize,
+    /// Workers steal releasable buckets from sibling shards when their
+    /// home shard has nothing to form. Off: each worker serves only its
+    /// home shard (callers must ensure `shards <= workers`).
+    pub steal: bool,
+    /// Schedule interactive ahead of bulk and shed bulk first. Off: every
+    /// request runs in one lane and [`Priority`] is ignored.
+    pub priority_lanes: bool,
 }
 
 impl Default for BatchPolicy {
@@ -94,37 +128,122 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             capacity: 1024,
             shed: ShedPolicy::RejectNewest,
+            shards: 1,
+            steal: true,
+            priority_lanes: true,
         }
     }
 }
 
-struct Inner {
+/// Floor on condvar waits so a near-zero remainder still yields the lock.
+const MIN_WAIT: Duration = Duration::from_micros(50);
+/// Re-scan period for an idle worker in multi-shard steal mode: sibling
+/// submits notify their own shard only, so a parked stealer polls. Bounded
+/// extra latency for stolen work; ~500 empty scans/s/worker when idle.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+/// Park bound when nothing is queued anywhere in scope. Purely a
+/// belt-and-braces backstop — shutdown/fail/submit all notify the condvar.
+const PARK: Duration = Duration::from_millis(50);
+
+/// One `(lane, shape)` formation bucket: FIFO within the bucket.
+struct Bucket {
+    shape: Vec<usize>,
     queue: VecDeque<InferRequest>,
-    shutdown: bool,
-    /// Fail-fast: pool irrecoverably dead. Submits refuse, workers exit.
-    failed: bool,
 }
 
-/// Thread-safe batching queue shared between submitters and workers.
+struct ShardInner {
+    /// `lanes[0]` interactive, `lanes[1]` bulk. Buckets are unordered;
+    /// formation picks by head age, not insertion order.
+    lanes: [Vec<Bucket>; 2],
+    lane_len: [usize; 2],
+    len: usize,
+}
+
+struct Shard {
+    inner: Mutex<ShardInner>,
+    cv: Condvar,
+}
+
+/// A releasable bucket found during a scan.
+struct Candidate {
+    lane: usize,
+    bucket: usize,
+    head: Instant,
+    reason: FlushReason,
+}
+
+/// Earliest future instant at which something in scope becomes actionable
+/// (a bucket crossing `max_wait`, or a request deadline expiring).
+#[derive(Default, Clone, Copy)]
+struct WaitHint {
+    next_event: Option<Instant>,
+}
+
+impl WaitHint {
+    fn note(&mut self, t: Instant) {
+        self.next_event = Some(match self.next_event {
+            Some(e) if e <= t => e,
+            _ => t,
+        });
+    }
+
+    fn wait_from(&self, now: Instant) -> Option<Duration> {
+        self.next_event.map(|e| e.saturating_duration_since(now).max(MIN_WAIT))
+    }
+}
+
+static NEXT_SUBMITTER: AtomicUsize = AtomicUsize::new(0);
+thread_local! {
+    /// Process-wide submitter slot: each submitting thread gets a stable
+    /// id on first submit, pinning it to one shard (`slot % shards`).
+    static SUBMITTER_SLOT: std::cell::Cell<Option<usize>> = std::cell::Cell::new(None);
+}
+
+fn submitter_slot() -> usize {
+    SUBMITTER_SLOT.with(|c| match c.get() {
+        Some(s) => s,
+        None => {
+            let s = NEXT_SUBMITTER.fetch_add(1, Ordering::Relaxed);
+            c.set(Some(s));
+            s
+        }
+    })
+}
+
+/// Thread-safe sharded batching queue shared between submitters and
+/// workers.
 pub struct BatchQueue {
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
-    inner: Mutex<Inner>,
-    cv: Condvar,
+    shards: Vec<Shard>,
+    /// Global depth; admission control compares it against `capacity`.
+    queued: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Fail-fast: pool irrecoverably dead. Submits refuse, workers exit.
+    failed: AtomicBool,
 }
 
 impl BatchQueue {
     pub fn new(policy: BatchPolicy, metrics: Arc<Metrics>) -> BatchQueue {
         assert!(policy.max_batch >= 1);
+        assert!(policy.shards >= 1, "need at least one shard");
+        let shards = (0..policy.shards)
+            .map(|_| Shard {
+                inner: Mutex::new(ShardInner {
+                    lanes: [Vec::new(), Vec::new()],
+                    lane_len: [0, 0],
+                    len: 0,
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
         BatchQueue {
             policy,
             metrics,
-            inner: Mutex::new(Inner {
-                queue: VecDeque::new(),
-                shutdown: false,
-                failed: false,
-            }),
-            cv: Condvar::new(),
+            shards,
+            queued: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
         }
     }
 
@@ -132,153 +251,437 @@ impl BatchQueue {
         self.policy
     }
 
-    /// Enqueue a request (FIFO). At capacity the [`ShedPolicy`] applies;
-    /// fails when shut down or the pool is dead.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Effective lane index for a request under this queue's policy.
+    fn lane_of(&self, p: Priority) -> usize {
+        if self.policy.priority_lanes {
+            p.lane()
+        } else {
+            0
+        }
+    }
+
+    /// Enqueue on the submitter-local shard. At capacity the [`ShedPolicy`]
+    /// applies; fails when shut down or the pool is dead.
     pub fn submit(&self, req: InferRequest) -> Result<(), SubmitError> {
-        let victim = {
-            let mut inner = self.inner.lock().unwrap();
-            if inner.failed {
-                return Err(SubmitError::NoWorkers);
-            }
-            if inner.shutdown {
-                return Err(SubmitError::ShutDown);
-            }
-            let victim = if inner.queue.len() >= self.policy.capacity {
-                match self.policy.shed {
-                    ShedPolicy::RejectNewest => {
-                        return Err(SubmitError::QueueFull(self.policy.capacity))
-                    }
-                    ShedPolicy::DropOldest => inner.queue.pop_front(),
+        self.submit_to(submitter_slot() % self.shards.len(), req)
+    }
+
+    /// Targeted submit for tests and benchmarks that need deterministic
+    /// placement; production callers want [`BatchQueue::submit`].
+    pub fn submit_to(&self, shard: usize, req: InferRequest) -> Result<(), SubmitError> {
+        if self.failed.load(Ordering::Acquire) {
+            return Err(SubmitError::NoWorkers);
+        }
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::ShutDown);
+        }
+        let lane = self.lane_of(req.priority);
+        // Admission control against the global bound. The load is racy
+        // across shards (exact when submission is single-threaded); the
+        // bound can transiently overshoot by at most the number of
+        // concurrent submitters.
+        let victim = if self.queued.load(Ordering::Acquire) >= self.policy.capacity {
+            match self.policy.shed {
+                ShedPolicy::RejectNewest => {
+                    return Err(SubmitError::QueueFull(self.policy.capacity))
                 }
-            } else {
-                None
-            };
-            inner.queue.push_back(req);
-            self.cv.notify_one();
-            victim
+                ShedPolicy::DropOldest => {
+                    let v = self.evict_stalest(lane);
+                    if v.is_none() {
+                        // Nothing this lane may victimize (e.g. a bulk
+                        // arrival with only interactive queued): refuse.
+                        return Err(SubmitError::QueueFull(self.policy.capacity));
+                    }
+                    v
+                }
+            }
+        } else {
+            None
         };
-        // Reply to the shed victim outside the lock.
+        let res = {
+            let mut g = self.shards[shard].inner.lock().unwrap();
+            // Re-check lifecycle under the shard lock: fail()/shutdown()
+            // raise the flag before sweeping the shards, so a submit that
+            // lost the race must refuse rather than strand a request in an
+            // already-swept shard.
+            if self.failed.load(Ordering::Acquire) {
+                Err(SubmitError::NoWorkers)
+            } else if self.shutdown.load(Ordering::Acquire) {
+                Err(SubmitError::ShutDown)
+            } else {
+                let inner = &mut *g;
+                let shape = req.image.shape().to_vec();
+                match inner.lanes[lane].iter_mut().find(|b| b.shape == shape) {
+                    Some(b) => b.queue.push_back(req),
+                    None => {
+                        let mut queue = VecDeque::new();
+                        queue.push_back(req);
+                        inner.lanes[lane].push(Bucket { shape, queue });
+                        self.metrics.bucket_opened();
+                    }
+                }
+                inner.lane_len[lane] += 1;
+                inner.len += 1;
+                self.queued.fetch_add(1, Ordering::AcqRel);
+                self.shards[shard].cv.notify_one();
+                Ok(())
+            }
+        };
+        if res.is_ok() {
+            self.metrics.lane_submitted[lane].fetch_add(1, Ordering::Relaxed);
+        }
+        // Reply to the shed victim outside the lock. Even if the push
+        // itself was refused, the victim was already evicted and owes its
+        // receiver a reply.
         if let Some(v) = victim {
+            self.metrics.lane_shed[self.lane_of(v.priority)].fetch_add(1, Ordering::Relaxed);
             v.respond_err(InferError::Shed { reason: ShedReason::DropOldest }, &self.metrics);
         }
-        Ok(())
+        res
     }
 
-    /// Current depth (approximate).
-    pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
-    }
-
-    /// Block until a batch is ready, the wait deadline of the oldest request
-    /// expires, or shutdown. Expired requests are replied
-    /// [`InferError::DeadlineExceeded`] and never occupy batch slots.
-    /// Returns `None` when shut down *and* empty, or when the pool has been
-    /// failed; FIFO order is preserved within and across batches.
-    pub fn pop_batch(&self) -> Option<(Vec<InferRequest>, FlushReason)> {
-        let mut inner = self.inner.lock().unwrap();
-        loop {
-            // Expire stale requests first (reply while holding the lock is
-            // fine: mpsc send never blocks and takes no lock of ours).
-            let now = Instant::now();
-            let mut i = 0;
-            while i < inner.queue.len() {
-                if inner.queue[i].expired(now) {
-                    if let Some(r) = inner.queue.remove(i) {
-                        r.respond_err(InferError::DeadlineExceeded, &self.metrics);
+    /// Evict the globally stalest queued request for a newcomer in
+    /// `incoming_lane`. Victim lanes: bulk first, then interactive — but a
+    /// bulk arrival may only victimize bulk. Compares per-shard heads,
+    /// locking one shard at a time.
+    fn evict_stalest(&self, incoming_lane: usize) -> Option<InferRequest> {
+        let order: &[usize] = if !self.policy.priority_lanes {
+            &[0]
+        } else if incoming_lane == 0 {
+            &[1, 0]
+        } else {
+            &[1]
+        };
+        for &lane in order {
+            loop {
+                let mut best: Option<(usize, Instant)> = None;
+                for (sid, shard) in self.shards.iter().enumerate() {
+                    let g = shard.inner.lock().unwrap();
+                    if let Some(h) = stalest_head(&g, lane) {
+                        if best.map_or(true, |(_, bh)| h < bh) {
+                            best = Some((sid, h));
+                        }
                     }
-                } else {
-                    i += 1;
+                }
+                let Some((sid, _)) = best else { break };
+                let mut g = self.shards[sid].inner.lock().unwrap();
+                match self.pop_stalest_locked(&mut g, lane) {
+                    Some(v) => return Some(v),
+                    // Raced with a pop on that shard; re-scan the lane.
+                    None => continue,
                 }
             }
-            if inner.failed {
+        }
+        None
+    }
+
+    /// Pop the stalest request in `lane` from a locked shard, maintaining
+    /// counters and bucket lifecycle.
+    fn pop_stalest_locked(&self, inner: &mut ShardInner, lane: usize) -> Option<InferRequest> {
+        let bi = inner.lanes[lane]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.queue.front().map(|r| (i, r.submitted_at)))
+            .min_by_key(|&(_, t)| t)
+            .map(|(i, _)| i)?;
+        let victim = inner.lanes[lane][bi].queue.pop_front()?;
+        if inner.lanes[lane][bi].queue.is_empty() {
+            inner.lanes[lane].swap_remove(bi);
+            self.metrics.bucket_closed();
+        }
+        inner.lane_len[lane] -= 1;
+        inner.len -= 1;
+        self.queued.fetch_sub(1, Ordering::AcqRel);
+        Some(victim)
+    }
+
+    /// Current global depth (approximate under concurrency).
+    pub fn depth(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Per-shard depths (each shard locked briefly in turn).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.inner.lock().unwrap().len).collect()
+    }
+
+    /// Queued requests per lane `[interactive, bulk]` across all shards.
+    pub fn lane_depths(&self) -> [usize; 2] {
+        let mut out = [0usize; 2];
+        for s in &self.shards {
+            let g = s.inner.lock().unwrap();
+            out[0] += g.lane_len[0];
+            out[1] += g.lane_len[1];
+        }
+        out
+    }
+
+    /// Compatibility wrapper: pop as the worker homed on shard 0.
+    pub fn pop_batch(&self) -> Option<(Vec<InferRequest>, FlushReason)> {
+        self.pop_batch_from(0)
+    }
+
+    /// Block until a batch can be formed for worker `worker` (home shard
+    /// `worker % shards`, then — with stealing on — the stalest releasable
+    /// bucket among siblings), the wait window of the oldest relevant
+    /// request expires, or shutdown. Expired requests are replied
+    /// [`InferError::DeadlineExceeded`] during every scan and never occupy
+    /// batch slots. Returns `None` when shut down *and* the worker's scope
+    /// is drained, or when the pool has been failed. FIFO order holds
+    /// within a bucket.
+    pub fn pop_batch_from(&self, worker: usize) -> Option<(Vec<InferRequest>, FlushReason)> {
+        let nshards = self.shards.len();
+        let home = worker % nshards;
+        let stealing = self.policy.steal && nshards > 1;
+        loop {
+            if self.failed.load(Ordering::Acquire) {
                 return None;
             }
-            if inner.queue.len() >= self.policy.max_batch {
-                let batch = drain(&mut inner.queue, self.policy.max_batch);
-                self.cv.notify_all(); // submitters may be watching depth
-                return Some((batch, FlushReason::Full));
+            let shutdown = self.shutdown.load(Ordering::Acquire);
+            let now = Instant::now();
+            let mut hint = WaitHint::default();
+            // Home shard first.
+            {
+                let mut g = self.shards[home].inner.lock().unwrap();
+                let inner = &mut *g;
+                self.expire_locked(inner, now);
+                if let Some(c) = self.best_candidate(inner, now, shutdown, &mut hint) {
+                    let batch = self.take_candidate(inner, &c);
+                    return Some((batch, c.reason));
+                }
             }
-            if !inner.queue.is_empty() {
-                let oldest = inner.queue.front().unwrap().submitted_at;
-                let elapsed = oldest.elapsed();
-                if elapsed >= self.policy.max_wait {
-                    let n = inner.queue.len().min(self.policy.max_batch);
-                    let batch = drain(&mut inner.queue, n);
-                    return Some((batch, FlushReason::Deadline));
+            // Steal pass 1: peek every sibling for its best releasable
+            // bucket; remember the stalest (interactive outranks bulk).
+            if stealing {
+                let mut best: Option<(usize, usize, Instant)> = None;
+                for off in 1..nshards {
+                    let sid = (home + off) % nshards;
+                    let mut g = self.shards[sid].inner.lock().unwrap();
+                    let inner = &mut *g;
+                    self.expire_locked(inner, now);
+                    if let Some(c) = self.best_candidate(inner, now, shutdown, &mut hint) {
+                        if best.map_or(true, |(_, l, h)| (c.lane, c.head) < (l, h)) {
+                            best = Some((sid, c.lane, c.head));
+                        }
+                    }
                 }
-                if inner.shutdown {
-                    let n = inner.queue.len().min(self.policy.max_batch);
-                    return Some((drain(&mut inner.queue, n), FlushReason::Shutdown));
+                // Pass 2: re-derive under the winner's lock (the bucket may
+                // have been taken meanwhile — then rescan from the top).
+                if let Some((sid, _, _)) = best {
+                    let mut g = self.shards[sid].inner.lock().unwrap();
+                    let inner = &mut *g;
+                    let now2 = Instant::now();
+                    self.expire_locked(inner, now2);
+                    let mut scratch = WaitHint::default();
+                    if let Some(c) = self.best_candidate(inner, now2, shutdown, &mut scratch) {
+                        let batch = self.take_candidate(inner, &c);
+                        self.metrics.steals.fetch_add(1, Ordering::Relaxed);
+                        return Some((batch, c.reason));
+                    }
+                    continue;
                 }
-                // Wait out the remaining flush window — or the nearest
-                // request deadline, whichever comes first, so expiry replies
-                // are prompt even under a long max_wait.
-                let mut wait = self.policy.max_wait - elapsed;
-                if let Some(dl) = inner.queue.iter().filter_map(|r| r.deadline).min() {
-                    wait = wait.min(dl.saturating_duration_since(now));
-                }
-                let (guard, _) = self
-                    .cv
-                    .wait_timeout(inner, wait.max(Duration::from_micros(50)))
-                    .unwrap();
-                inner = guard;
-            } else {
-                if inner.shutdown {
+            }
+            // Nothing releasable in scope.
+            if shutdown {
+                if self.queued.load(Ordering::Acquire) == 0 {
                     return None;
                 }
-                inner = self.cv.wait(inner).unwrap();
+                if !stealing && self.shards[home].inner.lock().unwrap().len == 0 {
+                    // Leftovers belong to other workers' home shards (or to
+                    // the final flush_pending sweep).
+                    return None;
+                }
+                // Releasable work exists in scope (shutdown makes every
+                // non-empty bucket releasable); rescan.
+                continue;
+            }
+            // Park on the home condvar. The candidate check re-runs under
+            // the lock so a submit racing the scan can't be slept through;
+            // sibling-shard arrivals are covered by the IDLE_POLL bound.
+            let mut g = self.shards[home].inner.lock().unwrap();
+            if self.shutdown.load(Ordering::Acquire) || self.failed.load(Ordering::Acquire) {
+                continue;
+            }
+            let inner = &mut *g;
+            let now2 = Instant::now();
+            if self.best_candidate(inner, now2, false, &mut hint).is_none() {
+                let mut wait = hint.wait_from(now2).unwrap_or(PARK);
+                if stealing {
+                    wait = wait.min(IDLE_POLL);
+                }
+                let _ = self.shards[home].cv.wait_timeout(g, wait).unwrap();
             }
         }
     }
 
-    /// Stop accepting new work; wake workers to drain the remainder.
+    /// Reply `DeadlineExceeded` to every expired request in a locked shard
+    /// (mpsc send never blocks and takes no lock of ours).
+    fn expire_locked(&self, inner: &mut ShardInner, now: Instant) {
+        for lane in 0..2 {
+            let mut bi = 0;
+            while bi < inner.lanes[lane].len() {
+                let mut removed = 0;
+                {
+                    let q = &mut inner.lanes[lane][bi].queue;
+                    let mut i = 0;
+                    while i < q.len() {
+                        if q[i].expired(now) {
+                            if let Some(r) = q.remove(i) {
+                                r.respond_err(InferError::DeadlineExceeded, &self.metrics);
+                                removed += 1;
+                            }
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                inner.lane_len[lane] -= removed;
+                inner.len -= removed;
+                if removed > 0 {
+                    self.queued.fetch_sub(removed, Ordering::AcqRel);
+                }
+                if inner.lanes[lane][bi].queue.is_empty() {
+                    inner.lanes[lane].swap_remove(bi);
+                    self.metrics.bucket_closed();
+                } else {
+                    bi += 1;
+                }
+            }
+        }
+    }
+
+    /// Find the bucket to form next in a locked shard: interactive lane
+    /// outranks bulk; within a lane, the stalest releasable bucket wins.
+    /// Non-releasable buckets contribute their release/deadline instants
+    /// to `hint` so the caller knows how long it may park.
+    fn best_candidate(
+        &self,
+        inner: &ShardInner,
+        now: Instant,
+        shutdown: bool,
+        hint: &mut WaitHint,
+    ) -> Option<Candidate> {
+        for lane in 0..2 {
+            let mut best: Option<Candidate> = None;
+            for (bi, b) in inner.lanes[lane].iter().enumerate() {
+                let Some(head) = b.queue.front() else { continue };
+                let head_t = head.submitted_at;
+                let reason = if b.queue.len() >= self.policy.max_batch {
+                    FlushReason::Full
+                } else if now.saturating_duration_since(head_t) >= self.policy.max_wait {
+                    FlushReason::Deadline
+                } else if shutdown {
+                    FlushReason::Shutdown
+                } else {
+                    hint.note(head_t + self.policy.max_wait);
+                    for r in &b.queue {
+                        if let Some(d) = r.deadline {
+                            hint.note(d);
+                        }
+                    }
+                    continue;
+                };
+                if best.as_ref().map_or(true, |c| head_t < c.head) {
+                    best = Some(Candidate { lane, bucket: bi, head: head_t, reason });
+                }
+            }
+            if best.is_some() {
+                return best;
+            }
+        }
+        None
+    }
+
+    /// Drain up to `max_batch` from the candidate bucket, maintaining
+    /// counters and removing the bucket if emptied.
+    fn take_candidate(&self, inner: &mut ShardInner, c: &Candidate) -> Vec<InferRequest> {
+        let (batch, emptied) = {
+            let bucket = &mut inner.lanes[c.lane][c.bucket];
+            let n = bucket.queue.len().min(self.policy.max_batch);
+            let batch: Vec<InferRequest> = bucket.queue.drain(..n).collect();
+            (batch, bucket.queue.is_empty())
+        };
+        if emptied {
+            inner.lanes[c.lane].swap_remove(c.bucket);
+            self.metrics.bucket_closed();
+        }
+        inner.lane_len[c.lane] -= batch.len();
+        inner.len -= batch.len();
+        self.queued.fetch_sub(batch.len(), Ordering::AcqRel);
+        batch
+    }
+
+    /// Stop accepting new work; wake workers everywhere to drain the
+    /// remainder.
     pub fn shutdown(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.shutdown = true;
-        self.cv.notify_all();
+        self.shutdown.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            let _g = shard.inner.lock().unwrap();
+            shard.cv.notify_all();
+        }
     }
 
     pub fn is_shutdown(&self) -> bool {
-        self.inner.lock().unwrap().shutdown
+        self.shutdown.load(Ordering::Acquire)
     }
 
-    /// Flip into the fail-fast state: every queued request is replied
-    /// [`InferError::NoWorkers`], later submits refuse with
-    /// [`SubmitError::NoWorkers`], and workers blocked in `pop_batch` wake
-    /// and exit. Called by the supervisor when the pool is irrecoverably
-    /// dead.
+    /// Flip into the fail-fast state: every queued request in every shard
+    /// is replied [`InferError::NoWorkers`], later submits refuse with
+    /// [`SubmitError::NoWorkers`], and workers blocked in
+    /// [`BatchQueue::pop_batch_from`] wake and exit. Called by the
+    /// supervisor when the pool is irrecoverably dead.
     pub fn fail(&self) {
-        let drained: Vec<InferRequest> = {
-            let mut inner = self.inner.lock().unwrap();
-            inner.failed = true;
-            self.cv.notify_all();
-            inner.queue.drain(..).collect()
-        };
-        for r in drained {
+        self.failed.store(true, Ordering::SeqCst);
+        for r in self.drain_all(true) {
             r.respond_err(InferError::NoWorkers, &self.metrics);
         }
     }
 
     pub fn is_failed(&self) -> bool {
-        self.inner.lock().unwrap().failed
+        self.failed.load(Ordering::Acquire)
     }
 
-    /// Teardown sweep: reply `err` to anything still queued. Used by
-    /// `Coordinator::shutdown` after the workers have exited, so a pool
-    /// that died mid-drain still resolves every outstanding receiver.
+    /// Teardown sweep: reply `err` to anything still queued in any shard.
+    /// Used by `Coordinator::shutdown` after the workers have exited, so a
+    /// pool that died mid-drain still resolves every outstanding receiver.
     pub fn flush_pending(&self, err: InferError) {
-        let drained: Vec<InferRequest> = {
-            let mut inner = self.inner.lock().unwrap();
-            inner.queue.drain(..).collect()
-        };
-        for r in drained {
+        for r in self.drain_all(false) {
             r.respond_err(err.clone(), &self.metrics);
         }
     }
+
+    fn drain_all(&self, notify: bool) -> Vec<InferRequest> {
+        let mut drained = Vec::new();
+        for shard in &self.shards {
+            let mut g = shard.inner.lock().unwrap();
+            let inner = &mut *g;
+            for lane in 0..2 {
+                for b in inner.lanes[lane].iter_mut() {
+                    drained.extend(b.queue.drain(..));
+                    self.metrics.bucket_closed();
+                }
+                inner.lanes[lane].clear();
+                inner.lane_len[lane] = 0;
+            }
+            self.queued.fetch_sub(inner.len, Ordering::AcqRel);
+            inner.len = 0;
+            if notify {
+                shard.cv.notify_all();
+            }
+        }
+        drained
+    }
 }
 
-fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
-    q.drain(..n).collect()
+fn stalest_head(inner: &ShardInner, lane: usize) -> Option<Instant> {
+    inner.lanes[lane]
+        .iter()
+        .filter_map(|b| b.queue.front().map(|r| r.submitted_at))
+        .min()
 }
 
 #[cfg(test)]
@@ -290,18 +693,36 @@ mod tests {
     use std::thread;
 
     fn req(id: u64) -> (InferRequest, mpsc::Receiver<InferReply>) {
-        req_ttl(id, None)
+        req_full(id, None, Priority::Interactive, &[1, 1, 2, 2])
     }
 
     fn req_ttl(id: u64, ttl: Option<Duration>) -> (InferRequest, mpsc::Receiver<InferReply>) {
+        req_full(id, ttl, Priority::Interactive, &[1, 1, 2, 2])
+    }
+
+    fn req_pri(id: u64, p: Priority) -> (InferRequest, mpsc::Receiver<InferReply>) {
+        req_full(id, None, p, &[1, 1, 2, 2])
+    }
+
+    fn req_shape(id: u64, shape: &[usize]) -> (InferRequest, mpsc::Receiver<InferReply>) {
+        req_full(id, None, Priority::Interactive, shape)
+    }
+
+    fn req_full(
+        id: u64,
+        ttl: Option<Duration>,
+        priority: Priority,
+        shape: &[usize],
+    ) -> (InferRequest, mpsc::Receiver<InferReply>) {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         (
             InferRequest {
                 id,
-                image: Tensor::zeros(&[1, 1, 2, 2]),
+                image: Tensor::zeros(shape),
                 submitted_at: now,
                 deadline: ttl.map(|d| now + d),
+                priority,
                 reply: tx,
             },
             rx,
@@ -310,7 +731,7 @@ mod tests {
 
     fn queue(max_batch: usize, max_wait: Duration, capacity: usize, shed: ShedPolicy) -> BatchQueue {
         BatchQueue::new(
-            BatchPolicy { max_batch, max_wait, capacity, shed },
+            BatchPolicy { max_batch, max_wait, capacity, shed, ..BatchPolicy::default() },
             Arc::new(Metrics::default()),
         )
     }
@@ -361,6 +782,7 @@ mod tests {
                 max_wait: Duration::from_secs(1),
                 capacity: 2,
                 shed: ShedPolicy::DropOldest,
+                ..BatchPolicy::default()
             },
             Arc::clone(&metrics),
         );
@@ -376,6 +798,7 @@ mod tests {
             other => panic!("expected Shed reply, got {other:?}"),
         }
         assert_eq!(metrics.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(metrics.lane_shed[0].load(std::sync::atomic::Ordering::Relaxed), 1);
         let (batch, _) = q.pop_batch().unwrap();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
     }
@@ -389,6 +812,7 @@ mod tests {
                 max_wait: Duration::from_secs(1),
                 capacity: 100,
                 shed: ShedPolicy::RejectNewest,
+                ..BatchPolicy::default()
             },
             Arc::clone(&metrics),
         );
@@ -435,6 +859,7 @@ mod tests {
         assert_eq!(q.submit(c), Err(SubmitError::NoWorkers));
         assert!(q.pop_batch().is_none(), "workers must exit a failed queue");
         assert_eq!(metrics.failed.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(q.depth(), 0);
     }
 
     #[test]
@@ -463,6 +888,8 @@ mod tests {
 
     #[test]
     fn fifo_across_batches_with_concurrent_worker() {
+        // One shard + one shape = one bucket: FIFO must hold across batch
+        // boundaries exactly as in the single-queue design.
         let q = Arc::new(queue(3, Duration::from_millis(5), 1000, ShedPolicy::RejectNewest));
         let qq = Arc::clone(&q);
         let collector = thread::spawn(move || {
@@ -484,5 +911,183 @@ mod tests {
         q.shutdown();
         let seen = collector.join().unwrap();
         assert_eq!(seen, (0..50).collect::<Vec<_>>(), "FIFO order violated");
+    }
+
+    #[test]
+    fn buckets_keep_batches_shape_homogeneous() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(10),
+                ..BatchPolicy::default()
+            },
+            Arc::clone(&metrics),
+        );
+        // Interleave two shapes; each pop must come from one bucket.
+        for i in 0..4 {
+            let (a, _ra) = req_shape(2 * i, &[1, 1, 2, 2]);
+            q.submit(a).unwrap();
+            let (b, _rb) = req_shape(2 * i + 1, &[1, 1, 3, 3]);
+            q.submit(b).unwrap();
+        }
+        assert_eq!(metrics.open_buckets.load(std::sync::atomic::Ordering::Relaxed), 2);
+        let (first, r1) = q.pop_batch().unwrap();
+        assert_eq!(r1, FlushReason::Full);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+        assert_eq!(first[0].image.shape(), &[1, 1, 2, 2]);
+        let (second, _) = q.pop_batch().unwrap();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+        assert_eq!(second[0].image.shape(), &[1, 1, 3, 3]);
+        assert_eq!(metrics.open_buckets.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(metrics.peak_buckets.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn interactive_forms_before_older_bulk() {
+        let q = queue(4, Duration::from_secs(10), 100, ShedPolicy::RejectNewest);
+        for i in 0..4 {
+            let (b, _rb) = req_pri(i, Priority::Bulk);
+            q.submit(b).unwrap();
+        }
+        for i in 4..8 {
+            let (r, _rr) = req_pri(i, Priority::Interactive);
+            q.submit(r).unwrap();
+        }
+        // Both lanes hold a full bucket; the bulk one is older, but the
+        // interactive lane must form first.
+        let (first, _) = q.pop_batch().unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        let (second, _) = q.pop_batch().unwrap();
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(q.lane_depths(), [0, 0]);
+    }
+
+    #[test]
+    fn priority_lanes_off_ignores_priority() {
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_secs(10),
+                priority_lanes: false,
+                ..BatchPolicy::default()
+            },
+            Arc::new(Metrics::default()),
+        );
+        let (b, _rb) = req_pri(0, Priority::Bulk);
+        let (i, _ri) = req_pri(1, Priority::Interactive);
+        q.submit(b).unwrap();
+        q.submit(i).unwrap();
+        // One lane: strict arrival order, bulk first.
+        let (batch, _) = q.pop_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn steal_drains_sibling_shard() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_secs(10),
+                shards: 2,
+                ..BatchPolicy::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let (r, _rx) = req(1);
+        q.submit_to(0, r).unwrap();
+        assert_eq!(q.shard_depths(), vec![1, 0]);
+        // Worker 1's home is shard 1 (empty): it must steal from shard 0.
+        let (batch, reason) = q.pop_batch_from(1).unwrap();
+        assert_eq!(batch[0].id, 1);
+        assert_eq!(reason, FlushReason::Full);
+        assert_eq!(metrics.steals.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn steal_prefers_stalest_sibling_bucket() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_secs(10),
+                shards: 3,
+                ..BatchPolicy::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let (a, _ra) = req(1); // older
+        std::thread::sleep(Duration::from_millis(2));
+        let (b, _rb) = req(2); // newer
+        q.submit_to(2, b).unwrap();
+        q.submit_to(1, a).unwrap();
+        // Worker 0's home (shard 0) is empty; between shards 1 and 2 it
+        // must steal the stalest head: request 1 in shard 1.
+        let (batch, _) = q.pop_batch_from(0).unwrap();
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_globally_stalest_across_shards() {
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(1),
+                capacity: 2,
+                shed: ShedPolicy::DropOldest,
+                shards: 2,
+                ..BatchPolicy::default()
+            },
+            Arc::new(Metrics::default()),
+        );
+        let (a, ra) = req(1); // oldest, lands in shard 0
+        std::thread::sleep(Duration::from_millis(2));
+        let (b, _rb) = req(2);
+        let (c, _rc) = req(3);
+        q.submit_to(0, a).unwrap();
+        q.submit_to(1, b).unwrap();
+        q.submit_to(1, c).unwrap(); // at capacity: must evict request 1 from shard 0
+        assert!(matches!(
+            ra.try_recv().unwrap(),
+            Err(InferError::Shed { reason: ShedReason::DropOldest })
+        ));
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.shard_depths(), vec![0, 2]);
+    }
+
+    #[test]
+    fn lane_aware_shed_victimizes_bulk_first() {
+        let metrics = Arc::new(Metrics::default());
+        let q = BatchQueue::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(1),
+                capacity: 2,
+                shed: ShedPolicy::DropOldest,
+                ..BatchPolicy::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let (i1, _ri1) = req_pri(1, Priority::Interactive);
+        let (b1, rb1) = req_pri(2, Priority::Bulk);
+        q.submit(i1).unwrap();
+        q.submit(b1).unwrap();
+        // Interactive arrival at capacity: the bulk request is the victim
+        // even though the interactive one is older.
+        let (i2, _ri2) = req_pri(3, Priority::Interactive);
+        q.submit(i2).unwrap();
+        assert!(matches!(
+            rb1.try_recv().unwrap(),
+            Err(InferError::Shed { reason: ShedReason::DropOldest })
+        ));
+        assert_eq!(metrics.lane_shed[1].load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(q.lane_depths(), [2, 0]);
+        // Bulk arrival with only interactive queued: refused, never evicts
+        // the interactive lane — even under drop-oldest.
+        let (b2, _rb2) = req_pri(4, Priority::Bulk);
+        assert_eq!(q.submit(b2), Err(SubmitError::QueueFull(2)));
+        assert_eq!(q.lane_depths(), [2, 0]);
+        assert_eq!(metrics.lane_shed[0].load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 }

@@ -36,6 +36,19 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     /// Batches released by deadline rather than size.
     pub deadline_flushes: AtomicU64,
+    /// Batches a worker formed from a shard other than its home shard.
+    pub steals: AtomicU64,
+    /// Requests admitted per lane (index 0 = interactive, 1 = bulk).
+    pub lane_submitted: [AtomicU64; 2],
+    /// Drop-oldest victims shed per lane. Lane-aware shedding victimizes
+    /// bulk first, so under mixed overload `lane_shed[1]` grows before
+    /// `lane_shed[0]`. Reject-newest refusals land in `rejected`, not here
+    /// (the request was never admitted).
+    pub lane_shed: [AtomicU64; 2],
+    /// Live `(shard, lane, shape)` formation buckets (gauge).
+    pub open_buckets: AtomicU64,
+    /// High-water mark of `open_buckets`.
+    pub peak_buckets: AtomicU64,
     pub queue_hist: Mutex<LatencyHistogram>,
     pub execute_hist: Mutex<LatencyHistogram>,
     pub e2e_hist: Mutex<LatencyHistogram>,
@@ -67,6 +80,18 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A formation bucket came into existence; maintains the gauge and its
+    /// high-water mark.
+    pub fn bucket_opened(&self) {
+        let now = self.open_buckets.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_buckets.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// A formation bucket emptied and was removed.
+    pub fn bucket_closed(&self) {
+        self.open_buckets.fetch_sub(1, Ordering::Relaxed);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -82,7 +107,8 @@ impl Metrics {
         let q = self.queue_hist.lock().unwrap();
         format!(
             "submitted={} completed={} failed={} shed={} expired={} rejected={} \
-             restarts={} batches={} mean_batch={:.2} deadline_flushes={} | \
+             restarts={} batches={} mean_batch={:.2} deadline_flushes={} \
+             steals={} lane_submitted={}/{} lane_shed={}/{} peak_buckets={} | \
              e2e p50={:?} p99={:?} | exec mean={:?} | queue mean={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -94,6 +120,12 @@ impl Metrics {
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.deadline_flushes.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+            self.lane_submitted[0].load(Ordering::Relaxed),
+            self.lane_submitted[1].load(Ordering::Relaxed),
+            self.lane_shed[0].load(Ordering::Relaxed),
+            self.lane_shed[1].load(Ordering::Relaxed),
+            self.peak_buckets.load(Ordering::Relaxed),
             e2e.quantile(0.5),
             e2e.quantile(0.99),
             exe.mean(),
@@ -188,6 +220,26 @@ mod tests {
         assert_eq!(m.expired.load(Ordering::Relaxed), 1);
         let s = m.summary();
         assert!(s.contains("failed=4") && s.contains("shed=1") && s.contains("expired=1"));
+    }
+
+    #[test]
+    fn bucket_gauge_tracks_high_water_mark() {
+        let m = Metrics::default();
+        m.bucket_opened();
+        m.bucket_opened();
+        m.bucket_opened();
+        m.bucket_closed();
+        m.bucket_closed();
+        assert_eq!(m.open_buckets.load(Ordering::Relaxed), 1);
+        assert_eq!(m.peak_buckets.load(Ordering::Relaxed), 3);
+        m.steals.fetch_add(2, Ordering::Relaxed);
+        m.lane_submitted[0].fetch_add(5, Ordering::Relaxed);
+        m.lane_shed[1].fetch_add(4, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("steals=2"), "{s}");
+        assert!(s.contains("lane_submitted=5/0"), "{s}");
+        assert!(s.contains("lane_shed=0/4"), "{s}");
+        assert!(s.contains("peak_buckets=3"), "{s}");
     }
 
     #[test]

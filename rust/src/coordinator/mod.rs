@@ -14,9 +14,11 @@
 //! isolated by batch bisection, and overload is shed by policy instead of
 //! queueing unboundedly. See `docs/serving-robustness.md`.
 //!
-//! - [`request`]  — request/response/error types (the reply protocol).
-//! - [`batcher`]  — bounded FIFO queue, batch formation, deadline expiry,
-//!   shed policy, fail-fast state.
+//! - [`request`]  — request/response/error types (the reply protocol) and
+//!   the [`request::Priority`] scheduling lanes.
+//! - [`batcher`]  — sharded bounded queues, shape-bucketed batch formation,
+//!   work-stealing pop, priority lanes, deadline expiry, shed policy,
+//!   fail-fast state.
 //! - [`backend`]  — execution backends: PJRT artifacts or the native engine.
 //! - [`worker`]   — supervised worker threads + poison-batch bisection.
 //! - [`server`]   — the public [`server::Coordinator`] facade.
@@ -35,8 +37,8 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{ShedPolicy, SubmitError};
+pub use batcher::{BatchPolicy, BatchQueue, ShedPolicy, SubmitError};
 pub use net::{ClientError, ImageSpec, NetClient, NetConfig, NetServer, WireError, WireStatus};
-pub use request::{InferError, InferReply, InferRequest, InferResponse, ShedReason};
+pub use request::{InferError, InferReply, InferRequest, InferResponse, Priority, ShedReason};
 pub use router::{RouteError, Router};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -4,12 +4,17 @@
 //!
 //! Wire format (little-endian):
 //! ```text
-//! request : u32 route_len | route utf8 | u32 n_floats | n_floats x f32 (CHW image)
+//! request : u32 route_len | route utf8 | [u8 lane] | u32 n_floats | n_floats x f32 (CHW image)
 //! reply   : u8 status (see WireStatus) |
 //!           Ok:      u32 n_logits | n x f32 | u32 predicted
 //!           Health:  u32 len | report utf8
 //!           errors:  u32 len | message utf8
 //! ```
+//! The lane byte is present only when bit 31 of `route_len` ([`LANE_FLAG`])
+//! is set; it selects the scheduling lane
+//! ([`Priority`](crate::coordinator::request::Priority): 0 = interactive,
+//! 1 = bulk). Untagged frames — everything an older client sends — default
+//! to the interactive lane, so the extension is backward compatible.
 //! One request per round; connections are persistent (clients pipeline
 //! rounds sequentially). The accept loop and per-connection handlers run on
 //! plain threads (the vendor set has no async runtime — and the payloads are
@@ -55,12 +60,20 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::metrics::NetMetrics;
+use crate::coordinator::request::Priority;
 use crate::coordinator::router::{RouteError, Router};
 use crate::tensor::Tensor;
 
 /// Built-in route answered by the server itself with a readiness report
 /// ([`WireStatus::Health`] reply). Model routes with this name are shadowed.
 pub const HEALTH_ROUTE: &str = "health";
+
+/// Flag bit on `route_len` marking a lane-tagged frame: one priority byte
+/// follows the route name. Route lengths are bounded by
+/// `NetConfig::max_route_len` (far below 2^31), so bit 31 is free; old
+/// clients never set it, and an old server sees a flagged length as an
+/// oversized route and rejects the frame rather than desyncing.
+pub const LANE_FLAG: u32 = 0x8000_0000;
 
 // ---------------------------------------------------------------- status --
 
@@ -217,8 +230,9 @@ pub struct ImageSpec {
 /// One parsed request frame.
 enum Frame {
     /// Well-formed inference request (payload length already validated
-    /// against the [`ImageSpec`]).
-    Infer { route: String, image: Vec<f32> },
+    /// against the [`ImageSpec`]). `lane_tagged` records whether the frame
+    /// carried the optional lane byte (exact byte accounting).
+    Infer { route: String, image: Vec<f32>, priority: Priority, lane_tagged: bool },
     /// The [`HEALTH_ROUTE`] built-in.
     Health,
     /// Client closed cleanly at a frame boundary.
@@ -267,14 +281,16 @@ fn discard(r: &mut impl Read, mut n: u64) -> Result<(), FrameError> {
 /// corresponding allocation: the largest buffer this function creates is
 /// `min(route_len, max_route_len)` + the spec-validated image payload.
 fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Frame, FrameError> {
-    let route_len = match rd_u32(r) {
-        Ok(n) => n as u64,
+    let raw_len = match rd_u32(r) {
+        Ok(n) => n,
         // EOF at the frame boundary is a clean close. (`read_exact` can't
         // distinguish 0-of-4 from 2-of-4 bytes; a client dying mid-prefix
         // folds into the same outcome, which costs nothing.)
         Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(Frame::Eof),
         Err(e) => return Err(FrameError::Io(e)),
     };
+    let lane_tagged = raw_len & LANE_FLAG != 0;
+    let route_len = (raw_len & !LANE_FLAG) as u64;
     if route_len > cfg.max_route_len as u64 {
         return Err(FrameError::fatal(
             WireStatus::BadFrame,
@@ -283,9 +299,16 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
     }
     let mut route = vec![0u8; route_len as usize];
     r.read_exact(&mut route).map_err(FrameError::Io)?;
+    let lane_byte = if lane_tagged {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).map_err(FrameError::Io)?;
+        Some(b[0])
+    } else {
+        None
+    };
     let n_floats = rd_u32(r).map_err(FrameError::Io)? as u64;
     let payload_bytes = n_floats * 4;
-    let frame_bytes = 8 + route_len + payload_bytes;
+    let frame_bytes = 8 + route_len + lane_tagged as u64 + payload_bytes;
     if frame_bytes > cfg.max_frame_bytes as u64 {
         return Err(FrameError::fatal(
             WireStatus::BadFrame,
@@ -297,6 +320,19 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
     }
     // From here the payload is within the frame budget: it can be skipped,
     // so content errors reply in sync and the connection keeps serving.
+    let priority = match lane_byte {
+        None => Priority::default(),
+        Some(b) => match Priority::from_wire(b) {
+            Some(p) => p,
+            None => {
+                discard(r, payload_bytes)?;
+                return Err(FrameError::in_sync(
+                    WireStatus::BadRequest,
+                    format!("unknown lane tag {b}"),
+                ));
+            }
+        },
+    };
     let route = match String::from_utf8(route) {
         Ok(s) => s,
         Err(_) => {
@@ -332,7 +368,7 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    Ok(Frame::Infer { route, image })
+    Ok(Frame::Infer { route, image, priority, lane_tagged })
 }
 
 // --------------------------------------------------------------- replies --
@@ -677,13 +713,14 @@ fn handle_conn(
                 let out = write_msg(&mut writer, WireStatus::Health, &report)?;
                 metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
             }
-            Ok(Frame::Infer { route, image }) => {
+            Ok(Frame::Infer { route, image, priority, lane_tagged }) => {
                 metrics.frames.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .bytes_in
-                    .fetch_add(8 + route.len() as u64 + image.len() as u64 * 4, Ordering::Relaxed);
+                metrics.bytes_in.fetch_add(
+                    8 + route.len() as u64 + lane_tagged as u64 + image.len() as u64 * 4,
+                    Ordering::Relaxed,
+                );
                 let img = Tensor::new(&[1, spec.c, spec.h, spec.w], image);
-                let out = match router.infer_typed(&route, img) {
+                let out = match router.infer_typed_with(&route, img, priority) {
                     Ok(resp) => write_ok(&mut writer, &resp.logits, resp.predicted)?,
                     Err(e) => {
                         let (status, msg) = WireStatus::of_route_error(&e);
@@ -828,12 +865,34 @@ impl NetClient {
     }
 
     /// Classify one CHW image on `route`; returns (logits, predicted).
+    /// Sends an untagged frame (interactive lane) — byte-compatible with
+    /// pre-lane servers.
     pub fn classify(
         &mut self,
         route: &str,
         image: &Tensor,
     ) -> Result<(Vec<f32>, usize), ClientError> {
-        self.send_frame(route, image.data())?;
+        self.classify_frame(route, image, None)
+    }
+
+    /// [`NetClient::classify`] with an explicit scheduling lane (sends a
+    /// lane-tagged frame — requires a lane-aware server).
+    pub fn classify_with_priority(
+        &mut self,
+        route: &str,
+        image: &Tensor,
+        priority: Priority,
+    ) -> Result<(Vec<f32>, usize), ClientError> {
+        self.classify_frame(route, image, Some(priority))
+    }
+
+    fn classify_frame(
+        &mut self,
+        route: &str,
+        image: &Tensor,
+        lane: Option<Priority>,
+    ) -> Result<(Vec<f32>, usize), ClientError> {
+        self.send_frame(route, image.data(), lane)?;
         match self.read_reply()? {
             Reply::Ok(logits, predicted) => Ok((logits, predicted)),
             Reply::Msg(status, message) => Err(ClientError::Wire(WireError { status, message })),
@@ -842,7 +901,7 @@ impl NetClient {
 
     /// Query the [`HEALTH_ROUTE`] built-in; returns the report text.
     pub fn health(&mut self) -> Result<String, ClientError> {
-        self.send_frame(HEALTH_ROUTE, &[])?;
+        self.send_frame(HEALTH_ROUTE, &[], None)?;
         match self.read_reply()? {
             Reply::Msg(WireStatus::Health, report) => Ok(report),
             Reply::Msg(status, message) => Err(ClientError::Wire(WireError { status, message })),
@@ -853,9 +912,21 @@ impl NetClient {
         }
     }
 
-    fn send_frame(&mut self, route: &str, floats: &[f32]) -> Result<(), ClientError> {
-        self.writer.write_all(&(route.len() as u32).to_le_bytes())?;
+    fn send_frame(
+        &mut self,
+        route: &str,
+        floats: &[f32],
+        lane: Option<Priority>,
+    ) -> Result<(), ClientError> {
+        let mut len = route.len() as u32;
+        if lane.is_some() {
+            len |= LANE_FLAG;
+        }
+        self.writer.write_all(&len.to_le_bytes())?;
         self.writer.write_all(route.as_bytes())?;
+        if let Some(p) = lane {
+            self.writer.write_all(&[p.to_wire()])?;
+        }
         self.writer.write_all(&(floats.len() as u32).to_le_bytes())?;
         for v in floats {
             self.writer.write_all(&v.to_le_bytes())?;
@@ -1091,13 +1162,81 @@ mod tests {
                 _ => panic!("expected in-sync BadRequest"),
             }
             match read_frame(&mut r, SPEC, &cfg) {
-                Ok(Frame::Infer { route, image }) => {
+                Ok(Frame::Infer { route, image, priority, lane_tagged }) => {
                     assert_eq!(route, "mock");
                     assert_eq!(image, vec![2.0; 4]);
+                    assert_eq!(priority, Priority::Interactive, "untagged defaults interactive");
+                    assert!(!lane_tagged);
                 }
                 _ => panic!("stream must stay in sync after an in-sync reject"),
             }
         }
+    }
+
+    /// A lane-tagged frame: `LANE_FLAG` set on `route_len`, one lane byte
+    /// between the route and the float count.
+    fn lane_frame(route: &str, lane: u8, floats: &[f32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&(route.len() as u32 | LANE_FLAG).to_le_bytes());
+        b.extend_from_slice(route.as_bytes());
+        b.push(lane);
+        b.extend_from_slice(&(floats.len() as u32).to_le_bytes());
+        for v in floats {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parser_decodes_lane_tag() {
+        let cfg = NetConfig::default();
+        match parse(&lane_frame("mock", 1, &[1.0; 4]), &cfg) {
+            Ok(Frame::Infer { route, priority, lane_tagged, .. }) => {
+                assert_eq!(route, "mock");
+                assert_eq!(priority, Priority::Bulk);
+                assert!(lane_tagged);
+            }
+            _ => panic!("lane-tagged frame must parse"),
+        }
+        match parse(&lane_frame("mock", 0, &[1.0; 4]), &cfg) {
+            Ok(Frame::Infer { priority, .. }) => assert_eq!(priority, Priority::Interactive),
+            _ => panic!("lane 0 must parse"),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_unknown_lane_in_sync() {
+        let cfg = NetConfig::default();
+        let mut stream = lane_frame("mock", 7, &[1.0; 4]);
+        stream.extend_from_slice(&valid_frame("mock", &[2.0; 4]));
+        let mut r = std::io::Cursor::new(stream);
+        match read_frame(&mut r, SPEC, &cfg) {
+            Err(FrameError::Reject { status: WireStatus::BadRequest, fatal: false, message }) => {
+                assert!(message.contains("lane"), "{message}");
+            }
+            _ => panic!("unknown lane must be an in-sync BadRequest"),
+        }
+        match read_frame(&mut r, SPEC, &cfg) {
+            Ok(Frame::Infer { route, .. }) => assert_eq!(route, "mock"),
+            _ => panic!("stream must stay in sync after a bad lane tag"),
+        }
+    }
+
+    #[test]
+    fn lane_tagged_round_trip_over_tcp() {
+        let router = test_router();
+        let server = NetServer::serve("127.0.0.1:0", Arc::clone(&router), SPEC).unwrap();
+        let mut client = NetClient::connect(server.addr).unwrap();
+        let img = Tensor::filled(&[1, 1, 2, 2], 0.5);
+        let (logits, _) = client.classify_with_priority("mock", &img, Priority::Bulk).unwrap();
+        assert_eq!(logits[0], 2.0);
+        let (logits, _) =
+            client.classify_with_priority("mock", &img, Priority::Interactive).unwrap();
+        assert_eq!(logits[0], 2.0);
+        let m = router.coordinator("mock").unwrap().metrics();
+        assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 1, "bulk lane tag must land");
+        assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 1);
+        server.shutdown();
     }
 
     #[test]

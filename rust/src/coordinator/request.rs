@@ -15,6 +15,59 @@ use crate::tensor::Tensor;
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
+/// Scheduling lane for a request. Interactive traffic is formed into
+/// batches ahead of bulk whenever both lanes have releasable work, and
+/// lane-aware shedding victimizes bulk first — see
+/// `docs/serving-robustness.md` ("Scale plane").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default): scheduled first, shed last.
+    #[default]
+    Interactive,
+    /// Throughput traffic (offline scoring, backfills): scheduled when no
+    /// interactive batch is releasable, and the first lane shed under
+    /// overload.
+    Bulk,
+}
+
+impl Priority {
+    /// Parse a CLI-style name (`interactive` | `bulk`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "bulk" => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+
+    /// Wire encoding of the lane tag (the optional trailing byte after the
+    /// route name — see `coordinator/net.rs`).
+    pub fn to_wire(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Bulk => 1,
+        }
+    }
+
+    /// Decode the wire lane tag; `None` for unknown bytes (typed
+    /// `BadRequest` at the ingress, never a default-lane guess).
+    pub fn from_wire(b: u8) -> Option<Priority> {
+        match b {
+            0 => Some(Priority::Interactive),
+            1 => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+
+    /// Stable lane index: 0 = interactive, 1 = bulk.
+    pub fn lane(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Bulk => 1,
+        }
+    }
+}
+
 /// Why a request was shed before execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShedReason {
@@ -91,6 +144,9 @@ pub struct InferRequest {
     /// Absolute deadline; requests still queued past it are expired with
     /// [`InferError::DeadlineExceeded`] instead of occupying batch slots.
     pub deadline: Option<Instant>,
+    /// Scheduling lane (interactive vs bulk); ignored when the queue runs
+    /// with priority lanes disabled.
+    pub priority: Priority,
     /// Completion channel; exactly one [`InferReply`] is sent.
     pub reply: mpsc::Sender<InferReply>,
 }
@@ -174,6 +230,7 @@ mod tests {
             image: Tensor::zeros(&[1, 1, 2, 2]),
             submitted_at: now,
             deadline: Some(now + Duration::from_millis(5)),
+            priority: Priority::default(),
             reply: tx,
         };
         assert!(!r.expired(now));
@@ -189,6 +246,7 @@ mod tests {
             image: Tensor::zeros(&[1, 1, 2, 2]),
             submitted_at: Instant::now(),
             deadline: None,
+            priority: Priority::default(),
             reply: tx,
         };
         r.respond_err(InferError::DeadlineExceeded, &m);
@@ -201,6 +259,20 @@ mod tests {
         let e = InferError::ShapeMismatch { expected: vec![1, 1, 2, 2], got: vec![1, 1, 3, 3] };
         assert!(e.to_string().contains("[1, 1, 3, 3]"));
         assert!(InferError::NoWorkers.to_string().contains("no live workers"));
+    }
+
+    #[test]
+    fn priority_parse_and_wire_round_trip() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("bulk"), Some(Priority::Bulk));
+        assert_eq!(Priority::parse("nope"), None);
+        for p in [Priority::Interactive, Priority::Bulk] {
+            assert_eq!(Priority::from_wire(p.to_wire()), Some(p));
+        }
+        assert_eq!(Priority::from_wire(2), None);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::Interactive.lane(), 0);
+        assert_eq!(Priority::Bulk.lane(), 1);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::SubmitError;
-use crate::coordinator::request::{InferError, InferReply, InferResponse};
+use crate::coordinator::request::{InferError, InferReply, InferResponse, Priority};
 use crate::coordinator::server::{Coordinator, CoordinatorConfig};
 use crate::tensor::Tensor;
 
@@ -90,11 +90,22 @@ impl Router {
     /// This is the wire path's entry point (`coordinator/net.rs` maps each
     /// variant onto a `WireStatus` code).
     pub fn infer_typed(&self, route: &str, image: Tensor) -> Result<InferResponse, RouteError> {
+        self.infer_typed_with(route, image, Priority::default())
+    }
+
+    /// [`Router::infer_typed`] with an explicit scheduling lane (the wire
+    /// path decodes the optional lane byte into this).
+    pub fn infer_typed_with(
+        &self,
+        route: &str,
+        image: Tensor,
+        priority: Priority,
+    ) -> Result<InferResponse, RouteError> {
         let c = self
             .routes
             .get(route)
             .ok_or_else(|| RouteError::NoRoute(route.to_string()))?;
-        let rx = c.submit(image).map_err(RouteError::Rejected)?;
+        let rx = c.submit_with_options(image, None, priority).map_err(RouteError::Rejected)?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
             Ok(Err(e)) => Err(RouteError::Infer(e)),
@@ -171,6 +182,19 @@ mod tests {
             RouteError::Infer(InferError::DeadlineExceeded).to_string(),
             InferError::DeadlineExceeded.to_string()
         );
+    }
+
+    #[test]
+    fn lane_tag_reaches_route_metrics() {
+        let mut r = Router::new();
+        r.add_route("a", CoordinatorConfig::default(), factory(2)).unwrap();
+        let img = Tensor::filled(&[1, 1, 2, 2], 1.0);
+        r.infer_typed_with("a", img.clone(), Priority::Bulk).unwrap();
+        r.infer_typed_with("a", img, Priority::Interactive).unwrap();
+        let m = r.coordinator("a").unwrap().metrics();
+        use std::sync::atomic::Ordering;
+        assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 1);
+        assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use anyhow::Result;
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, ShedPolicy, SubmitError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferError, InferReply, InferRequest, InferResponse};
+use crate::coordinator::request::{InferError, InferReply, InferRequest, InferResponse, Priority};
 use crate::coordinator::worker::{supervise, SupervisorConfig};
 use crate::tensor::Tensor;
 
@@ -46,6 +46,16 @@ pub struct CoordinatorConfig {
     /// Base supervisor backoff before a restart; doubles per consecutive
     /// failure, capped at 1s.
     pub restart_backoff: Duration,
+    /// Submission shards (0 = auto: one per worker). More shards cut
+    /// submit-lock contention; work stealing keeps them all drained.
+    pub shards: usize,
+    /// Let an idle worker steal the stalest releasable bucket from sibling
+    /// shards. With stealing off, `shards` is clamped to `workers` so every
+    /// shard has a home worker.
+    pub steal: bool,
+    /// Schedule the interactive lane ahead of bulk and shed bulk first
+    /// (see [`Priority`]).
+    pub priority_lanes: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -60,6 +70,9 @@ impl Default for CoordinatorConfig {
             retry_budget: 16,
             restart_limit: 5,
             restart_backoff: Duration::from_millis(10),
+            shards: 0,
+            steal: true,
+            priority_lanes: true,
         }
     }
 }
@@ -82,12 +95,21 @@ impl Coordinator {
     pub fn start(config: CoordinatorConfig, factory: BackendFactory) -> Result<Coordinator> {
         anyhow::ensure!(config.workers >= 1, "need at least one worker");
         let metrics = Arc::new(Metrics::default());
+        // Shard resolution: 0 = one shard per worker. Without stealing a
+        // shard with no home worker would never drain, so clamp.
+        let mut shards = if config.shards == 0 { config.workers } else { config.shards };
+        if !config.steal {
+            shards = shards.min(config.workers);
+        }
         let queue = Arc::new(BatchQueue::new(
             BatchPolicy {
                 max_batch: config.max_batch,
                 max_wait: config.max_wait,
                 capacity: config.queue_capacity,
                 shed: config.shed,
+                shards: shards.max(1),
+                steal: config.steal,
+                priority_lanes: config.priority_lanes,
             },
             Arc::clone(&metrics),
         ));
@@ -133,6 +155,17 @@ impl Coordinator {
         image: Tensor,
         ttl: Option<Duration>,
     ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
+        self.submit_with_options(image, ttl, Priority::default())
+    }
+
+    /// Full-control submission: explicit TTL and scheduling lane. The lane
+    /// is advisory when the queue runs with priority lanes disabled.
+    pub fn submit_with_options(
+        &self,
+        image: Tensor,
+        ttl: Option<Duration>,
+        priority: Priority,
+    ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
@@ -141,6 +174,7 @@ impl Coordinator {
             image,
             submitted_at: now,
             deadline: ttl.or(self.default_deadline).map(|d| now + d),
+            priority,
             reply: tx,
         };
         match self.queue.submit(req) {
@@ -171,7 +205,17 @@ impl Coordinator {
         image: Tensor,
         ttl: Option<Duration>,
     ) -> Result<InferResponse> {
-        let rx = self.submit_with_deadline(image, ttl).map_err(anyhow::Error::from)?;
+        self.infer_with_options(image, ttl, Priority::default())
+    }
+
+    /// [`Coordinator::infer`] with an explicit TTL and scheduling lane.
+    pub fn infer_with_options(
+        &self,
+        image: Tensor,
+        ttl: Option<Duration>,
+        priority: Priority,
+    ) -> Result<InferResponse> {
+        let rx = self.submit_with_options(image, ttl, priority).map_err(anyhow::Error::from)?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
             Ok(Err(e)) => Err(anyhow::Error::from(e)),
@@ -187,6 +231,16 @@ impl Coordinator {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.depth()
+    }
+
+    /// Queued requests per submission shard (diagnostics / tests).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.queue.shard_depths()
+    }
+
+    /// Queued requests per lane: `[interactive, bulk]`.
+    pub fn lane_depths(&self) -> [usize; 2] {
+        self.queue.lane_depths()
     }
 
     /// Configured queue capacity (the `queue_capacity` knob), for health /
@@ -343,6 +397,76 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn sharded_config_completes_all_requests() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 512,
+            shards: 4,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
+        assert_eq!(c.shard_depths().len(), 4);
+        let rxs: Vec<_> = (0..128).map(|i| c.submit(img(i as f32)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32, "response routed to wrong request");
+        }
+        let m = c.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 128);
+    }
+
+    #[test]
+    fn no_steal_clamps_shards_to_workers() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 256,
+            shards: 8,
+            steal: false,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, mock_factory(0, calls)).unwrap();
+        // 8 requested shards, but without stealing only a worker's home
+        // shard ever drains — must clamp to the worker count.
+        assert_eq!(c.shard_depths().len(), 2);
+        let rxs: Vec<_> = (0..32).map(|i| c.submit(img(i as f32)).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn priority_submissions_complete_on_both_lanes() {
+        let calls = Arc::new(AU64::new(0));
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 256,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, mock_factory(1, calls)).unwrap();
+        let rxs: Vec<_> = (0..32)
+            .map(|i| {
+                let pri = if i % 2 == 0 { Priority::Interactive } else { Priority::Bulk };
+                c.submit_with_options(img(i as f32), None, pri).unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let m = c.shutdown();
+        assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 16);
+        assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 16);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::backend::BackendFactory;
 use crate::coordinator::batcher::{BatchQueue, FlushReason};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferError, InferRequest, InferResponse};
+use crate::coordinator::request::{InferError, InferRequest, InferResponse, Priority};
 use crate::tensor::Tensor;
 
 /// Supervision parameters (plumbed from `CoordinatorConfig`).
@@ -246,7 +246,9 @@ fn worker_main(
     };
     let _ = events.send(WorkerEvent::Ready(slot));
     log::info!("worker {slot}: {}", backend.describe());
-    while let Some((batch, reason)) = queue.pop_batch() {
+    // The slot index doubles as the worker's home-shard identity: slot i
+    // drains shard `i % shards` first and steals from siblings after.
+    while let Some((batch, reason)) = queue.pop_batch_from(slot) {
         if let BatchOutcome::WorkerPoisoned(msg) =
             run_batch(&mut *backend, batch, reason, metrics, retry_budget)
         {
@@ -429,6 +431,7 @@ pub fn run_one(
         image,
         submitted_at: Instant::now(),
         deadline: None,
+        priority: Priority::default(),
         reply: tx,
     };
     let _ = run_batch(backend, vec![req], FlushReason::Full, &Metrics::default(), 1);
@@ -461,6 +464,7 @@ mod tests {
                 image: Tensor::filled(&[1, 1, 2, 2], v),
                 submitted_at: Instant::now(),
                 deadline: None,
+                priority: Priority::default(),
                 reply: tx,
             },
             rx,
@@ -562,6 +566,7 @@ mod tests {
             image: Tensor::filled(&[1, 1, 3, 3], 1.0),
             submitted_at: Instant::now(),
             deadline: None,
+            priority: Priority::default(),
             reply: tx,
         };
         let out = run_batch(&mut b, vec![r0, odd], FlushReason::Full, &metrics, 4);

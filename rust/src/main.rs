@@ -80,6 +80,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("max-wait-ms", "5", "batch deadline in milliseconds")
         .flag("deadline-ms", "0", "per-request TTL in milliseconds (0 = no deadline)")
         .flag("shed", "reject-newest", "overload policy: reject-newest | drop-oldest")
+        .flag("shards", "0", "submission queue shards (0 = one per worker)")
+        .flag("steal", "true", "idle workers steal stale buckets from sibling shards")
+        .flag("priority-lanes", "true", "interactive lane forms first, bulk sheds first")
         .flag("rate", "200", "request arrival rate (Poisson, req/s)")
         .flag("requests", "500", "total requests to send")
         .parse_from(argv)
@@ -98,6 +101,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         queue_capacity: 4096,
         shed,
         default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        shards: p.get_usize("shards"),
+        steal: p.get_bool("steal"),
+        priority_lanes: p.get_bool("priority-lanes"),
         ..Default::default()
     };
     let ds = Dataset::load(format!("{artifacts}/data"), "val")?;
@@ -170,6 +176,9 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
         .flag("workers", "1", "workers per route")
         .flag("max-batch", "8", "dynamic batch cap")
         .flag("max-wait-ms", "5", "batch deadline (ms)")
+        .flag("shards", "0", "submission queue shards per route (0 = one per worker)")
+        .flag("steal", "true", "idle workers steal stale buckets from sibling shards")
+        .flag("priority-lanes", "true", "interactive lane forms first, bulk sheds first")
         .flag("max-conns", "64", "handler pool size; excess connections get a Busy reply")
         .flag("io-timeout-ms", "10000", "per-connection read/write timeout (0 = no timeout)")
         .flag("max-frame-bytes", "16777216", "hard cap on one request frame's total bytes")
@@ -197,6 +206,9 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
                     max_batch: p.get_usize("max-batch"),
                     max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
                     queue_capacity: 4096,
+                    shards: p.get_usize("shards"),
+                    steal: p.get_bool("steal"),
+                    priority_lanes: p.get_bool("priority-lanes"),
                     ..Default::default()
                 },
                 Box::new(move || {

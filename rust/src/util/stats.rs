@@ -24,6 +24,16 @@ pub fn bench_iters<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> 
         .collect()
 }
 
+/// Nearest-rank percentile over an unsorted sample (`p` in [0, 1]).
+/// The single percentile definition shared by [`Summary`], the serving
+/// examples and the saturation bench, so their tail numbers agree.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    assert!(!values.is_empty(), "percentile of empty sample");
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted[(((sorted.len() - 1) as f64) * p).round() as usize]
+}
+
 /// Summary statistics over a sample of durations or values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
@@ -34,6 +44,7 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -54,6 +65,7 @@ impl Summary {
             p50: pct(0.50),
             p95: pct(0.95),
             p99: pct(0.99),
+            p999: pct(0.999),
             max: sorted[n - 1],
         }
     }
@@ -66,12 +78,14 @@ impl Summary {
     /// Render with a unit scale, e.g. `fmt(1e3, "ms")`.
     pub fn fmt(&self, scale: f64, unit: &str) -> String {
         format!(
-            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} min={:.3}{u} max={:.3}{u}",
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} p999={:.3}{u} \
+             min={:.3}{u} max={:.3}{u}",
             self.n,
             self.mean * scale,
             self.p50 * scale,
             self.p95 * scale,
             self.p99 * scale,
+            self.p999 * scale,
             self.min * scale,
             self.max * scale,
             u = unit
@@ -163,6 +177,18 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p999, 5.0);
+    }
+
+    #[test]
+    fn percentile_matches_summary_definition() {
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&vals);
+        assert_eq!(percentile(&vals, 0.50), s.p50);
+        assert_eq!(percentile(&vals, 0.99), s.p99);
+        assert_eq!(percentile(&vals, 0.999), s.p999);
+        // Tail order on a big sample: p50 < p99 < p999 <= max.
+        assert!(s.p50 < s.p99 && s.p99 < s.p999 && s.p999 <= s.max);
     }
 
     #[test]

@@ -13,12 +13,16 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use lqr::coordinator::backend::{Backend, MockBackend};
+use lqr::coordinator::batcher::{BatchPolicy, BatchQueue};
+use lqr::coordinator::metrics::Metrics;
+use lqr::coordinator::request::InferRequest;
 use lqr::coordinator::{
-    Coordinator, CoordinatorConfig, InferError, InferReply, ShedPolicy, ShedReason, SubmitError,
+    Coordinator, CoordinatorConfig, InferError, InferReply, Priority, ShedPolicy, ShedReason,
+    SubmitError,
 };
 use lqr::tensor::Tensor;
 
@@ -442,11 +446,14 @@ fn shutdown_under_load_resolves_every_receiver() {
 }
 
 #[test]
-fn mixed_shape_request_gets_typed_error_neighbors_survive() {
+fn mixed_shape_requests_form_separate_batches_all_complete() {
+    // Shape-bucketed formation: an odd-shaped request lands in its own
+    // bucket and its own batch instead of poisoning its neighbors' batch
+    // with a ShapeMismatch. Everyone completes; no batch ever mixes shapes.
     let cfg = CoordinatorConfig {
         workers: 1,
         max_batch: 4,
-        max_wait: Duration::from_millis(500),
+        max_wait: Duration::from_millis(1),
         queue_capacity: 256,
         ..Default::default()
     };
@@ -460,19 +467,18 @@ fn mixed_shape_request_gets_typed_error_neighbors_survive() {
     let rx_odd = coord.submit(Tensor::filled(&[1, 1, 3, 3], 1.0)).unwrap();
     let rx3 = coord.submit(img(3.0)).unwrap();
     for (rx, v) in [(rx0, 0.0), (rx1, 4.0), (rx3, 12.0)] {
-        let resp = resolve(rx).expect("same-shape request must survive the odd one");
+        let resp = resolve(rx).expect("same-shape request must complete");
         assert_eq!(resp.logits[0], v);
     }
-    match resolve(rx_odd) {
-        Err(InferError::ShapeMismatch { expected, got }) => {
-            assert_eq!(expected, vec![1, 1, 2, 2]);
-            assert_eq!(got, vec![1, 1, 3, 3]);
-        }
-        other => panic!("expected ShapeMismatch, got {other:?}"),
-    }
+    // The odd shape completes too — in a single-request batch of its own
+    // bucket ([1,1,3,3] filled with 1.0 sums to 9 per row).
+    let resp = resolve(rx_odd).expect("odd-shaped request completes in its own bucket");
+    assert_eq!(resp.logits[0], 9.0);
     let m = coord.shutdown();
-    assert_eq!(m.completed.load(Ordering::Relaxed), 3);
-    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 4);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    // At least two backend invocations: the two shapes can never share one.
+    assert!(m.batches.load(Ordering::Relaxed) >= 2, "shapes must not share a batch");
 }
 
 #[test]
@@ -559,4 +565,244 @@ fn backpressure_then_recovery_keeps_serving() {
     let m = coord.shutdown();
     assert_eq!(m.rejected.load(Ordering::Relaxed), rejected as u64);
     assert_eq!(m.shed.load(Ordering::Relaxed), rejected as u64);
+}
+
+#[test]
+fn lane_flood_sheds_bulk_before_interactive() {
+    // Flood both lanes past capacity under drop-oldest with priority lanes
+    // on. Lane-aware shedding must victimize bulk first: interactive
+    // arrivals evict queued bulk, and once only interactive remains a bulk
+    // arrival is refused outright (bulk may never evict interactive).
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 4,
+        shed: ShedPolicy::DropOldest,
+        shards: 1,
+        priority_lanes: true,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(mock(4, Duration::from_millis(50))) as Box<dyn Backend>)),
+    )
+    .unwrap();
+
+    // Head request occupies the single worker, freezing the queue for 50 ms
+    // — the whole flood below lands inside that window.
+    let head = coord.submit_with_options(img(0.0), None, Priority::Interactive).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+
+    // Fill capacity with bulk, then push interactive past capacity: each
+    // interactive arrival must evict the stalest queued *bulk* request.
+    let bulk_rxs: Vec<_> = (0..4)
+        .map(|i| coord.submit_with_options(img(i as f32), None, Priority::Bulk).unwrap())
+        .collect();
+    let inter_rxs: Vec<_> = (0..4)
+        .map(|i| coord.submit_with_options(img(10.0 + i as f32), None, Priority::Interactive))
+        .collect::<Result<_, _>>()
+        .unwrap();
+
+    // Queue now holds only interactive; further bulk arrivals cannot evict
+    // across lanes and are refused in-line as QueueFull.
+    let mut bulk_refused = 0;
+    for i in 0..2 {
+        match coord.submit_with_options(img(20.0 + i as f32), None, Priority::Bulk) {
+            Err(SubmitError::QueueFull(_)) => bulk_refused += 1,
+            other => panic!("bulk must not evict interactive, got {other:?}"),
+        }
+    }
+    assert_eq!(bulk_refused, 2);
+
+    // Every evicted bulk request resolves typed as drop-oldest shed.
+    for rx in bulk_rxs {
+        match resolve(rx) {
+            Err(InferError::Shed { reason: ShedReason::DropOldest }) => {}
+            other => panic!("evicted bulk must resolve Shed(DropOldest), got {other:?}"),
+        }
+    }
+    // The head and every interactive survivor complete.
+    assert!(resolve(head).is_ok());
+    for rx in inter_rxs {
+        assert!(resolve(rx).is_ok(), "interactive must survive the flood");
+    }
+
+    let m = coord.shutdown();
+    // Shed accounting is lane-exact: all four drop-oldest evictions hit the
+    // bulk lane, none hit interactive; the two inline refusals land in
+    // rejected (and the shed total) but not in the lane-eviction counters.
+    assert_eq!(m.lane_shed[1].load(Ordering::Relaxed), 4, "bulk evictions");
+    assert_eq!(m.lane_shed[0].load(Ordering::Relaxed), 0, "interactive never victimized");
+    assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 5);
+    assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 4);
+    assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(m.shed.load(Ordering::Relaxed), 4 + 2);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 5);
+}
+
+#[test]
+fn pool_failure_flushes_every_shard_typed() {
+    // Deterministic per-shard flush: queue work onto every shard of a
+    // multi-shard queue directly, then fail the pool. Each shard must flush
+    // its queued requests with typed NoWorkers — no shard may strand work.
+    let q = BatchQueue::new(
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 1024,
+            shed: ShedPolicy::RejectNewest,
+            shards: 4,
+            steal: true,
+            priority_lanes: true,
+        },
+        Arc::new(Metrics::default()),
+    );
+    let mut rxs = Vec::new();
+    for shard in 0..4 {
+        for i in 0..8 {
+            let (tx, rx) = mpsc::channel();
+            let priority = if i % 2 == 0 { Priority::Interactive } else { Priority::Bulk };
+            q.submit_to(
+                shard,
+                InferRequest {
+                    id: (shard * 8 + i) as u64,
+                    image: img(i as f32),
+                    submitted_at: Instant::now(),
+                    deadline: None,
+                    priority,
+                    reply: tx,
+                },
+            )
+            .unwrap();
+            rxs.push(rx);
+        }
+    }
+    assert_eq!(q.depth(), 32);
+    assert!(q.shard_depths().iter().all(|&d| d == 8), "every shard holds queued work");
+
+    q.fail();
+    for rx in rxs {
+        match resolve(rx) {
+            Err(InferError::NoWorkers) => {}
+            other => panic!("failed pool must flush NoWorkers, got {other:?}"),
+        }
+    }
+    assert_eq!(q.depth(), 0);
+    assert!(q.shard_depths().iter().all(|&d| d == 0), "no shard strands work after fail");
+    assert_eq!(q.lane_depths(), [0, 0]);
+
+    // And the fail-fast state refuses new work on every shard, in-line.
+    for shard in 0..4 {
+        let (tx, _rx) = mpsc::channel();
+        let req = InferRequest {
+            id: 1000 + shard as u64,
+            image: img(0.0),
+            submitted_at: Instant::now(),
+            deadline: None,
+            priority: Priority::Interactive,
+            reply: tx,
+        };
+        assert!(matches!(q.submit_to(shard, req), Err(SubmitError::NoWorkers)));
+    }
+}
+
+#[test]
+fn pool_death_mid_flood_resolves_all_shards_typed() {
+    // Kill the whole pool while a multi-submitter flood is in flight on a
+    // sharded queue. Every outstanding receiver — across all shards and
+    // both lanes — must resolve typed (success, BackendFailed for the
+    // detonating batches, NoWorkers for flushed/late work). No hangs, and
+    // no shard may hold residual depth once everything has resolved.
+    let attempts = Arc::new(AtomicU64::new(0));
+    let a2 = Arc::clone(&attempts);
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 2048,
+        restart_limit: 2,
+        restart_backoff: Duration::from_millis(1),
+        shards: 4,
+        steal: true,
+        priority_lanes: true,
+        ..Default::default()
+    };
+    let coord = Arc::new(
+        Coordinator::start(
+            cfg,
+            Box::new(move || {
+                // The two initial workers come up panic-prone; every respawn
+                // fails, so two detonations kill the pool for good.
+                if a2.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Ok(Box::new(PanicOnMagic { inner: mock(4, Duration::from_millis(1)) })
+                        as Box<dyn Backend>)
+                } else {
+                    anyhow::bail!("backend gone")
+                }
+            }),
+        )
+        .unwrap(),
+    );
+
+    // Phase 1: four submitter threads flood the bulk lane. Distinct threads
+    // land on distinct submitter slots, spreading work across shards.
+    let handles: Vec<_> = (0..4)
+        .map(|s| {
+            let c = Arc::clone(&coord);
+            std::thread::spawn(move || {
+                (0..60)
+                    .map(|i| c.submit_with_options(img((s * 60 + i) as f32), None, Priority::Bulk))
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut outcomes: Vec<Result<mpsc::Receiver<InferReply>, SubmitError>> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert!(coord.queue_depth() > 0, "flood must outpace the 1ms-per-batch workers");
+
+    // Phase 2: two interactive poison requests jump the bulk backlog.
+    // Spaced out so each detonating batch kills a distinct worker; with the
+    // factory refusing respawns, the second detonation kills the pool while
+    // most of the bulk flood is still queued.
+    outcomes.push(coord.submit_with_options(img(500.0), None, Priority::Interactive));
+    std::thread::sleep(Duration::from_millis(10));
+    outcomes.push(coord.submit_with_options(img(500.0), None, Priority::Interactive));
+
+    // Phase 3: late arrivals race the fail-fast flip — each is either
+    // accepted (then flushed) or refused in-line; both outcomes are typed.
+    for i in 0..50 {
+        outcomes.push(coord.submit_with_options(img(i as f32), None, Priority::Interactive));
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
+    let (mut ok, mut backend_failed, mut no_workers, mut refused) = (0u64, 0u64, 0u64, 0u64);
+    for outcome in outcomes {
+        match outcome {
+            Ok(rx) => match resolve(rx) {
+                Ok(_) => ok += 1,
+                Err(InferError::BackendFailed { .. }) => backend_failed += 1,
+                Err(InferError::NoWorkers) => no_workers += 1,
+                Err(other) => panic!("unexpected error kind: {other:?}"),
+            },
+            Err(SubmitError::NoWorkers) => refused += 1,
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    assert_eq!(ok + backend_failed + no_workers + refused, 240 + 2 + 50);
+    assert!(backend_failed >= 2, "both poison requests resolve typed");
+    assert!(no_workers > 0, "the dead pool must flush queued work typed");
+
+    // The pool is fail-fast, and no shard stranded a request: every shard
+    // and both lanes drained to zero through replies, not drops.
+    let t0 = Instant::now();
+    while !coord.is_failed() {
+        assert!(t0.elapsed() < RECV_TIMEOUT, "pool never entered fail-fast state");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(coord.queue_depth(), 0);
+    assert!(coord.shard_depths().iter().all(|&d| d == 0), "no shard strands work");
+    assert_eq!(coord.lane_depths(), [0, 0]);
+    let m = Arc::try_unwrap(coord).ok().expect("sole owner").shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), ok);
 }
