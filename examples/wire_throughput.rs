@@ -1,0 +1,294 @@
+//! Wire hot-path benchmark: the zero-copy serving changes, measured.
+//!
+//! Three sections, no artifacts needed (synthetic weights + mock backend):
+//!
+//! 1. **Wire throughput** — a `NetServer` over a mock route at MiniAlexNet
+//!    frame geometry (3x32x32 = 12 KiB payloads), driven closed-loop by
+//!    1/2/4 pipelining clients. Records requests/sec, requests/sec/core and
+//!    p50/p99 round latency. This path exercises the pooled frame buffers,
+//!    the image-recycle ring and the gathered single-write replies.
+//! 2. **Model-load latency** — a MiniAlexNet-sized npz synthesized in
+//!    memory, loaded through the copy-free path (single read, parse from
+//!    slice, move storage into tensors). Records archive bytes and load ms.
+//! 3. **Panel sharing** — one shared engine pre-warmed at LQ-2: resident
+//!    panel bytes for the shared cache vs what N private per-worker engines
+//!    would hold. The N× saving is the shared-Engine tentpole, in bytes.
+//!
+//! Results land in `BENCH_wire.json` at the repo root. `--smoke` shrinks
+//! the sweep for CI.
+//!
+//! ```sh
+//! cargo run --release --example wire_throughput [-- --smoke]
+//! ```
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lqr::coordinator::backend::{shared_native_factory, Backend, MockBackend};
+use lqr::coordinator::net::{ImageSpec, NetClient, NetServer};
+use lqr::coordinator::router::Router;
+use lqr::coordinator::CoordinatorConfig;
+use lqr::eval::TableFmt;
+use lqr::nn::{Arch, Engine, Layer, Precision};
+use lqr::tensor::{npz_bytes, NpzData, NpzEntry, Tensor};
+use lqr::util::rng::Rng;
+use lqr::util::stats::percentile;
+
+/// MiniAlexNet frame geometry: what a real deployment ships per request.
+const SPEC: ImageSpec = ImageSpec { c: 3, h: 32, w: 32 };
+
+// -------------------------------------------------------- wire throughput --
+
+struct WireRow {
+    clients: usize,
+    requests: usize,
+    rps: f64,
+    rps_per_core: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn wire_throughput(clients: usize, per_client: usize) -> Result<WireRow> {
+    let mut r = Router::new();
+    r.add_route(
+        "mock",
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 4096,
+            ..Default::default()
+        },
+        Box::new(|| {
+            Ok(Box::new(MockBackend {
+                classes: 16,
+                delay: Duration::ZERO,
+                calls: Arc::new(AtomicU64::new(0)),
+            }) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+    let server = NetServer::serve("127.0.0.1:0", Arc::new(r), SPEC)?;
+    let addr = server.addr;
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|id| {
+            std::thread::spawn(move || -> Result<Vec<f64>> {
+                let mut c = NetClient::connect(addr)?;
+                c.set_io_timeout(Some(Duration::from_secs(30)))?;
+                let img = Tensor::filled(&[1, SPEC.c, SPEC.h, SPEC.w], 0.25 + id as f32 * 0.1);
+                let mut lat_ms = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    let (logits, _) = c.classify("mock", &img).map_err(anyhow::Error::from)?;
+                    lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    assert_eq!(logits.len(), 16);
+                }
+                Ok(lat_ms)
+            })
+        })
+        .collect();
+    let mut lat_ms = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        lat_ms.extend(h.join().expect("client thread panicked")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let total = clients * per_client;
+    Ok(WireRow {
+        clients,
+        requests: total,
+        rps: total as f64 / wall,
+        rps_per_core: total as f64 / wall / cores as f64,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p99_ms: percentile(&lat_ms, 0.99),
+    })
+}
+
+// ------------------------------------------------------------- model load --
+
+/// Synthesize a MiniAlexNet-shaped npz archive in memory (same member
+/// names/shapes as `make artifacts` writes, random values).
+fn synth_weights(arch: &Arch) -> Vec<u8> {
+    let mut rng = Rng::new(0xBE9C);
+    let mut entries = Vec::new();
+    for l in &arch.layers {
+        let (wshape, blen): (Vec<usize>, usize) = match *l {
+            Layer::Conv { cin, cout, k, groups, .. } => (vec![cout, cin / groups, k, k], cout),
+            Layer::Fc { cin, cout, .. } => (vec![cin, cout], cout),
+        };
+        let n: usize = wshape.iter().product();
+        entries.push(NpzEntry {
+            name: format!("{}.w", l.name()),
+            shape: wshape,
+            data: NpzData::F32(rng.normal_vec(n).iter().map(|v| v * 0.1).collect()),
+        });
+        entries.push(NpzEntry {
+            name: format!("{}.b", l.name()),
+            shape: vec![blen],
+            data: NpzData::F32(rng.normal_vec(blen)),
+        });
+    }
+    npz_bytes(&entries)
+}
+
+struct LoadResult {
+    archive_bytes: usize,
+    load_ms: f64,
+    params: usize,
+    engine: Engine,
+}
+
+fn model_load() -> Result<LoadResult> {
+    let arch = Arch::minialexnet();
+    let archive = synth_weights(&arch);
+    let archive_bytes = archive.len();
+    let path = std::env::temp_dir().join("lqr_wire_throughput_weights.npz");
+    std::fs::write(&path, &archive)?;
+    // Copy-free load: one file read, parse from slice, storage moved (not
+    // cloned) into the engine's tensors.
+    let t0 = Instant::now();
+    let engine = Engine::from_npz(arch, &path)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _ = std::fs::remove_file(&path);
+    let params = engine.arch.param_count();
+    Ok(LoadResult { archive_bytes, load_ms, params, engine })
+}
+
+// ---------------------------------------------------------- panel sharing --
+
+struct PanelResult {
+    panels: usize,
+    panel_bytes: usize,
+    prewarm_ms: f64,
+    workers: usize,
+    shared_bytes: usize,
+    unshared_bytes: usize,
+}
+
+fn panel_sharing(engine: Engine, workers: usize) -> PanelResult {
+    let engine = Arc::new(engine);
+    let precision = Precision::lq(2);
+    let t0 = Instant::now();
+    let (factory, warmed) = shared_native_factory(Arc::clone(&engine), precision);
+    let prewarm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Build every worker's backend; all attach to the one warmed cache.
+    let _backends: Vec<_> = (0..workers).map(|_| factory().unwrap()).collect();
+    let stats = engine.panel_stats();
+    assert_eq!(warmed, stats.panels, "pre-warm must account for every panel");
+    PanelResult {
+        panels: stats.panels,
+        panel_bytes: stats.bytes,
+        prewarm_ms,
+        workers,
+        shared_bytes: stats.bytes,
+        // What N per-worker private engines would resident-hold: one full
+        // panel set each (the pre-tentpole layout).
+        unshared_bytes: stats.bytes * workers,
+    }
+}
+
+// ------------------------------------------------------------------- json --
+
+fn write_bench_json(
+    rows: &[WireRow],
+    load: &LoadResult,
+    panels: &PanelResult,
+    smoke: bool,
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"wire_hot_path\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!(
+        "  \"frame\": \"{}x{}x{} f32 ({} bytes payload)\",\n",
+        SPEC.c,
+        SPEC.h,
+        SPEC.w,
+        SPEC.c * SPEC.h * SPEC.w * 4
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"clients\": {}, \"requests\": {}, \"rps\": {:.1}, \
+             \"rps_per_core\": {:.1}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}{}\n",
+            r.clients,
+            r.requests,
+            r.rps,
+            r.rps_per_core,
+            r.p50_ms,
+            r.p99_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"model_load\": {{\"model\": \"minialexnet\", \"archive_bytes\": {}, \
+         \"load_ms\": {:.2}, \"params\": {}}},\n",
+        load.archive_bytes, load.load_ms, load.params
+    ));
+    s.push_str(&format!(
+        "  \"panels\": {{\"panels\": {}, \"panel_bytes\": {}, \"prewarm_ms\": {:.2}, \
+         \"workers\": {}, \"shared_bytes\": {}, \"unshared_bytes\": {}}}\n",
+        panels.panels,
+        panels.panel_bytes,
+        panels.prewarm_ms,
+        panels.workers,
+        panels.shared_bytes,
+        panels.unshared_bytes
+    ));
+    s.push_str("}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wire.json");
+    std::fs::write(path, s)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    lqr::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (client_counts, per_client): (&[usize], usize) =
+        if smoke { (&[1, 2], 300) } else { (&[1, 2, 4], 3000) };
+
+    let mut t = TableFmt::new(
+        "Wire hot path: pooled frame buffers + recycle ring + gathered replies (mock backend)",
+        &["clients", "requests", "req/s", "req/s/core", "p50 ms", "p99 ms"],
+    );
+    let mut rows = Vec::new();
+    for &clients in client_counts {
+        let r = wire_throughput(clients, per_client)?;
+        t.row(&[
+            r.clients.to_string(),
+            r.requests.to_string(),
+            format!("{:.0}", r.rps),
+            format!("{:.0}", r.rps_per_core),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+        ]);
+        rows.push(r);
+    }
+    t.print();
+
+    let load = model_load()?;
+    println!(
+        "model load (copy-free): minialexnet {} params, {} archive bytes, {:.2} ms",
+        load.params, load.archive_bytes, load.load_ms
+    );
+
+    let workers = if smoke { 2 } else { 4 };
+    let panels = panel_sharing(load.engine, workers);
+    println!(
+        "panel sharing: {} panels, {} bytes resident shared across {} workers \
+         (vs {} bytes unshared), pre-warm {:.2} ms",
+        panels.panels, panels.shared_bytes, panels.workers, panels.unshared_bytes, panels.prewarm_ms
+    );
+
+    write_bench_json(&rows, &load, &panels, smoke)?;
+    Ok(())
+}

@@ -10,6 +10,8 @@
 //!   (used for quantization configurations not baked into artifacts).
 //! - [`MockBackend`]  — deterministic stub for coordinator tests.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::nn::{Engine, Precision};
@@ -138,13 +140,29 @@ impl Backend for PjrtBackend {
 // ---------------------------------------------------------------- native --
 
 /// Rust-native engine backend: any precision, no artifact needed.
+///
+/// Holds the [`Engine`] behind an `Arc`: `Engine::forward` takes `&self`
+/// and the prepared-panel cache is internally locked, so every worker in a
+/// pool (and every supervisor-restarted replacement) can share ONE engine —
+/// one weight copy, one `WeightPanel` per (layer, bits_w, region) — instead
+/// of paying N× memory and N× quantize+pack cold-start. Build pools via
+/// [`shared_native_factory`].
 pub struct NativeBackend {
-    engine: Engine,
+    engine: Arc<Engine>,
     precision: Precision,
 }
 
 impl NativeBackend {
+    /// Wrap an owned engine (single-backend uses: tools, tests). Worker
+    /// pools should share one engine via [`NativeBackend::shared`] /
+    /// [`shared_native_factory`] instead.
     pub fn new(engine: Engine, precision: Precision) -> NativeBackend {
+        NativeBackend::shared(Arc::new(engine), precision)
+    }
+
+    /// Attach to a shared engine (panel cache and weights are shared with
+    /// every other holder of the `Arc`).
+    pub fn shared(engine: Arc<Engine>, precision: Precision) -> NativeBackend {
         NativeBackend { engine, precision }
     }
 }
@@ -155,8 +173,35 @@ impl Backend for NativeBackend {
     }
 
     fn describe(&self) -> String {
-        format!("native:{}:{:?}", self.engine.arch.name, self.precision)
+        let stats = self.engine.panel_stats();
+        format!(
+            "native:{}:{:?} panels={} panel_bytes={} (shared x{})",
+            self.engine.arch.name,
+            self.precision,
+            stats.panels,
+            stats.bytes,
+            Arc::strong_count(&self.engine),
+        )
     }
+}
+
+/// A [`BackendFactory`] whose every product — initial worker slots *and*
+/// supervisor-restarted replacements — attaches to the same shared engine.
+///
+/// Pre-warms the panel cache before returning: every layer's
+/// `WeightPanel` for `precision` is built once, here, so no worker ever
+/// pays quantize+pack latency on its first batch and the health route can
+/// report the route warmed from the moment it serves. Returns the factory
+/// plus the number of panels prepared.
+pub fn shared_native_factory(
+    engine: Arc<Engine>,
+    precision: Precision,
+) -> (BackendFactory, usize) {
+    let warmed = engine.prewarm(precision);
+    let factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(NativeBackend::shared(Arc::clone(&engine), precision)) as Box<dyn Backend>)
+    });
+    (factory, warmed)
 }
 
 // ------------------------------------------------------------------ mock --

@@ -724,6 +724,7 @@ mod tests {
                 deadline: ttl.map(|d| now + d),
                 priority,
                 reply: tx,
+                recycle: None,
             },
             rx,
         )

@@ -37,8 +37,9 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
+pub use backend::{shared_native_factory, Backend, BackendFactory, MockBackend, NativeBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, BatchQueue, ShedPolicy, SubmitError};
 pub use net::{ClientError, ImageSpec, NetClient, NetConfig, NetServer, WireError, WireStatus};
 pub use request::{InferError, InferReply, InferRequest, InferResponse, Priority, ShedReason};
-pub use router::{RouteError, Router};
+pub use router::{RouteError, Router, RouteStatusFn};
 pub use server::{Coordinator, CoordinatorConfig};

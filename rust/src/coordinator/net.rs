@@ -48,12 +48,19 @@
 //!   half-closes idle connections (their handlers see EOF and exit), waits
 //!   up to `drain_timeout` for in-flight requests to resolve, force-closes
 //!   stragglers, and joins every handler thread.
+//! - **Alloc-free hot path.** Each handler owns a `FrameScratch` of reused
+//!   buffers (route bytes, payload bytes, decoded floats, staged reply) plus
+//!   a recycle ring that returns each request's float storage at reply time
+//!   (`InferRequest::recycle`). Steady-state serving — a client pipelining
+//!   well-formed frames — does no per-request heap allocation on the frame
+//!   path: bytes decode in bulk (`chunks_exact`) into reused storage, and
+//!   every reply leaves in one gathered `write_all`.
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
+use std::io::{BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -227,12 +234,52 @@ pub struct ImageSpec {
     pub w: usize,
 }
 
-/// One parsed request frame.
+/// Reusable per-connection buffers for the steady-state frame path. Every
+/// field is cleared and refilled in place each round (`clear()` +
+/// `resize`/`extend` keep the allocation), so a pipelining client costs no
+/// per-request heap allocation once the buffers reach their working size.
+///
+/// `image` is special: its storage leaves with each admitted request (the
+/// coordinator owns the submitted tensor) and comes back through the
+/// handler's recycle ring at reply time — see `handle_conn`.
+struct FrameScratch {
+    /// Route-name bytes of the current frame (UTF-8 validated by the parser).
+    route: Vec<u8>,
+    /// Raw little-endian payload bytes of the current frame.
+    payload: Vec<u8>,
+    /// Decoded image floats of the current frame.
+    image: Vec<f32>,
+    /// Staged reply bytes, sent with one gathered write.
+    reply: Vec<u8>,
+}
+
+impl FrameScratch {
+    fn new() -> FrameScratch {
+        FrameScratch {
+            route: Vec::new(),
+            payload: Vec::new(),
+            image: Vec::new(),
+            reply: Vec::new(),
+        }
+    }
+
+    /// The current frame's route name. The parser only yields
+    /// [`Frame::Infer`] after validating the bytes, so this never fails on
+    /// that path; outside it a dirty buffer degrades to "".
+    fn route_str(&self) -> &str {
+        std::str::from_utf8(&self.route).unwrap_or("")
+    }
+}
+
+/// One parsed request frame. Variable-size contents (route bytes, decoded
+/// image floats) live in the caller's [`FrameScratch`], not in the variant:
+/// the parser fills reused buffers instead of allocating per frame.
 enum Frame {
-    /// Well-formed inference request (payload length already validated
-    /// against the [`ImageSpec`]). `lane_tagged` records whether the frame
-    /// carried the optional lane byte (exact byte accounting).
-    Infer { route: String, image: Vec<f32>, priority: Priority, lane_tagged: bool },
+    /// Well-formed inference request: route in `scratch.route`, floats in
+    /// `scratch.image` (length already validated against the
+    /// [`ImageSpec`]). `lane_tagged` records whether the frame carried the
+    /// optional lane byte (exact byte accounting).
+    Infer { priority: Priority, lane_tagged: bool },
     /// The [`HEALTH_ROUTE`] built-in.
     Health,
     /// Client closed cleanly at a frame boundary.
@@ -277,10 +324,17 @@ fn discard(r: &mut impl Read, mut n: u64) -> Result<(), FrameError> {
     Ok(())
 }
 
-/// Parse one request frame. Every limit is enforced *before* the
-/// corresponding allocation: the largest buffer this function creates is
-/// `min(route_len, max_route_len)` + the spec-validated image payload.
-fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Frame, FrameError> {
+/// Parse one request frame into `scratch`. Every limit is enforced *before*
+/// the corresponding buffer grows: the largest this function ever sizes a
+/// buffer is `min(route_len, max_route_len)` + the spec-validated image
+/// payload — and on the steady-state path those buffers are reused, so no
+/// per-frame heap allocation happens at all once they reach working size.
+fn read_frame_into(
+    r: &mut impl Read,
+    spec: ImageSpec,
+    cfg: &NetConfig,
+    scratch: &mut FrameScratch,
+) -> Result<Frame, FrameError> {
     let raw_len = match rd_u32(r) {
         Ok(n) => n,
         // EOF at the frame boundary is a clean close. (`read_exact` can't
@@ -297,8 +351,9 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
             format!("route_len {route_len} exceeds max_route_len {}", cfg.max_route_len),
         ));
     }
-    let mut route = vec![0u8; route_len as usize];
-    r.read_exact(&mut route).map_err(FrameError::Io)?;
+    scratch.route.clear();
+    scratch.route.resize(route_len as usize, 0);
+    r.read_exact(&mut scratch.route).map_err(FrameError::Io)?;
     let lane_byte = if lane_tagged {
         let mut b = [0u8; 1];
         r.read_exact(&mut b).map_err(FrameError::Io)?;
@@ -333,21 +388,18 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
             }
         },
     };
-    let route = match String::from_utf8(route) {
-        Ok(s) => s,
-        Err(_) => {
-            discard(r, payload_bytes)?;
-            return Err(FrameError::in_sync(
-                WireStatus::BadRequest,
-                "route name is not valid UTF-8".into(),
-            ));
-        }
-    };
-    if route.is_empty() {
+    if std::str::from_utf8(&scratch.route).is_err() {
+        discard(r, payload_bytes)?;
+        return Err(FrameError::in_sync(
+            WireStatus::BadRequest,
+            "route name is not valid UTF-8".into(),
+        ));
+    }
+    if scratch.route.is_empty() {
         discard(r, payload_bytes)?;
         return Err(FrameError::in_sync(WireStatus::BadRequest, "empty route name".into()));
     }
-    if route == HEALTH_ROUTE {
+    if scratch.route.as_slice() == HEALTH_ROUTE.as_bytes() {
         // Health probes carry no image; tolerate (and skip) a stray payload.
         discard(r, payload_bytes)?;
         return Ok(Frame::Health);
@@ -360,41 +412,52 @@ fn read_frame(r: &mut impl Read, spec: ImageSpec, cfg: &NetConfig) -> Result<Fra
             format!("expected {expect} floats, got {n_floats}"),
         ));
     }
-    // Validated against the spec — this allocation is bounded by the model's
+    // Validated against the spec — this buffer is bounded by the model's
     // input geometry, not by client-controlled bytes.
-    let mut payload = vec![0u8; expect * 4];
-    r.read_exact(&mut payload).map_err(FrameError::Io)?;
-    let image: Vec<f32> = payload
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    Ok(Frame::Infer { route, image, priority, lane_tagged })
+    scratch.payload.clear();
+    scratch.payload.resize(expect * 4, 0);
+    r.read_exact(&mut scratch.payload).map_err(FrameError::Io)?;
+    scratch.image.clear();
+    scratch.image.extend(
+        scratch.payload.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(Frame::Infer { priority, lane_tagged })
 }
 
 // --------------------------------------------------------------- replies --
 
-/// Write an error/health reply (`status | u32 len | utf8`); returns bytes
-/// written. Messages are truncated to keep replies small and parseable.
-fn write_msg(w: &mut impl Write, status: WireStatus, msg: &str) -> std::io::Result<u64> {
+/// Encode an error/health reply (`status | u32 len | utf8`) into a reused
+/// buffer. Messages are truncated to keep replies small and parseable.
+fn encode_msg(buf: &mut Vec<u8>, status: WireStatus, msg: &str) {
     let bytes = msg.as_bytes();
     let bytes = &bytes[..bytes.len().min(4096)];
-    w.write_all(&[status as u8])?;
-    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()?;
-    Ok(5 + bytes.len() as u64)
+    buf.clear();
+    buf.reserve(5 + bytes.len());
+    buf.push(status as u8);
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
 }
 
-/// Write a success reply; returns bytes written.
-fn write_ok(w: &mut impl Write, logits: &[f32], predicted: usize) -> std::io::Result<u64> {
-    w.write_all(&[WireStatus::Ok as u8])?;
-    w.write_all(&(logits.len() as u32).to_le_bytes())?;
+/// Encode a success reply (`Ok | u32 n | logits | u32 predicted`) into a
+/// reused buffer.
+fn encode_ok(buf: &mut Vec<u8>, logits: &[f32], predicted: usize) {
+    buf.clear();
+    buf.reserve(9 + logits.len() * 4);
+    buf.push(WireStatus::Ok as u8);
+    buf.extend_from_slice(&(logits.len() as u32).to_le_bytes());
     for v in logits {
-        w.write_all(&v.to_le_bytes())?;
+        buf.extend_from_slice(&v.to_le_bytes());
     }
-    w.write_all(&(predicted as u32).to_le_bytes())?;
+    buf.extend_from_slice(&(predicted as u32).to_le_bytes());
+}
+
+/// One gathered write: the whole staged reply leaves in a single
+/// `write_all` on the unbuffered stream (no BufWriter copy, no flush
+/// round). Returns bytes written for the metrics.
+fn send_reply(w: &mut impl Write, reply: &[u8]) -> std::io::Result<u64> {
+    w.write_all(reply)?;
     w.flush()?;
-    Ok(9 + logits.len() as u64 * 4)
+    Ok(reply.len() as u64)
 }
 
 // -------------------------------------------------------------- registry --
@@ -677,15 +740,16 @@ fn admit(
 /// Best-effort `Busy` reply to a connection shed at accept time. A short
 /// write timeout keeps a hostile peer from pinning the accept thread; the
 /// ~40-byte reply fits any socket send buffer anyway.
-fn busy_reply(stream: TcpStream, cfg: &NetConfig, msg: &str) {
+fn busy_reply(mut stream: TcpStream, cfg: &NetConfig, msg: &str) {
     let t = if cfg.io_timeout.is_zero() {
         Duration::from_secs(1)
     } else {
         cfg.io_timeout.min(Duration::from_secs(1))
     };
     let _ = stream.set_write_timeout(Some(t));
-    let mut w = BufWriter::new(stream);
-    let _ = write_msg(&mut w, WireStatus::Busy, msg);
+    let mut reply = Vec::new();
+    encode_msg(&mut reply, WireStatus::Busy, msg);
+    let _ = send_reply(&mut stream, &reply);
 }
 
 fn handle_conn(
@@ -699,39 +763,66 @@ fn handle_conn(
     stream.set_read_timeout(timeout_opt(cfg.io_timeout))?;
     stream.set_write_timeout(timeout_opt(cfg.io_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let mut writer = stream;
+    let mut scratch = FrameScratch::new();
+    // Image-buffer recycle ring: the float storage submitted with each
+    // request returns here at reply time (`InferRequest::recycle` fires in
+    // the coordinator's respond paths, *before* the reply unblocks us), so
+    // the steady-state round reuses one buffer instead of allocating per
+    // request. Capacity 2 absorbs rare overlap; a synchronously rejected
+    // request drops its buffer to the allocator (overload path only).
+    let (pool_tx, pool_rx) = mpsc::sync_channel::<Vec<f32>>(2);
     loop {
         // Drain: after `shutdown` flips the flag, finish no further rounds.
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        match read_frame(&mut reader, spec, cfg) {
+        // Reclaim recycled image storage before parsing the next frame.
+        if let Ok(mut buf) = pool_rx.try_recv() {
+            buf.clear();
+            scratch.image = buf;
+        }
+        match read_frame_into(&mut reader, spec, cfg, &mut scratch) {
             Ok(Frame::Eof) => return Ok(()),
             Ok(Frame::Health) => {
                 metrics.bytes_in.fetch_add(8 + HEALTH_ROUTE.len() as u64, Ordering::Relaxed);
                 let report = health_report(router, metrics);
-                let out = write_msg(&mut writer, WireStatus::Health, &report)?;
+                encode_msg(&mut scratch.reply, WireStatus::Health, &report);
+                let out = send_reply(&mut writer, &scratch.reply)?;
                 metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
             }
-            Ok(Frame::Infer { route, image, priority, lane_tagged }) => {
+            Ok(Frame::Infer { priority, lane_tagged }) => {
                 metrics.frames.fetch_add(1, Ordering::Relaxed);
                 metrics.bytes_in.fetch_add(
-                    8 + route.len() as u64 + lane_tagged as u64 + image.len() as u64 * 4,
+                    8 + scratch.route.len() as u64
+                        + lane_tagged as u64
+                        + scratch.image.len() as u64 * 4,
                     Ordering::Relaxed,
                 );
-                let img = Tensor::new(&[1, spec.c, spec.h, spec.w], image);
-                let out = match router.infer_typed_with(&route, img, priority) {
-                    Ok(resp) => write_ok(&mut writer, &resp.logits, resp.predicted)?,
+                let img = Tensor::new(
+                    &[1, spec.c, spec.h, spec.w],
+                    std::mem::take(&mut scratch.image),
+                );
+                let res = router.infer_typed_pooled(
+                    scratch.route_str(),
+                    img,
+                    priority,
+                    Some(pool_tx.clone()),
+                );
+                match res {
+                    Ok(resp) => encode_ok(&mut scratch.reply, &resp.logits, resp.predicted),
                     Err(e) => {
                         let (status, msg) = WireStatus::of_route_error(&e);
-                        write_msg(&mut writer, status, &msg)?
+                        encode_msg(&mut scratch.reply, status, &msg);
                     }
-                };
+                }
+                let out = send_reply(&mut writer, &scratch.reply)?;
                 metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
             }
             Err(FrameError::Reject { status, message, fatal }) => {
                 metrics.malformed.fetch_add(1, Ordering::Relaxed);
-                let out = write_msg(&mut writer, status, &message)?;
+                encode_msg(&mut scratch.reply, status, &message);
+                let out = send_reply(&mut writer, &scratch.reply)?;
                 metrics.bytes_out.fetch_add(out, Ordering::Relaxed);
                 if fatal {
                     return Ok(());
@@ -759,8 +850,12 @@ fn health_report(router: &Router, metrics: &NetMetrics) -> String {
         if let Some(c) = router.coordinator(name) {
             let failed = c.is_failed();
             ready |= !failed;
+            // Routes registered with a status callback (shared-engine
+            // routes report pre-warm / panel-cache state) append it here.
+            let extra =
+                router.route_status(name).map(|s| format!(" [{s}]")).unwrap_or_default();
             routes.push(format!(
-                "{name} depth={}/{} {}",
+                "{name} depth={}/{} {}{extra}",
                 c.queue_depth(),
                 c.queue_capacity(),
                 if failed { "dead" } else { "up" }
@@ -844,7 +939,11 @@ impl From<std::io::Error> for ClientError {
 /// from terminal rejections.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    writer: TcpStream,
+    /// Reused request-encode / reply-decode byte buffer: steady-state
+    /// classify rounds do no per-request allocation on the byte path, and
+    /// each request leaves in one gathered write.
+    scratch: Vec<u8>,
 }
 
 /// Client-side sanity caps so a rogue server can't make *us* allocate
@@ -855,13 +954,17 @@ const MAX_REPLY_LOGITS: usize = 1 << 22;
 impl NetClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<NetClient> {
         let stream = TcpStream::connect(addr).context("connect")?;
-        Ok(NetClient { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
+        Ok(NetClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            scratch: Vec::new(),
+        })
     }
 
     /// Bound this client's own socket reads/writes (`None` = blocking).
     pub fn set_io_timeout(&mut self, t: Option<Duration>) -> std::io::Result<()> {
         self.reader.get_ref().set_read_timeout(t)?;
-        self.writer.get_ref().set_write_timeout(t)
+        self.writer.set_write_timeout(t)
     }
 
     /// Classify one CHW image on `route`; returns (logits, predicted).
@@ -922,16 +1025,21 @@ impl NetClient {
         if lane.is_some() {
             len |= LANE_FLAG;
         }
-        self.writer.write_all(&len.to_le_bytes())?;
-        self.writer.write_all(route.as_bytes())?;
+        let buf = &mut self.scratch;
+        buf.clear();
+        buf.reserve(8 + route.len() + lane.is_some() as usize + floats.len() * 4);
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(route.as_bytes());
         if let Some(p) = lane {
-            self.writer.write_all(&[p.to_wire()])?;
+            buf.push(p.to_wire());
         }
-        self.writer.write_all(&(floats.len() as u32).to_le_bytes())?;
+        buf.extend_from_slice(&(floats.len() as u32).to_le_bytes());
         for v in floats {
-            self.writer.write_all(&v.to_le_bytes())?;
+            buf.extend_from_slice(&v.to_le_bytes());
         }
-        self.writer.flush()?;
+        // One gathered write: the whole frame leaves in a single syscall
+        // instead of per-field writes through a BufWriter.
+        self.writer.write_all(buf)?;
         Ok(())
     }
 
@@ -952,12 +1060,16 @@ impl NetClient {
                     format!("implausible logits count {n}"),
                 )));
             }
-            let mut logits = Vec::with_capacity(n);
-            let mut buf = [0u8; 4];
-            for _ in 0..n {
-                self.reader.read_exact(&mut buf)?;
-                logits.push(f32::from_le_bytes(buf));
-            }
+            // Bulk read + chunked decode: one read_exact for the whole
+            // logits block into the reused scratch, not one per float.
+            self.scratch.clear();
+            self.scratch.resize(n * 4, 0);
+            self.reader.read_exact(&mut self.scratch)?;
+            let logits: Vec<f32> = self
+                .scratch
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
             let predicted = rd_u32(&mut self.reader).map_err(ClientError::Io)? as usize;
             Ok(Reply::Ok(logits, predicted))
         } else {
@@ -968,9 +1080,10 @@ impl NetClient {
                     format!("implausible message length {n}"),
                 )));
             }
-            let mut msg = vec![0u8; n];
-            self.reader.read_exact(&mut msg)?;
-            Ok(Reply::Msg(status, String::from_utf8_lossy(&msg).into_owned()))
+            self.scratch.clear();
+            self.scratch.resize(n, 0);
+            self.reader.read_exact(&mut self.scratch)?;
+            Ok(Reply::Msg(status, String::from_utf8_lossy(&self.scratch).into_owned()))
         }
     }
 }
@@ -1105,8 +1218,11 @@ mod tests {
 
     // ---- frame parser (pure, over in-memory readers) ----
 
-    fn parse(bytes: &[u8], cfg: &NetConfig) -> Result<Frame, FrameError> {
-        read_frame(&mut std::io::Cursor::new(bytes.to_vec()), SPEC, cfg)
+    fn parse(bytes: &[u8], cfg: &NetConfig) -> (Result<Frame, FrameError>, FrameScratch) {
+        let mut scratch = FrameScratch::new();
+        let res =
+            read_frame_into(&mut std::io::Cursor::new(bytes.to_vec()), SPEC, cfg, &mut scratch);
+        (res, scratch)
     }
 
     fn valid_frame(route: &str, floats: &[f32]) -> Vec<u8> {
@@ -1128,14 +1244,14 @@ mod tests {
         let mut b = valid_frame("mock", &[]);
         let n = b.len();
         b[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
-        match parse(&b, &cfg) {
+        match parse(&b, &cfg).0 {
             Err(FrameError::Reject { status: WireStatus::BadFrame, fatal: true, .. }) => {}
             _ => panic!("oversized n_floats must be a fatal BadFrame"),
         }
         // Oversized route_len likewise.
         let mut b = vec![0u8; 4];
         b.copy_from_slice(&u32::MAX.to_le_bytes());
-        match parse(&b, &cfg) {
+        match parse(&b, &cfg).0 {
             Err(FrameError::Reject { status: WireStatus::BadFrame, fatal: true, .. }) => {}
             _ => panic!("oversized route_len must be a fatal BadFrame"),
         }
@@ -1157,14 +1273,17 @@ mod tests {
             let mut stream = case.clone();
             stream.extend_from_slice(&valid_frame("mock", &[2.0; 4]));
             let mut r = std::io::Cursor::new(stream);
-            match read_frame(&mut r, SPEC, &cfg) {
+            // One scratch across both frames: the reject must leave no
+            // residue that corrupts the next parse.
+            let mut scratch = FrameScratch::new();
+            match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
                 Err(FrameError::Reject { status: WireStatus::BadRequest, fatal: false, .. }) => {}
                 _ => panic!("expected in-sync BadRequest"),
             }
-            match read_frame(&mut r, SPEC, &cfg) {
-                Ok(Frame::Infer { route, image, priority, lane_tagged }) => {
-                    assert_eq!(route, "mock");
-                    assert_eq!(image, vec![2.0; 4]);
+            match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
+                Ok(Frame::Infer { priority, lane_tagged }) => {
+                    assert_eq!(scratch.route_str(), "mock");
+                    assert_eq!(scratch.image, vec![2.0; 4]);
                     assert_eq!(priority, Priority::Interactive, "untagged defaults interactive");
                     assert!(!lane_tagged);
                 }
@@ -1191,14 +1310,14 @@ mod tests {
     fn parser_decodes_lane_tag() {
         let cfg = NetConfig::default();
         match parse(&lane_frame("mock", 1, &[1.0; 4]), &cfg) {
-            Ok(Frame::Infer { route, priority, lane_tagged, .. }) => {
-                assert_eq!(route, "mock");
+            (Ok(Frame::Infer { priority, lane_tagged }), scratch) => {
+                assert_eq!(scratch.route_str(), "mock");
                 assert_eq!(priority, Priority::Bulk);
                 assert!(lane_tagged);
             }
             _ => panic!("lane-tagged frame must parse"),
         }
-        match parse(&lane_frame("mock", 0, &[1.0; 4]), &cfg) {
+        match parse(&lane_frame("mock", 0, &[1.0; 4]), &cfg).0 {
             Ok(Frame::Infer { priority, .. }) => assert_eq!(priority, Priority::Interactive),
             _ => panic!("lane 0 must parse"),
         }
@@ -1210,14 +1329,15 @@ mod tests {
         let mut stream = lane_frame("mock", 7, &[1.0; 4]);
         stream.extend_from_slice(&valid_frame("mock", &[2.0; 4]));
         let mut r = std::io::Cursor::new(stream);
-        match read_frame(&mut r, SPEC, &cfg) {
+        let mut scratch = FrameScratch::new();
+        match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
             Err(FrameError::Reject { status: WireStatus::BadRequest, fatal: false, message }) => {
                 assert!(message.contains("lane"), "{message}");
             }
             _ => panic!("unknown lane must be an in-sync BadRequest"),
         }
-        match read_frame(&mut r, SPEC, &cfg) {
-            Ok(Frame::Infer { route, .. }) => assert_eq!(route, "mock"),
+        match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
+            Ok(Frame::Infer { .. }) => assert_eq!(scratch.route_str(), "mock"),
             _ => panic!("stream must stay in sync after a bad lane tag"),
         }
     }
@@ -1237,6 +1357,30 @@ mod tests {
         assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 1, "bulk lane tag must land");
         assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 1);
         server.shutdown();
+    }
+
+    /// Collapse a parse result to a comparable tag (Frame/FrameError carry
+    /// no `Eq`; variant identity + status/fatality is what must match when
+    /// comparing a fresh-scratch parse against a dirty-scratch one).
+    fn outcome_tag(r: &Result<Frame, FrameError>) -> String {
+        match r {
+            Ok(Frame::Infer { priority, lane_tagged }) => format!("infer:{priority:?}:{lane_tagged}"),
+            Ok(Frame::Health) => "health".into(),
+            Ok(Frame::Eof) => "eof".into(),
+            Err(FrameError::Reject { status, fatal, .. }) => format!("reject:{status:?}:{fatal}"),
+            Err(FrameError::Io(e)) => format!("io:{:?}", e.kind()),
+        }
+    }
+
+    /// A scratch pre-filled with plausible residue from a previous request,
+    /// as the pooled-buffer reuse path produces.
+    fn dirty_scratch() -> FrameScratch {
+        FrameScratch {
+            route: b"stale-route-from-last-request".to_vec(),
+            payload: vec![0xAB; 64],
+            image: vec![999.0; 16],
+            reply: vec![0xCD; 32],
+        }
     }
 
     #[test]
@@ -1261,8 +1405,67 @@ mod tests {
                 }
                 bytes = f;
             }
-            // Must return (any variant), never panic.
-            let _ = parse(&bytes, &cfg);
+            // Parse the same bytes twice: into a fresh scratch and into a
+            // deliberately dirty recycled one. Neither may panic, outcomes
+            // must match exactly, the same bytes must be consumed, and no
+            // stale bytes from the recycled buffers may leak through.
+            let mut fresh = FrameScratch::new();
+            let mut ra = std::io::Cursor::new(bytes.clone());
+            let a = read_frame_into(&mut ra, SPEC, &cfg, &mut fresh);
+            let mut dirty = dirty_scratch();
+            let mut rb = std::io::Cursor::new(bytes);
+            let b = read_frame_into(&mut rb, SPEC, &cfg, &mut dirty);
+            assert_eq!(outcome_tag(&a), outcome_tag(&b), "reused buffers changed the outcome");
+            assert_eq!(ra.position(), rb.position(), "reused buffers changed bytes consumed");
+            if matches!(a, Ok(Frame::Infer { .. })) {
+                assert_eq!(fresh.route, dirty.route, "stale route bytes leaked across requests");
+                assert_eq!(fresh.image, dirty.image, "stale image floats leaked across requests");
+            }
         });
+    }
+
+    #[test]
+    fn dirty_scratch_reuse_parses_smaller_frames_exactly() {
+        // A long-routed frame followed by a short-routed one through the
+        // same scratch: the shrink path must not keep tail bytes from the
+        // previous (larger) request.
+        let cfg = NetConfig::default();
+        let mut stream = valid_frame("a-much-longer-route-name", &[7.0; 4]);
+        stream.extend_from_slice(&valid_frame("m", &[1.0, 2.0, 3.0, 4.0]));
+        let mut r = std::io::Cursor::new(stream);
+        let mut scratch = dirty_scratch();
+        match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
+            Ok(Frame::Infer { .. }) => {
+                assert_eq!(scratch.route_str(), "a-much-longer-route-name");
+                assert_eq!(scratch.image, vec![7.0; 4]);
+            }
+            _ => panic!("first frame must parse"),
+        }
+        match read_frame_into(&mut r, SPEC, &cfg, &mut scratch) {
+            Ok(Frame::Infer { .. }) => {
+                assert_eq!(scratch.route_str(), "m");
+                assert_eq!(scratch.image, vec![1.0, 2.0, 3.0, 4.0]);
+            }
+            _ => panic!("second frame must parse"),
+        }
+    }
+
+    #[test]
+    fn reply_encoders_reuse_buffer_without_residue() {
+        // A long reply followed by a short one into the same buffer: the
+        // staged bytes must be exactly the short reply (gathered-write
+        // correctness depends on buf.len() being exact).
+        let mut buf = Vec::new();
+        encode_ok(&mut buf, &[1.5, -2.0, 0.25, 9.0, 4.0], 3);
+        assert_eq!(buf.len(), 9 + 5 * 4);
+        assert_eq!(buf[0], WireStatus::Ok as u8);
+        encode_msg(&mut buf, WireStatus::Shed, "q");
+        assert_eq!(buf, vec![WireStatus::Shed as u8, 1, 0, 0, 0, b'q']);
+        encode_ok(&mut buf, &[0.5], 0);
+        let mut expect = vec![WireStatus::Ok as u8];
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.extend_from_slice(&0.5f32.to_le_bytes());
+        expect.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(buf, expect);
     }
 }

@@ -149,6 +149,13 @@ pub struct InferRequest {
     pub priority: Priority,
     /// Completion channel; exactly one [`InferReply`] is sent.
     pub reply: mpsc::Sender<InferReply>,
+    /// Buffer-reuse hook for the zero-copy wire path: when set, the image's
+    /// float storage is handed back through this bounded channel at reply
+    /// time — the single point every outcome (success, shed, expiry,
+    /// backend failure, shutdown) funnels through, and the last moment the
+    /// image is needed (poison bisection re-reads it until then). The send
+    /// is `try_send`: a full ring just drops the buffer to the allocator.
+    pub recycle: Option<mpsc::SyncSender<Vec<f32>>>,
 }
 
 impl InferRequest {
@@ -157,15 +164,27 @@ impl InferRequest {
         self.deadline.is_some_and(|d| now >= d)
     }
 
+    /// Hand the image storage back to the submitter's buffer ring (no-op
+    /// without a recycle hook). Must run before the reply send: the
+    /// submitter reuses the buffer for its next frame as soon as it wakes.
+    fn recycle_image(&mut self) {
+        if let Some(tx) = self.recycle.take() {
+            let img = std::mem::replace(&mut self.image, Tensor::zeros(&[0]));
+            let _ = tx.try_send(img.into_data());
+        }
+    }
+
     /// Consume the request with a successful response. The receiver may have
     /// given up; a dropped reply is fine.
-    pub fn respond_ok(self, resp: InferResponse) {
+    pub fn respond_ok(mut self, resp: InferResponse) {
+        self.recycle_image();
         let _ = self.reply.send(Ok(resp));
     }
 
     /// Consume the request with a typed error, recording it in `metrics`
     /// (`shed` / `expired` / `failed` depending on the error).
-    pub fn respond_err(self, err: InferError, metrics: &Metrics) {
+    pub fn respond_err(mut self, err: InferError, metrics: &Metrics) {
+        self.recycle_image();
         metrics.record_error(&err);
         let _ = self.reply.send(Err(err));
     }
@@ -232,6 +251,7 @@ mod tests {
             deadline: Some(now + Duration::from_millis(5)),
             priority: Priority::default(),
             reply: tx,
+            recycle: None,
         };
         assert!(!r.expired(now));
         assert!(r.expired(now + Duration::from_millis(5)));
@@ -248,10 +268,42 @@ mod tests {
             deadline: None,
             priority: Priority::default(),
             reply: tx,
+            recycle: None,
         };
         r.respond_err(InferError::DeadlineExceeded, &m);
         assert!(matches!(rx.recv().unwrap(), Err(InferError::DeadlineExceeded)));
         assert_eq!(m.expired.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn recycle_hook_returns_image_storage_on_both_outcomes() {
+        let m = Metrics::default();
+        let (pool_tx, pool_rx) = mpsc::sync_channel::<Vec<f32>>(2);
+        let mk = |id: u64| {
+            let (tx, rx) = mpsc::channel();
+            (
+                InferRequest {
+                    id,
+                    image: Tensor::filled(&[1, 1, 2, 2], id as f32),
+                    submitted_at: Instant::now(),
+                    deadline: None,
+                    priority: Priority::default(),
+                    reply: tx,
+                    recycle: Some(pool_tx.clone()),
+                },
+                rx,
+            )
+        };
+        let (r1, rx1) = mk(1);
+        r1.respond_ok(InferResponse::from_logits(1, vec![1.0], Duration::ZERO, Duration::ZERO, 1));
+        // The buffer must be back in the ring BEFORE the reply arrives.
+        let buf = pool_rx.try_recv().expect("buffer recycled on success");
+        assert_eq!(buf, vec![1.0; 4]);
+        assert!(rx1.recv().unwrap().is_ok());
+        let (r2, rx2) = mk(2);
+        r2.respond_err(InferError::DeadlineExceeded, &m);
+        assert_eq!(pool_rx.try_recv().expect("buffer recycled on error"), vec![2.0; 4]);
+        assert!(rx2.recv().unwrap().is_err());
     }
 
     #[test]

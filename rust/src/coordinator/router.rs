@@ -38,9 +38,15 @@ impl std::fmt::Display for RouteError {
 
 impl std::error::Error for RouteError {}
 
+/// Extra per-route readiness detail surfaced through the wire `health`
+/// built-in (e.g. the shared engine's pre-warm state: `warmed panels=6`).
+/// Called on every health probe; keep it cheap and lock-light.
+pub type RouteStatusFn = Box<dyn Fn() -> String + Send + Sync>;
+
 /// Routes inference traffic across models/variants.
 pub struct Router {
     routes: BTreeMap<String, Coordinator>,
+    status: BTreeMap<String, RouteStatusFn>,
 }
 
 impl Default for Router {
@@ -51,7 +57,7 @@ impl Default for Router {
 
 impl Router {
     pub fn new() -> Router {
-        Router { routes: BTreeMap::new() }
+        Router { routes: BTreeMap::new(), status: BTreeMap::new() }
     }
 
     /// Register a route (e.g. "minialexnet/f32").
@@ -64,6 +70,25 @@ impl Router {
         anyhow::ensure!(!self.routes.contains_key(name), "route {name} already exists");
         self.routes.insert(name.to_string(), Coordinator::start(config, factory)?);
         Ok(())
+    }
+
+    /// [`Router::add_route`] plus a status callback reported by the wire
+    /// health route (pre-warm / panel-cache state for shared-engine routes).
+    pub fn add_route_with_status(
+        &mut self,
+        name: &str,
+        config: CoordinatorConfig,
+        factory: BackendFactory,
+        status: RouteStatusFn,
+    ) -> Result<()> {
+        self.add_route(name, config, factory)?;
+        self.status.insert(name.to_string(), status);
+        Ok(())
+    }
+
+    /// The route's extra status line, when one was registered.
+    pub fn route_status(&self, route: &str) -> Option<String> {
+        self.status.get(route).map(|f| f())
     }
 
     pub fn route_names(&self) -> Vec<&str> {
@@ -101,11 +126,26 @@ impl Router {
         image: Tensor,
         priority: Priority,
     ) -> Result<InferResponse, RouteError> {
+        self.infer_typed_pooled(route, image, priority, None)
+    }
+
+    /// [`Router::infer_typed_with`] plus a buffer-recycle hook (see
+    /// [`Coordinator::submit_pooled`]): the image's float storage returns
+    /// through `recycle` at reply time, letting the wire handler reuse one
+    /// buffer per connection on the steady-state path.
+    pub fn infer_typed_pooled(
+        &self,
+        route: &str,
+        image: Tensor,
+        priority: Priority,
+        recycle: Option<std::sync::mpsc::SyncSender<Vec<f32>>>,
+    ) -> Result<InferResponse, RouteError> {
         let c = self
             .routes
             .get(route)
             .ok_or_else(|| RouteError::NoRoute(route.to_string()))?;
-        let rx = c.submit_with_options(image, None, priority).map_err(RouteError::Rejected)?;
+        let rx =
+            c.submit_pooled(image, None, priority, recycle).map_err(RouteError::Rejected)?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
             Ok(Err(e)) => Err(RouteError::Infer(e)),

@@ -166,6 +166,23 @@ impl Coordinator {
         ttl: Option<Duration>,
         priority: Priority,
     ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
+        self.submit_pooled(image, ttl, priority, None)
+    }
+
+    /// [`Coordinator::submit_with_options`] plus a buffer-recycle hook: at
+    /// reply time the image's float storage is handed back through
+    /// `recycle` (see [`InferRequest::recycle`]) so a steady-state
+    /// submitter — the TCP ingress — can reuse one buffer per connection
+    /// instead of allocating per request. A synchronous reject (queue full)
+    /// drops the buffer to the allocator; that is the overload path, not
+    /// steady state.
+    pub fn submit_pooled(
+        &self,
+        image: Tensor,
+        ttl: Option<Duration>,
+        priority: Priority,
+        recycle: Option<mpsc::SyncSender<Vec<f32>>>,
+    ) -> Result<mpsc::Receiver<InferReply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let now = Instant::now();
@@ -176,6 +193,7 @@ impl Coordinator {
             deadline: ttl.or(self.default_deadline).map(|d| now + d),
             priority,
             reply: tx,
+            recycle,
         };
         match self.queue.submit(req) {
             Ok(()) => {

@@ -433,6 +433,7 @@ pub fn run_one(
         deadline: None,
         priority: Priority::default(),
         reply: tx,
+        recycle: None,
     };
     let _ = run_batch(backend, vec![req], FlushReason::Full, &Metrics::default(), 1);
     match rx.recv() {
@@ -466,6 +467,7 @@ mod tests {
                 deadline: None,
                 priority: Priority::default(),
                 reply: tx,
+                recycle: None,
             },
             rx,
         )
@@ -568,6 +570,7 @@ mod tests {
             deadline: None,
             priority: Priority::default(),
             reply: tx,
+            recycle: None,
         };
         let out = run_batch(&mut b, vec![r0, odd], FlushReason::Full, &metrics, 4);
         assert!(matches!(out, BatchOutcome::Completed));

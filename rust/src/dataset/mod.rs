@@ -30,11 +30,13 @@ impl Dataset {
         let mut labels = None;
         for e in entries {
             match e.name.as_str() {
-                "x" => images = Some(e.to_tensor()),
+                // `into_tensor` moves the decoded storage: the dataset is
+                // the largest npz in the repo, and this load used to copy it.
+                "x" => images = Some(e.into_tensor()),
                 "y" => {
                     labels = Some(match e.as_i32() {
                         Some(v) => v.to_vec(),
-                        None => e.to_tensor().data().iter().map(|&f| f as i32).collect(),
+                        None => e.into_tensor().into_data().iter().map(|&f| f as i32).collect(),
                     })
                 }
                 _ => {}

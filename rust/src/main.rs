@@ -164,15 +164,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
+    use lqr::coordinator::backend::shared_native_factory;
     use lqr::coordinator::net::{ImageSpec, NetConfig, NetServer};
     use lqr::coordinator::router::Router;
+    use lqr::nn::{Engine, Precision};
     use std::sync::Arc;
+    use std::time::Instant;
 
     let p = Args::new("lqr serve-tcp", "serve models over the TCP wire protocol")
         .flag("artifacts", "artifacts", "artifacts directory")
         .flag("listen", "127.0.0.1:7423", "bind address")
         .flag("models", "minialexnet,minivgg", "models to route (comma list)")
         .flag("variants", "f32,lq", "artifact variants per model (comma list)")
+        .flag("backend", "pjrt", "pjrt (AOT artifacts) | native (one shared in-process engine)")
+        .flag("native-bits", "2", "activation bits for --backend native (weights stay 8-bit)")
         .flag("workers", "1", "workers per route")
         .flag("max-batch", "8", "dynamic batch cap")
         .flag("max-wait-ms", "5", "batch deadline (ms)")
@@ -190,27 +195,59 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
     let artifacts = p.get("artifacts").to_string();
     let manifest = Manifest::load(&artifacts)?;
     let mut router = Router::new();
+    let coord_cfg = || CoordinatorConfig {
+        workers: p.get_usize("workers"),
+        max_batch: p.get_usize("max-batch"),
+        max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
+        queue_capacity: 4096,
+        shards: p.get_usize("shards"),
+        steal: p.get_bool("steal"),
+        priority_lanes: p.get_bool("priority-lanes"),
+        ..Default::default()
+    };
+    let backend = p.get("backend").to_string();
     for model in p.get("models").split(',') {
         let meta = manifest
             .models
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
         let _ = meta;
+        if backend == "native" {
+            // One engine per model, loaded once (copy-free npz path) and
+            // shared across every worker; the factory pre-warms the panel
+            // cache so no request ever pays quantize+pack latency.
+            let bits = p.get_usize("native-bits") as u8;
+            let arch = Arch::by_name(model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+            let t0 = Instant::now();
+            let engine =
+                Arc::new(Engine::from_npz(arch, format!("{artifacts}/weights_{model}.npz"))?);
+            let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (factory, warmed) = shared_native_factory(Arc::clone(&engine), Precision::lq(bits));
+            let route = format!("{model}/lq{bits}");
+            let eng_status = Arc::clone(&engine);
+            router.add_route_with_status(
+                &route,
+                coord_cfg(),
+                factory,
+                Box::new(move || {
+                    let s = eng_status.panel_stats();
+                    format!("warmed panels={} panel_bytes={}", s.panels, s.bytes)
+                }),
+            )?;
+            println!(
+                "route {route} (shared engine: load {load_ms:.1}ms, warmed {warmed} panels, {} panel bytes)",
+                engine.panel_stats().bytes
+            );
+            continue;
+        }
+        anyhow::ensure!(backend == "pjrt", "unknown --backend {backend} (want pjrt | native)");
         for variant in p.get("variants").split(',') {
             let route = format!("{model}/{variant}");
             let (a, m, v) = (artifacts.clone(), model.to_string(), variant.to_string());
             router.add_route(
                 &route,
-                CoordinatorConfig {
-                    workers: p.get_usize("workers"),
-                    max_batch: p.get_usize("max-batch"),
-                    max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
-                    queue_capacity: 4096,
-                    shards: p.get_usize("shards"),
-                    steal: p.get_bool("steal"),
-                    priority_lanes: p.get_bool("priority-lanes"),
-                    ..Default::default()
-                },
+                coord_cfg(),
                 Box::new(move || {
                     Ok(Box::new(PjrtBackend::open(&a, &m, &v)?) as Box<dyn Backend>)
                 }),

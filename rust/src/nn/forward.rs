@@ -81,6 +81,17 @@ impl Precision {
     }
 }
 
+/// Snapshot of the engine's prepared-panel cache (see
+/// [`Engine::panel_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelStats {
+    /// Cached `(layer, bits_w, region)` entries.
+    pub panels: usize,
+    /// Resident bytes across all cached panels (codes + params + bit-plane
+    /// sidecars).
+    pub bytes: usize,
+}
+
 /// Weights + cached offline-quantized weights for one network.
 pub struct Engine {
     pub arch: Arch,
@@ -100,8 +111,11 @@ impl Engine {
         arch.validate().map_err(|e| anyhow::anyhow!("bad arch: {e}"))?;
         let entries = read_npz(&path).with_context(|| "loading weights npz")?;
         let mut params = HashMap::new();
-        for e in entries {
-            params.insert(e.name.clone(), e.to_tensor());
+        for mut e in entries {
+            // Move the decoded storage straight into the parameter map — the
+            // archive bytes are read once and never duplicated.
+            let name = std::mem::take(&mut e.name);
+            params.insert(name, e.into_tensor());
         }
         let eng = Engine { arch, params, wq_cache: Default::default(), threads: default_threads() };
         eng.check_params()?;
@@ -245,6 +259,35 @@ impl Engine {
         let panel = std::sync::Arc::new(WeightPanel::from_quantized(&wq));
         self.wq_cache.lock().unwrap().insert(key, panel.clone());
         panel
+    }
+
+    /// Eagerly build every layer's weight panel for `precision` so the
+    /// first request never pays quantize+pack latency (a no-op for `F32`,
+    /// which has no offline preparation). Returns the number of panels
+    /// prepared or already cached for this configuration.
+    ///
+    /// With one engine shared behind an `Arc` across all workers (see
+    /// `coordinator::backend::shared_native_factory`), one pre-warm pass
+    /// covers the whole pool — and supervisor-restarted workers reattach to
+    /// the same panels instead of re-quantizing.
+    pub fn prewarm(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => 0,
+            Precision::Quant { bits_w, region, .. } => {
+                for l in &self.arch.layers {
+                    let _ = self.quantized_weights(l, bits_w, region);
+                }
+                self.arch.layers.len()
+            }
+        }
+    }
+
+    /// Aggregate panel-cache state: entry count and resident panel bytes.
+    /// This is the memory that sharing one engine de-duplicates N× across a
+    /// worker pool.
+    pub fn panel_stats(&self) -> PanelStats {
+        let g = self.wq_cache.lock().unwrap();
+        PanelStats { panels: g.len(), bytes: g.values().map(|p| p.bytes()).sum() }
     }
 
     /// The cached weight panel for a layer, if a forward pass (or `.lqz`
@@ -516,6 +559,29 @@ mod tests {
         let e_lq = rel(&lq, 0) + rel(&lq, 1);
         let e_dq = rel(&dq, 0) + rel(&dq, 1);
         assert!(e_lq < e_dq, "LQ rel err {e_lq} should beat DQ rel err {e_dq}");
+    }
+
+    #[test]
+    fn prewarm_builds_every_panel_once() {
+        let eng = tiny_engine(9);
+        assert_eq!(eng.panel_stats().panels, 0);
+        let p = Precision::lq(2);
+        assert_eq!(eng.prewarm(p), 4, "one panel per layer");
+        let stats = eng.panel_stats();
+        assert_eq!(stats.panels, 4);
+        assert!(stats.bytes > 0, "panels must report resident bytes");
+        // Pin identity: a forward pass reuses the prewarmed panels (no
+        // rebuild, same Arc), and a second prewarm is a no-op.
+        let before = eng.cached_panel("c1", 8, RegionSpec::PerRow).unwrap();
+        let mut rng = Rng::new(10);
+        let x = Tensor::new(&[1, 2, 8, 8], rng.uniform_vec(2 * 8 * 8, 0.0, 1.0));
+        let _ = eng.forward(&x, p);
+        assert_eq!(eng.prewarm(p), 4);
+        let after = eng.cached_panel("c1", 8, RegionSpec::PerRow).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&before, &after));
+        assert_eq!(eng.panel_stats(), stats);
+        // F32 has nothing to prepare.
+        assert_eq!(eng.prewarm(Precision::F32), 0);
     }
 
     #[test]

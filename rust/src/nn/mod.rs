@@ -15,4 +15,4 @@ pub mod forward;
 pub mod opcount;
 
 pub use arch::{Arch, Layer};
-pub use forward::{Engine, Precision};
+pub use forward::{Engine, PanelStats, Precision};

@@ -48,8 +48,10 @@ impl Session {
         }
         let path = self.manifest.weights_path(model);
         let entries = read_npz(&path)?;
-        let by_name: HashMap<String, Tensor> =
-            entries.into_iter().map(|e| (e.name.clone(), e.to_tensor())).collect();
+        let by_name: HashMap<String, Tensor> = entries
+            .into_iter()
+            .map(|mut e| (std::mem::take(&mut e.name), e.into_tensor()))
+            .collect();
         let mut bufs = Vec::with_capacity(model.param_order.len());
         for name in &model.param_order {
             let t = by_name

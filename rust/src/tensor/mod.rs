@@ -7,5 +7,5 @@
 mod npz;
 mod tensorf;
 
-pub use npz::{read_npz, read_npz_names, NpzEntry};
+pub use npz::{npz_bytes, read_npz, read_npz_bytes, read_npz_names, write_npz, NpzData, NpzEntry};
 pub use tensorf::Tensor;

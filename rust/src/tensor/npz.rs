@@ -1,14 +1,20 @@
-//! npy/npz reader (subset): the interchange format between build-time python
-//! (`np.savez`) and the rust runtime.
+//! npy/npz reader + writer (subset): the interchange format between
+//! build-time python (`np.savez`) and the rust runtime.
 //!
 //! Supports the exact encoding numpy's `savez` emits — a STORED (and, for
 //! `savez_compressed`, DEFLATE — rejected here) zip archive of `.npy` members
 //! with v1/v2 headers — for little-endian f32/f64/i32/i64 C-order arrays.
 //! Implemented from the npy-format spec + zip appnote rather than pulling a
 //! zip crate so the tensor substrate stays dependency-free.
+//!
+//! The read path is single-copy: the archive is read (or handed in) as one
+//! byte buffer, members are located as slices of that buffer (no per-member
+//! seek+read), and each array is decoded straight from its slice into its
+//! typed `Vec`. [`NpzEntry::into_tensor`] then *moves* that storage into the
+//! [`Tensor`] — model cold-start never duplicates weight bytes.
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
+use std::io::Write as _;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -30,12 +36,28 @@ pub enum NpzData {
 }
 
 impl NpzEntry {
-    /// View as an f32 [`Tensor`] (i32 data is converted).
+    /// View as an f32 [`Tensor`] (i32 data is converted). Clones the
+    /// storage; loaders that are done with the entry should prefer
+    /// [`NpzEntry::into_tensor`].
     pub fn to_tensor(&self) -> Tensor {
         match &self.data {
             NpzData::F32(v) => Tensor::new(&self.shape, v.clone()),
             NpzData::I32(v) => {
                 Tensor::new(&self.shape, v.iter().map(|&x| x as f32).collect())
+            }
+        }
+    }
+
+    /// Consume the entry into an f32 [`Tensor`] without copying: f32 storage
+    /// moves, i32 storage is converted through `Vec`'s in-place
+    /// `into_iter().map().collect()` (same element size/alignment, so the
+    /// allocation is reused).
+    pub fn into_tensor(self) -> Tensor {
+        let NpzEntry { shape, data, .. } = self;
+        match data {
+            NpzData::F32(v) => Tensor::new(&shape, v),
+            NpzData::I32(v) => {
+                Tensor::new(&shape, v.into_iter().map(|x| x as f32).collect())
             }
         }
     }
@@ -96,6 +118,9 @@ fn parse_npy(bytes: &[u8]) -> Result<(Vec<usize>, NpzData)> {
         v => bail!("npy version {v} unsupported"),
     };
     let _ = major;
+    if bytes.len() < body_at + header_len {
+        bail!("npy header truncated");
+    }
     let header = std::str::from_utf8(&bytes[body_at..body_at + header_len])
         .context("npy header not utf8")?;
     let (descr, fortran, shape) = parse_npy_header(header)?;
@@ -116,24 +141,39 @@ fn parse_npy(bytes: &[u8]) -> Result<(Vec<usize>, NpzData)> {
                     .collect(),
             )
         }
-        "<f8" => NpzData::F32(
-            body[..n * 8]
-                .chunks_exact(8)
-                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
-                .collect(),
-        ),
-        "<i4" => NpzData::I32(
-            body[..n * 4]
-                .chunks_exact(4)
-                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect(),
-        ),
-        "<i8" => NpzData::I32(
-            body[..n * 8]
-                .chunks_exact(8)
-                .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
-                .collect(),
-        ),
+        "<f8" => {
+            if body.len() < n * 8 {
+                bail!("npy body too short");
+            }
+            NpzData::F32(
+                body[..n * 8]
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                    .collect(),
+            )
+        }
+        "<i4" => {
+            if body.len() < n * 4 {
+                bail!("npy body too short");
+            }
+            NpzData::I32(
+                body[..n * 4]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<i8" => {
+            if body.len() < n * 8 {
+                bail!("npy body too short");
+            }
+            NpzData::I32(
+                body[..n * 8]
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
+                    .collect(),
+            )
+        }
         d => bail!("npy dtype {d} unsupported"),
     };
     Ok((shape, data))
@@ -143,69 +183,230 @@ const EOCD_SIG: u32 = 0x0605_4b50;
 const CDIR_SIG: u32 = 0x0201_4b50;
 const LOCAL_SIG: u32 = 0x0403_4b50;
 
-/// Read every array from an npz archive.
-pub fn read_npz(path: impl AsRef<Path>) -> Result<Vec<NpzEntry>> {
-    let path = path.as_ref();
-    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let size = f.metadata()?.len();
+/// Locate the central directory in an in-memory archive: returns
+/// `(entry_count, cdir_offset)`.
+fn find_central_dir(bytes: &[u8]) -> Result<(usize, usize)> {
     // Find the end-of-central-directory record (no zip comment expected, but
     // scan the tail to be safe).
-    let tail_len = size.min(66_000);
-    f.seek(SeekFrom::End(-(tail_len as i64)))?;
-    let mut tail = vec![0u8; tail_len as usize];
-    f.read_exact(&mut tail)?;
+    let tail_start = bytes.len().saturating_sub(66_000);
+    let tail = &bytes[tail_start..];
     let eocd_at = (0..tail.len().saturating_sub(21))
         .rev()
-        .find(|&i| rd_u32(&tail, i) == EOCD_SIG)
+        .find(|&i| rd_u32(tail, i) == EOCD_SIG)
         .context("zip end-of-central-directory not found")?;
-    let n_entries = rd_u16(&tail, eocd_at + 10) as usize;
-    let cdir_off = rd_u32(&tail, eocd_at + 16) as u64;
-    let cdir_size = rd_u32(&tail, eocd_at + 12) as usize;
+    let n_entries = rd_u16(tail, eocd_at + 10) as usize;
+    let cdir_off = rd_u32(tail, eocd_at + 16) as usize;
+    if cdir_off > bytes.len() {
+        bail!("central directory offset past end of archive");
+    }
+    Ok((n_entries, cdir_off))
+}
 
-    let mut cdir = vec![0u8; cdir_size];
-    f.seek(SeekFrom::Start(cdir_off))?;
-    f.read_exact(&mut cdir)?;
+/// One member located in an in-memory archive: its name and the slice of
+/// the archive holding its (STORED) payload. No payload bytes are copied.
+struct ZipMember<'a> {
+    name: String,
+    data: &'a [u8],
+}
 
-    let mut entries = Vec::with_capacity(n_entries);
-    let mut at = 0usize;
+/// Walk the central directory and resolve every STORED member to a payload
+/// slice of `bytes`.
+fn zip_members(bytes: &[u8]) -> Result<Vec<ZipMember<'_>>> {
+    let (n_entries, cdir_off) = find_central_dir(bytes)?;
+    let mut members = Vec::with_capacity(n_entries);
+    let mut at = cdir_off;
     for _ in 0..n_entries {
-        if rd_u32(&cdir, at) != CDIR_SIG {
+        if at + 46 > bytes.len() || rd_u32(bytes, at) != CDIR_SIG {
             bail!("bad central directory entry");
         }
-        let method = rd_u16(&cdir, at + 10);
-        let csize = rd_u32(&cdir, at + 20) as usize;
-        let name_len = rd_u16(&cdir, at + 28) as usize;
-        let extra_len = rd_u16(&cdir, at + 30) as usize;
-        let comment_len = rd_u16(&cdir, at + 32) as usize;
-        let local_off = rd_u32(&cdir, at + 42) as u64;
-        let name = String::from_utf8_lossy(&cdir[at + 46..at + 46 + name_len]).to_string();
-        at += 46 + name_len + extra_len + comment_len;
+        let method = rd_u16(bytes, at + 10);
+        let csize = rd_u32(bytes, at + 20) as usize;
+        let name_len = rd_u16(bytes, at + 28) as usize;
+        let extra_len = rd_u16(bytes, at + 30) as usize;
+        let comment_len = rd_u16(bytes, at + 32) as usize;
+        let local_off = rd_u32(bytes, at + 42) as usize;
+        let name_end = at + 46 + name_len;
+        if name_end > bytes.len() {
+            bail!("central directory name truncated");
+        }
+        let name = String::from_utf8_lossy(&bytes[at + 46..name_end]).to_string();
+        at = name_end + extra_len + comment_len;
         if method != 0 {
             bail!("{name}: compressed npz members unsupported (use np.savez, not savez_compressed)");
         }
-        // Local header: sizes may differ (extra field), re-read lengths.
-        let mut lh = [0u8; 30];
-        f.seek(SeekFrom::Start(local_off))?;
-        f.read_exact(&mut lh)?;
-        if rd_u32(&lh, 0) != LOCAL_SIG {
+        // Local header: name/extra lengths may differ from the central
+        // directory's (extra field), so re-read them.
+        if local_off + 30 > bytes.len() || rd_u32(bytes, local_off) != LOCAL_SIG {
             bail!("bad local header for {name}");
         }
-        let lh_name = rd_u16(&lh, 26) as u64;
-        let lh_extra = rd_u16(&lh, 28) as u64;
-        let mut body = vec![0u8; csize];
-        f.seek(SeekFrom::Start(local_off + 30 + lh_name + lh_extra))?;
-        f.read_exact(&mut body)?;
+        let lh_name = rd_u16(bytes, local_off + 26) as usize;
+        let lh_extra = rd_u16(bytes, local_off + 28) as usize;
+        let data_at = local_off + 30 + lh_name + lh_extra;
+        let data_end = data_at
+            .checked_add(csize)
+            .filter(|&e| e <= bytes.len())
+            .with_context(|| format!("member {name} payload truncated"))?;
+        members.push(ZipMember { name, data: &bytes[data_at..data_end] });
+    }
+    Ok(members)
+}
 
-        let member = name.strip_suffix(".npy").unwrap_or(&name).to_string();
-        let (shape, data) = parse_npy(&body).with_context(|| format!("member {name}"))?;
-        entries.push(NpzEntry { name: member, shape, data });
+/// Parse every array from an in-memory npz archive. Each member is decoded
+/// straight from its slice of `bytes` — the only copy is the byte→typed
+/// decode itself.
+pub fn read_npz_bytes(bytes: &[u8]) -> Result<Vec<NpzEntry>> {
+    let members = zip_members(bytes)?;
+    let mut entries = Vec::with_capacity(members.len());
+    for m in members {
+        let name = m.name.strip_suffix(".npy").unwrap_or(&m.name).to_string();
+        let (shape, data) = parse_npy(m.data).with_context(|| format!("member {}", m.name))?;
+        entries.push(NpzEntry { name, shape, data });
     }
     Ok(entries)
 }
 
-/// Member names in an npz archive (cheap: central directory only).
+/// Read every array from an npz archive: one `read` of the whole file, then
+/// slice-parsing via [`read_npz_bytes`] (no per-member seek+read round
+/// trips).
+pub fn read_npz(path: impl AsRef<Path>) -> Result<Vec<NpzEntry>> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    read_npz_bytes(&bytes)
+}
+
+/// Member names in an npz archive (cheap: walks the central directory only,
+/// never decodes array payloads).
 pub fn read_npz_names(path: impl AsRef<Path>) -> Result<Vec<String>> {
-    Ok(read_npz(path)?.into_iter().map(|e| e.name).collect())
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    Ok(zip_members(&bytes)?
+        .into_iter()
+        .map(|m| m.name.strip_suffix(".npy").unwrap_or(&m.name).to_string())
+        .collect())
+}
+
+// ---------------------------------------------------------------- writer --
+
+/// CRC-32 (IEEE, reflected) — the zip checksum. Bitwise implementation: the
+/// writer runs at build/bench time, not on the serving hot path.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Serialize one entry as a v1 npy member body (`<f4` or `<i4`).
+fn npy_bytes(e: &NpzEntry) -> Vec<u8> {
+    let descr = match e.data {
+        NpzData::F32(_) => "<f4",
+        NpzData::I32(_) => "<i4",
+    };
+    let dims = match e.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", e.shape[0]),
+        _ => format!(
+            "({})",
+            e.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {dims}, }}");
+    while (10 + header.len() + 1) % 64 != 0 {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut out = b"\x93NUMPY\x01\x00".to_vec();
+    out.extend((header.len() as u16).to_le_bytes());
+    out.extend(header.as_bytes());
+    match &e.data {
+        NpzData::F32(v) => {
+            for x in v {
+                out.extend(x.to_le_bytes());
+            }
+        }
+        NpzData::I32(v) => {
+            for x in v {
+                out.extend(x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Serialize entries as an in-memory STORED npz archive (what `np.savez`
+/// writes, minus compression) — readable by numpy and by this module.
+pub fn npz_bytes(entries: &[NpzEntry]) -> Vec<u8> {
+    let mut out = Vec::new();
+    // (name, local header offset, crc, size) for the central directory.
+    let mut dir: Vec<(String, usize, u32, usize)> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let name = format!("{}.npy", e.name);
+        let body = npy_bytes(e);
+        let crc = crc32(&body);
+        let off = out.len();
+        out.extend(LOCAL_SIG.to_le_bytes());
+        out.extend(20u16.to_le_bytes()); // version needed
+        out.extend(0u16.to_le_bytes()); // flags
+        out.extend(0u16.to_le_bytes()); // method: STORED
+        out.extend(0u32.to_le_bytes()); // mod time/date
+        out.extend(crc.to_le_bytes());
+        out.extend((body.len() as u32).to_le_bytes()); // csize
+        out.extend((body.len() as u32).to_le_bytes()); // usize
+        out.extend((name.len() as u16).to_le_bytes());
+        out.extend(0u16.to_le_bytes()); // extra len
+        out.extend(name.as_bytes());
+        out.extend(&body);
+        dir.push((name, off, crc, body.len()));
+    }
+    let cdir_off = out.len();
+    for (name, off, crc, size) in &dir {
+        out.extend(CDIR_SIG.to_le_bytes());
+        out.extend(20u16.to_le_bytes()); // version made by
+        out.extend(20u16.to_le_bytes()); // version needed
+        out.extend(0u16.to_le_bytes()); // flags
+        out.extend(0u16.to_le_bytes()); // method
+        out.extend(0u32.to_le_bytes()); // mod time/date
+        out.extend(crc.to_le_bytes());
+        out.extend((*size as u32).to_le_bytes()); // csize
+        out.extend((*size as u32).to_le_bytes()); // usize
+        out.extend((name.len() as u16).to_le_bytes());
+        out.extend(0u16.to_le_bytes()); // extra len
+        out.extend(0u16.to_le_bytes()); // comment len
+        out.extend(0u16.to_le_bytes()); // disk number
+        out.extend(0u16.to_le_bytes()); // internal attrs
+        out.extend(0u32.to_le_bytes()); // external attrs
+        out.extend((*off as u32).to_le_bytes());
+        out.extend(name.as_bytes());
+    }
+    let cdir_size = out.len() - cdir_off;
+    out.extend(EOCD_SIG.to_le_bytes());
+    out.extend(0u16.to_le_bytes()); // disk number
+    out.extend(0u16.to_le_bytes()); // cdir disk
+    out.extend((dir.len() as u16).to_le_bytes()); // entries on disk
+    out.extend((dir.len() as u16).to_le_bytes()); // entries total
+    out.extend((cdir_size as u32).to_le_bytes());
+    out.extend((cdir_off as u32).to_le_bytes());
+    out.extend(0u16.to_le_bytes()); // comment len
+    out
+}
+
+/// Write entries to an npz file on disk (STORED, numpy-readable). Used by
+/// benches and tests to synthesize weight archives without python.
+pub fn write_npz(path: impl AsRef<Path>, entries: &[NpzEntry]) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = npz_bytes(entries);
+    let mut f =
+        File::create(path).with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -254,6 +455,60 @@ mod tests {
             NpzData::F32(v) => assert_eq!(v, vec![1.0, 2.0, 3.0, 4.5]),
             _ => panic!("wrong dtype"),
         }
+    }
+
+    #[test]
+    fn npz_write_read_roundtrip_in_memory() {
+        let entries = vec![
+            NpzEntry {
+                name: "w".into(),
+                shape: vec![2, 3],
+                data: NpzData::F32(vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]),
+            },
+            NpzEntry {
+                name: "y".into(),
+                shape: vec![4],
+                data: NpzData::I32(vec![0, 1, 2, 3]),
+            },
+        ];
+        let bytes = npz_bytes(&entries);
+        let back = read_npz_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "w");
+        assert_eq!(back[0].shape, vec![2, 3]);
+        match &back[0].data {
+            NpzData::F32(v) => assert_eq!(v, &[1.0, -2.0, 3.5, 0.0, 4.25, -0.5]),
+            _ => panic!("wrong dtype"),
+        }
+        assert_eq!(back[1].as_i32().unwrap(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn into_tensor_matches_to_tensor() {
+        let e = NpzEntry {
+            name: "x".into(),
+            shape: vec![3],
+            data: NpzData::I32(vec![-1, 0, 7]),
+        };
+        let copied = e.to_tensor();
+        let moved = e.into_tensor();
+        assert_eq!(copied, moved);
+        assert_eq!(moved.data(), &[-1.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn truncated_archives_error_not_panic() {
+        let entries = vec![NpzEntry {
+            name: "w".into(),
+            shape: vec![8],
+            data: NpzData::F32(vec![1.0; 8]),
+        }];
+        let bytes = npz_bytes(&entries);
+        // Every truncation point must produce Err, never a panic.
+        for cut in 0..bytes.len() {
+            let _ = read_npz_bytes(&bytes[..cut]);
+        }
+        assert!(read_npz_bytes(&bytes).is_ok());
     }
 
     // Reading real numpy-written npz files is covered by the integration test

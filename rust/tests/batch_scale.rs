@@ -60,6 +60,7 @@ fn raw_req(
             deadline: ttl.map(|d| now + d),
             priority,
             reply: tx,
+            recycle: None,
         },
         rx,
     )

@@ -1,13 +1,21 @@
 //! Coordinator end-to-end over the real PJRT backend (requires artifacts):
 //! the full serving path — submit → batch → PJRT execute → response.
+//! Plus artifact-free pins on the shared-engine panel cache (one
+//! `WeightPanel` per (layer, bits, region) across every worker, surviving
+//! supervisor restarts).
 
+use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use lqr::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use anyhow::Result;
+use lqr::coordinator::backend::{shared_native_factory, Backend, PjrtBackend};
 use lqr::coordinator::{Coordinator, CoordinatorConfig};
 use lqr::dataset::Dataset;
-use lqr::nn::{Arch, Engine, Precision};
+use lqr::nn::{Arch, Engine, Layer, Precision};
+use lqr::quant::RegionSpec;
+use lqr::tensor::Tensor;
+use lqr::util::rng::Rng;
 
 fn artifacts() -> Option<String> {
     let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -70,16 +78,14 @@ fn serve_native_lq2_still_classifies() {
         queue_capacity: 64,
         ..Default::default()
     };
-    let d2 = dir.clone();
-    let coord = Coordinator::start(
-        cfg,
-        Box::new(move || {
-            let engine =
-                Engine::from_npz(Arch::minivgg(), format!("{d2}/weights_minivgg.npz"))?;
-            Ok(Box::new(NativeBackend::new(engine, Precision::lq(2))) as Box<dyn Backend>)
-        }),
-    )
-    .unwrap();
+    // One engine loaded once and shared: both workers (and any restarted
+    // replacement) attach to the same weights and panel cache.
+    let engine = Arc::new(
+        Engine::from_npz(Arch::minivgg(), format!("{dir}/weights_minivgg.npz")).unwrap(),
+    );
+    let (factory, warmed) = shared_native_factory(Arc::clone(&engine), Precision::lq(2));
+    assert_eq!(warmed, engine.arch.layers.len(), "pre-warm must cover every layer");
+    let coord = Coordinator::start(cfg, factory).unwrap();
     let n = 16;
     let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.image(i)).unwrap()).collect();
     let mut hits = 0;
@@ -94,4 +100,144 @@ fn serve_native_lq2_still_classifies() {
     }
     // 2-bit LQ drops accuracy but must stay far above chance (1/16).
     assert!(hits >= n / 2, "2-bit LQ served accuracy {hits}/{n}");
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-free shared-panel-cache pins (synthetic engine, real coordinator).
+
+/// A tiny 2-conv + 2-fc engine small enough to serve in-process.
+fn tiny_engine(seed: u64) -> Engine {
+    let arch = Arch {
+        name: "tiny",
+        input: (2, 8, 8),
+        num_classes: 4,
+        layers: vec![
+            Layer::Conv { name: "c1", cin: 2, cout: 4, k: 3, stride: 1, pad: 1, groups: 1, pool: true },
+            Layer::Conv { name: "c2", cin: 4, cout: 8, k: 3, stride: 1, pad: 1, groups: 1, pool: true },
+            Layer::Fc { name: "f1", cin: 8 * 2 * 2, cout: 16, relu: true },
+            Layer::Fc { name: "f2", cin: 16, cout: 4, relu: false },
+        ],
+    };
+    arch.validate().unwrap();
+    let mut rng = Rng::new(seed);
+    let mut params = HashMap::new();
+    for l in &arch.layers {
+        let (wshape, blen): (Vec<usize>, usize) = match *l {
+            Layer::Conv { cin, cout, k, .. } => (vec![cout, cin, k, k], cout),
+            Layer::Fc { cin, cout, .. } => (vec![cin, cout], cout),
+        };
+        let n: usize = wshape.iter().product();
+        params.insert(
+            format!("{}.w", l.name()),
+            Tensor::new(&wshape, rng.normal_vec(n).iter().map(|v| v * 0.3).collect()),
+        );
+        params.insert(format!("{}.b", l.name()), Tensor::new(&[blen], rng.normal_vec(blen)));
+    }
+    Engine::from_params(arch, params).unwrap()
+}
+
+/// Shared-engine backend that panics on a poison marker in the batch — the
+/// worker-retiring fault, so the supervisor must restart the slot with a
+/// factory-fresh backend (which must re-attach to the SAME engine).
+struct CrashyShared {
+    engine: Arc<Engine>,
+    precision: Precision,
+}
+
+impl Backend for CrashyShared {
+    fn run_batch(&mut self, batch: &Tensor) -> Result<Tensor> {
+        if batch.data()[0] >= 999.0 {
+            panic!("poison marker: backend state corrupted");
+        }
+        Ok(self.engine.forward(batch, self.precision))
+    }
+
+    fn describe(&self) -> String {
+        "crashy-shared".into()
+    }
+}
+
+#[test]
+fn workers_share_one_panel_cache_across_restart() {
+    let precision = Precision::lq(2);
+    let engine = Arc::new(tiny_engine(42));
+    // Pre-warm exactly as `shared_native_factory` does, then capture the
+    // panel identity the whole pool must keep serving from.
+    assert_eq!(engine.prewarm(precision), 4, "one panel per layer");
+    let stats0 = engine.panel_stats();
+    assert_eq!(stats0.panels, 4);
+    let p0 = engine.cached_panel("c1", 8, RegionSpec::PerRow).expect("warmed panel");
+
+    let eng2 = Arc::clone(&engine);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 64,
+            ..Default::default()
+        },
+        Box::new(move || {
+            Ok(Box::new(CrashyShared { engine: Arc::clone(&eng2), precision }) as Box<dyn Backend>)
+        }),
+    )
+    .unwrap();
+
+    let ok_img = || Tensor::filled(&[1, 2, 8, 8], 0.1);
+    let reply = |rx: std::sync::mpsc::Receiver<lqr::coordinator::InferReply>| {
+        rx.recv_timeout(Duration::from_secs(30)).expect("reply within deadline")
+    };
+
+    // Healthy traffic lands on both workers' backends — all one engine.
+    for _ in 0..4 {
+        let resp = reply(coord.submit(ok_img()).unwrap()).expect("typed success");
+        assert_eq!(resp.logits.len(), 4);
+    }
+
+    // Poison: the backend panics, the worker retires, the supervisor
+    // restarts the slot via the factory.
+    let mut poison = vec![0.1f32; 2 * 8 * 8];
+    poison[0] = 1000.0;
+    let err = reply(coord.submit(Tensor::new(&[1, 2, 8, 8], poison)).unwrap())
+        .expect_err("poison request must fail typed");
+    assert!(
+        matches!(err, lqr::coordinator::InferError::BackendFailed { .. }),
+        "got {err:?}"
+    );
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.metrics().worker_restarts.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "supervisor never restarted the crashed worker");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // The restarted worker serves — from the same shared panel cache.
+    let resp = reply(coord.submit(ok_img()).unwrap()).expect("post-restart success");
+    assert_eq!(resp.logits.len(), 4);
+
+    let p1 = engine.cached_panel("c1", 8, RegionSpec::PerRow).expect("panel still cached");
+    assert!(Arc::ptr_eq(&p0, &p1), "restart must re-attach to the SAME WeightPanel");
+    assert_eq!(engine.panel_stats(), stats0, "no duplicate panels were built");
+    for layer in ["c1", "c2", "f1", "f2"] {
+        let p = engine.cached_panel(layer, 8, RegionSpec::PerRow);
+        assert!(p.is_some(), "layer {layer} lost its warmed panel");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shared_factory_products_share_one_engine() {
+    let engine = Arc::new(tiny_engine(7));
+    let (factory, warmed) = shared_native_factory(Arc::clone(&engine), Precision::lq(2));
+    assert_eq!(warmed, 4, "factory pre-warms every layer");
+    // Every product — worker slots and any restart replacement — reports
+    // the shared panel cache, never a private copy.
+    let mut b1 = factory().unwrap();
+    let mut b2 = factory().unwrap();
+    let before = engine.panel_stats();
+    let x = Tensor::filled(&[1, 2, 8, 8], 0.2);
+    let y1 = b1.run_batch(&x).unwrap();
+    let y2 = b2.run_batch(&x).unwrap();
+    assert_eq!(y1, y2, "same engine, same panels, same logits");
+    assert_eq!(engine.panel_stats(), before, "forward built no new panels after pre-warm");
+    assert!(b1.describe().contains("panels=4"), "{}", b1.describe());
 }

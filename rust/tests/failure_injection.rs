@@ -672,6 +672,7 @@ fn pool_failure_flushes_every_shard_typed() {
                     deadline: None,
                     priority,
                     reply: tx,
+                    recycle: None,
                 },
             )
             .unwrap();
@@ -702,6 +703,7 @@ fn pool_failure_flushes_every_shard_typed() {
             deadline: None,
             priority: Priority::Interactive,
             reply: tx,
+            recycle: None,
         };
         assert!(matches!(q.submit_to(shard, req), Err(SubmitError::NoWorkers)));
     }

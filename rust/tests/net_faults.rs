@@ -408,3 +408,138 @@ fn health_reports_pool_and_queue_state() {
     assert!(report.contains("active_conns=1"), "{report}");
     server.shutdown();
 }
+
+#[test]
+fn health_appends_route_status_callback() {
+    // Routes registered with a status callback (shared-engine routes report
+    // pre-warm state) surface it in the wire health report.
+    let mut r = Router::new();
+    r.add_route_with_status(
+        "mock",
+        CoordinatorConfig::default(),
+        Box::new(|| {
+            Ok(Box::new(MockBackend {
+                classes: 4,
+                delay: Duration::ZERO,
+                calls: Arc::new(AtomicU64::new(0)),
+            }) as Box<dyn Backend>)
+        }),
+        Box::new(|| "warmed panels=6 panel_bytes=1234".into()),
+    )
+    .unwrap();
+    let server = NetServer::serve("127.0.0.1:0", Arc::new(r), SPEC).unwrap();
+    let mut c = NetClient::connect(server.addr).unwrap();
+    c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let report = c.health().unwrap();
+    assert!(report.contains("mock depth=0/1024 up [warmed panels=6 panel_bytes=1234]"), "{report}");
+    server.shutdown();
+}
+
+// ------------------------------------------------------- golden wire bytes --
+// The zero-copy rewrite (pooled buffers, gathered single-write replies)
+// must not change a single byte on the wire. These pins hand-build frames
+// and compare whole replies byte-for-byte, across pipelined rounds so the
+// reused buffers are exercised.
+
+/// The exact expected Ok reply for `classes` logits.
+fn ok_reply_bytes(logits: &[f32], predicted: u32) -> Vec<u8> {
+    let mut b = vec![WireStatus::Ok as u8];
+    b.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    for v in logits {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&predicted.to_le_bytes());
+    b
+}
+
+/// The exact expected non-Ok reply (`status | u32 len | utf8`).
+fn msg_reply_bytes(status: WireStatus, msg: &str) -> Vec<u8> {
+    let mut b = vec![status as u8];
+    b.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    b.extend_from_slice(msg.as_bytes());
+    b
+}
+
+#[test]
+fn server_reply_bytes_are_bit_identical_across_pooled_rounds() {
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+    let mut s = raw_connect(server.addr);
+
+    // Round 1: hand-built request, whole reply compared byte-for-byte.
+    s.write_all(&frame(b"mock", &[0.25; 4])).unwrap();
+    let expect = ok_reply_bytes(&[1.0, 0.0, 0.0, 0.0], 0);
+    let mut got = vec![0u8; expect.len()];
+    s.read_exact(&mut got).unwrap();
+    assert_eq!(got, expect, "Ok reply bytes changed");
+
+    // Round 2 on the same connection: the handler's recycled buffers are in
+    // play now — bytes must still be identical for different values.
+    s.write_all(&frame(b"mock", &[0.5, 1.5, -2.0, 0.0])).unwrap();
+    let expect = ok_reply_bytes(&[0.0, 0.0, 0.0, 0.0], 0);
+    let mut got = vec![0u8; expect.len()];
+    s.read_exact(&mut got).unwrap();
+    assert_eq!(got[..5], expect[..5], "Ok header bytes changed");
+    // Logits are the mock's row sum: 0.5+1.5-2.0+0.0 = 0.0 in slot 0.
+    assert_eq!(got[5..9], 0.0f32.to_le_bytes(), "logit encoding changed");
+
+    // Round 3: a typed error reply is also byte-exact (and in sync).
+    s.write_all(&frame(b"nope", &[0.25; 4])).unwrap();
+    let expect = msg_reply_bytes(WireStatus::NoRoute, "no route nope");
+    let mut got = vec![0u8; expect.len()];
+    s.read_exact(&mut got).unwrap();
+    assert_eq!(got, expect, "error reply bytes changed");
+
+    // Round 4: still in sync after the error — Ok again.
+    s.write_all(&frame(b"mock", &[0.25; 4])).unwrap();
+    assert_eq!(read_status(&mut s), Some(WireStatus::Ok as u8));
+    server.shutdown();
+}
+
+#[test]
+fn client_request_bytes_are_bit_identical() {
+    // A raw listener stands in for the server: capture exactly what
+    // NetClient writes and compare against the hand-built frame, then feed
+    // a hand-built reply and require an exact decode.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let logits = [3.5f32, -1.0, 0.25, 9.0];
+    let reply = ok_reply_bytes(&logits, 3);
+    let expect_untagged = frame(b"mock", &[0.25; 4]);
+    // Lane-tagged frame: LANE_FLAG on route_len, lane byte 1 (bulk).
+    let mut expect_tagged = Vec::new();
+    expect_tagged.extend_from_slice(&(4u32 | 0x8000_0000).to_le_bytes());
+    expect_tagged.extend_from_slice(b"mock");
+    expect_tagged.push(1);
+    expect_tagged.extend_from_slice(&4u32.to_le_bytes());
+    for _ in 0..4 {
+        expect_tagged.extend_from_slice(&0.25f32.to_le_bytes());
+    }
+
+    let reply2 = reply.clone();
+    let (e1, e2) = (expect_untagged.clone(), expect_tagged.clone());
+    let srv = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+        let mut got = vec![0u8; e1.len()];
+        s.read_exact(&mut got).unwrap();
+        assert_eq!(got, e1, "untagged request bytes changed");
+        s.write_all(&reply2).unwrap();
+        let mut got = vec![0u8; e2.len()];
+        s.read_exact(&mut got).unwrap();
+        assert_eq!(got, e2, "lane-tagged request bytes changed");
+        s.write_all(&reply2).unwrap();
+    });
+
+    let mut c = NetClient::connect(addr).unwrap();
+    c.set_io_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let (got_logits, predicted) = c.classify("mock", &img(0.25)).unwrap();
+    assert_eq!(got_logits, logits.to_vec());
+    assert_eq!(predicted, 3);
+    let (got_logits, predicted) = c
+        .classify_with_priority("mock", &img(0.25), lqr::coordinator::Priority::Bulk)
+        .unwrap();
+    assert_eq!(got_logits, logits.to_vec());
+    assert_eq!(predicted, 3);
+    srv.join().unwrap();
+}

@@ -1,8 +1,9 @@
 //! npz interop: the hand-rolled reader vs real numpy-written archives
-//! (requires `make artifacts`).
+//! (requires `make artifacts`), plus artifact-free parity pins on the
+//! copy-free loading path (`into_tensor` vs the cloning `to_tensor`).
 
 use lqr::dataset::Dataset;
-use lqr::tensor::read_npz;
+use lqr::tensor::{npz_bytes, read_npz, read_npz_bytes, NpzData, NpzEntry};
 
 fn dir() -> Option<String> {
     let dir = std::env::var("LQR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -54,4 +55,42 @@ fn int_labels_decode_correctly() {
     let y = entries.iter().find(|e| e.name == "y").unwrap();
     let labels = y.as_i32().expect("y should be an integer array");
     assert!(labels.iter().all(|&l| (0..16).contains(&l)));
+}
+
+/// Artifact-free parity pin: the copy-free load path (`into_tensor`, which
+/// moves/converts storage in place) must produce bit-identical tensors to
+/// the old cloning path (`to_tensor`) for both f32 and i32 members, through
+/// a full in-memory archive round trip.
+#[test]
+fn copy_free_load_matches_cloning_path() {
+    let entries = vec![
+        NpzEntry {
+            name: "w".into(),
+            shape: vec![2, 3],
+            data: NpzData::F32(vec![0.5, -1.25, 3.75, f32::MIN_POSITIVE, 0.0, -0.0]),
+        },
+        NpzEntry {
+            name: "y".into(),
+            shape: vec![4],
+            data: NpzData::I32(vec![-7, 0, 15, i32::MAX]),
+        },
+    ];
+    let archive = npz_bytes(&entries);
+    let old_path = read_npz_bytes(&archive).unwrap();
+    let new_path = read_npz_bytes(&archive).unwrap();
+    assert_eq!(old_path.len(), 2);
+    for (old, new) in old_path.iter().zip(new_path) {
+        // Old path clones through a borrow; new path consumes the entry.
+        let cloned = old.to_tensor();
+        let moved = new.into_tensor();
+        assert_eq!(cloned.shape(), moved.shape());
+        let (a, b) = (cloned.data(), moved.data());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "bit-exact parity in {}", old.name);
+        }
+    }
+    // And the decoded i32 view survives the writer round trip exactly.
+    let y = old_path.iter().find(|e| e.name == "y").unwrap();
+    assert_eq!(y.as_i32().unwrap(), &[-7, 0, 15, i32::MAX]);
 }
