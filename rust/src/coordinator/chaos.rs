@@ -1,0 +1,498 @@
+//! Deterministic TCP fault-injecting proxy for resilience tests.
+//!
+//! [`ChaosProxy`] sits between a client and a real [`NetServer`]
+//! (`crate::coordinator::net::NetServer`), forwarding bytes in both
+//! directions while injecting *scheduled* faults: each accepted connection
+//! pops the next [`ConnFault`] from a FIFO schedule (falling back to a
+//! configurable default), and each direction of that connection applies its
+//! own [`FaultKind`]. Randomness (corruption bytes) comes from a
+//! [`Rng`](crate::util::rng::Rng) seeded from the proxy seed plus the
+//! connection index, so a failing chaos scenario replays byte-identically
+//! from its seed — this is a *deterministic* chaos harness, not a fuzzer.
+//!
+//! The proxy is intentionally protocol-ignorant: it corrupts and truncates
+//! byte streams without knowing where frame boundaries are. The properties
+//! under test — the server never desyncs silently, the client's
+//! `ResilientClient` reconnects and retries to success, conservation of
+//! typed outcomes holds exactly — must hold for *arbitrary* byte damage.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+/// One direction's fault for a proxied connection. All sizes are counted in
+/// raw stream bytes from the start of the connection (the proxy does not
+/// parse frames).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Forward bytes untouched.
+    Pass,
+    /// Hold the first forwarded bytes back for the given duration, then
+    /// behave like [`FaultKind::Pass`] (models a slow link, not a dead one).
+    Delay(Duration),
+    /// Forward exactly `n` bytes, then close both halves of the connection
+    /// (models a peer dying mid-frame).
+    TruncateAfter(usize),
+    /// Forward the first `n` bytes untouched, then XOR every subsequent
+    /// byte with a nonzero seeded value (models line corruption; the frame
+    /// grammar must catch it, never the allocator).
+    CorruptAfter(usize),
+    /// Close the connection immediately, before forwarding anything.
+    Reset,
+    /// Read and discard everything for the given duration without
+    /// forwarding, then close (models a black-holed route: the peer sees
+    /// silence, then loss).
+    BlackHole(Duration),
+    /// Forward one byte at a time with a 1ms pause between bytes (models
+    /// pathological partial writes; exercises `read_exact` reassembly).
+    Trickle,
+}
+
+/// Per-connection fault plan: independent faults for the client→server
+/// (`up`) and server→client (`down`) byte streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnFault {
+    /// Fault applied to client→server bytes.
+    pub up: FaultKind,
+    /// Fault applied to server→client bytes.
+    pub down: FaultKind,
+}
+
+impl ConnFault {
+    /// No fault in either direction.
+    pub fn clean() -> ConnFault {
+        ConnFault { up: FaultKind::Pass, down: FaultKind::Pass }
+    }
+}
+
+impl Default for ConnFault {
+    fn default() -> ConnFault {
+        ConnFault::clean()
+    }
+}
+
+/// Counters for assertions: how many connections the proxy accepted and how
+/// many carried a non-clean fault plan.
+#[derive(Default)]
+pub struct ChaosMetrics {
+    /// Connections accepted from clients.
+    pub connections: AtomicU64,
+    /// Accepted connections whose plan was not `ConnFault::clean()`.
+    pub faulted: AtomicU64,
+    /// Accepted connections dropped because the upstream dial failed.
+    pub upstream_failures: AtomicU64,
+}
+
+struct Shared {
+    upstream: SocketAddr,
+    stop: AtomicBool,
+    /// FIFO of per-connection plans; empty → `default` applies.
+    schedule: Mutex<VecDeque<ConnFault>>,
+    default: Mutex<ConnFault>,
+    metrics: ChaosMetrics,
+    seed: u64,
+    pumps: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A seeded TCP fault-injecting proxy. See the module docs for the model.
+pub struct ChaosProxy {
+    /// Address clients should connect to.
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start proxying to `upstream`.
+    /// `seed` fixes the corruption byte stream for replayability.
+    pub fn start(upstream: impl ToSocketAddrs, seed: u64) -> Result<ChaosProxy> {
+        let upstream = upstream
+            .to_socket_addrs()
+            .context("resolve upstream")?
+            .next()
+            .context("upstream resolved to no address")?;
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind chaos proxy")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            upstream,
+            stop: AtomicBool::new(false),
+            schedule: Mutex::new(VecDeque::new()),
+            default: Mutex::new(ConnFault::clean()),
+            metrics: ChaosMetrics::default(),
+            seed,
+            pumps: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::Builder::new()
+            .name("lqr-chaos-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawn chaos accept thread")?;
+        Ok(ChaosProxy { addr, shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// Queue a fault plan for the *next* accepted connection (FIFO). Plans
+    /// queued here take precedence over [`ChaosProxy::set_default`].
+    pub fn push_fault(&self, fault: ConnFault) {
+        self.shared.schedule.lock().unwrap().push_back(fault);
+    }
+
+    /// Plan applied to connections with no queued fault (initially clean).
+    pub fn set_default(&self, fault: ConnFault) {
+        *self.shared.default.lock().unwrap() = fault;
+    }
+
+    /// Accept/fault counters.
+    pub fn metrics(&self) -> &ChaosMetrics {
+        &self.shared.metrics
+    }
+
+    /// Stop accepting, sever all proxied connections, and join every pump
+    /// thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // Pumps poll `stop` on a short read-timeout slice; joining here
+        // bounds teardown at roughly one slice per pump.
+        let pumps = std::mem::take(&mut *self.shared.pumps.lock().unwrap());
+        for h in pumps {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Slice granularity for every blocking wait in the proxy, so `stop` is
+/// honored promptly regardless of fault timings.
+const SLICE: Duration = Duration::from_millis(20);
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conn_idx: u64 = 0;
+    while !shared.stop.load(Ordering::Relaxed) {
+        let (client, _) = match listener.accept() {
+            Ok(c) => c,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+        };
+        shared.metrics.connections.fetch_add(1, Ordering::Relaxed);
+        let plan = shared
+            .schedule
+            .lock()
+            .unwrap()
+            .pop_front()
+            .unwrap_or_else(|| *shared.default.lock().unwrap());
+        if plan != ConnFault::clean() {
+            shared.metrics.faulted.fetch_add(1, Ordering::Relaxed);
+        }
+        let server = match TcpStream::connect(shared.upstream) {
+            Ok(s) => s,
+            Err(_) => {
+                // Dead upstream: dropping the client socket models the
+                // refused/reset connection the client would have seen.
+                shared.metrics.upstream_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        client.set_nonblocking(false).ok();
+        spawn_pumps(&shared, client, server, plan, conn_idx);
+        conn_idx += 1;
+    }
+}
+
+/// Start the two per-direction pump threads for one proxied connection.
+/// Each pump owns a clone of both streams so either side's fault can sever
+/// the whole connection.
+fn spawn_pumps(
+    shared: &Arc<Shared>,
+    client: TcpStream,
+    server: TcpStream,
+    plan: ConnFault,
+    conn_idx: u64,
+) {
+    let pairs = [
+        (client.try_clone(), server.try_clone(), plan.up, "up"),
+        (server.try_clone(), client.try_clone(), plan.down, "down"),
+    ];
+    let mut handles = Vec::with_capacity(2);
+    for (i, (from, to, fault, dir)) in pairs.into_iter().enumerate() {
+        let (Ok(from), Ok(to)) = (from, to) else {
+            // Clone failure: sever what we have; the peer sees a reset-like
+            // close, which is within the chaos contract anyway.
+            let _ = client.shutdown(Shutdown::Both);
+            let _ = server.shutdown(Shutdown::Both);
+            return;
+        };
+        let stop = Arc::clone(shared);
+        // Distinct deterministic stream per connection and direction.
+        let rng = Rng::new(
+            shared.seed ^ conn_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((i as u64) << 63),
+        );
+        let h = std::thread::Builder::new()
+            .name(format!("lqr-chaos-{dir}-{conn_idx}"))
+            .spawn(move || pump(from, to, fault, &stop.stop, rng));
+        match h {
+            Ok(h) => handles.push(h),
+            Err(_) => {
+                let _ = client.shutdown(Shutdown::Both);
+                let _ = server.shutdown(Shutdown::Both);
+            }
+        }
+    }
+    shared.pumps.lock().unwrap().extend(handles);
+}
+
+/// Sleep `total` in stop-aware slices; false if interrupted.
+fn sleep_sliced(stop: &AtomicBool, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return true;
+        }
+        std::thread::sleep((deadline - now).min(SLICE));
+    }
+}
+
+/// Copy bytes `from` → `to`, applying `fault`. A clean peer EOF propagates
+/// as a half-close (the opposite direction keeps flowing, so an in-flight
+/// reply still arrives); every fault-triggered exit severs both streams so
+/// the peer never waits on a half-dead proxy.
+fn pump(from: TcpStream, to: TcpStream, fault: FaultKind, stop: &AtomicBool, mut rng: Rng) {
+    let mut from = from;
+    let mut to = to;
+    // Short read timeout so the pump notices `stop` within one slice even
+    // when the peer is silent.
+    let _ = from.set_read_timeout(Some(SLICE));
+    let sever = run_pump(&mut from, &mut to, fault, stop, &mut rng);
+    if sever {
+        let _ = from.shutdown(Shutdown::Both);
+        let _ = to.shutdown(Shutdown::Both);
+    } else {
+        let _ = to.shutdown(Shutdown::Write);
+    }
+}
+
+/// Returns true when the exit is a fault (sever both streams), false on a
+/// clean peer EOF (half-close only).
+fn run_pump(
+    from: &mut TcpStream,
+    to: &mut TcpStream,
+    fault: FaultKind,
+    stop: &AtomicBool,
+    rng: &mut Rng,
+) -> bool {
+    if fault == FaultKind::Reset {
+        return true; // close before forwarding anything
+    }
+    if let FaultKind::Delay(d) = fault {
+        if !sleep_sliced(stop, d) {
+            return true;
+        }
+    }
+    let blackhole_deadline = match fault {
+        FaultKind::BlackHole(d) => Some(Instant::now() + d),
+        _ => None,
+    };
+    let mut forwarded: usize = 0;
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(deadline) = blackhole_deadline {
+            if Instant::now() >= deadline {
+                return true; // silence, then loss
+            }
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => return false,
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                continue;
+            }
+            Err(_) => return true,
+        };
+        let chunk = &mut buf[..n];
+        let ok = match fault {
+            FaultKind::BlackHole(_) => true, // discard
+            FaultKind::TruncateAfter(limit) => {
+                let take = limit.saturating_sub(forwarded).min(n);
+                let sent = take == 0 || to.write_all(&chunk[..take]).is_ok();
+                forwarded += take;
+                if !sent || forwarded >= limit {
+                    return true; // budget spent (or peer gone): sever mid-frame
+                }
+                true
+            }
+            FaultKind::CorruptAfter(limit) => {
+                for (i, b) in chunk.iter_mut().enumerate() {
+                    if forwarded + i >= limit {
+                        // `| 1` guarantees the XOR actually flips bits.
+                        *b ^= (rng.next_u64() as u8) | 1;
+                    }
+                }
+                forwarded += n;
+                to.write_all(chunk).is_ok()
+            }
+            FaultKind::Trickle => {
+                let mut ok = true;
+                for b in chunk.iter() {
+                    if stop.load(Ordering::Relaxed) || to.write_all(&[*b]).is_err() {
+                        ok = false;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                forwarded += n;
+                ok
+            }
+            FaultKind::Pass | FaultKind::Delay(_) => {
+                forwarded += n;
+                to.write_all(chunk).is_ok()
+            }
+            FaultKind::Reset => unreachable!("handled before the loop"),
+        };
+        if !ok {
+            return true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server: accepts one connection, echoes bytes until EOF.
+    fn echo_server() -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            // Serve a handful of connections then exit; tests create few.
+            for _ in 0..8 {
+                let Ok((mut s, _)) = listener.accept() else { return };
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 1024];
+                    loop {
+                        match s.read(&mut buf) {
+                            Ok(0) | Err(_) => return,
+                            Ok(n) => {
+                                if s.write_all(&buf[..n]).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        (addr, h)
+    }
+
+    fn send_recv(addr: SocketAddr, payload: &[u8]) -> std::io::Result<Vec<u8>> {
+        let mut s = TcpStream::connect(addr)?;
+        s.set_read_timeout(Some(Duration::from_secs(5)))?;
+        s.write_all(payload)?;
+        s.shutdown(Shutdown::Write)?;
+        let mut out = Vec::new();
+        s.read_to_end(&mut out)?;
+        Ok(out)
+    }
+
+    #[test]
+    fn clean_connection_passes_bytes_through_unchanged() {
+        let (upstream, _h) = echo_server();
+        let mut proxy = ChaosProxy::start(upstream, 1).unwrap();
+        let echoed = send_recv(proxy.addr, b"hello through the proxy").unwrap();
+        assert_eq!(echoed, b"hello through the proxy");
+        assert_eq!(proxy.metrics().connections.load(Ordering::Relaxed), 1);
+        assert_eq!(proxy.metrics().faulted.load(Ordering::Relaxed), 0);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn scheduled_fault_applies_once_then_falls_back_to_default() {
+        let (upstream, _h) = echo_server();
+        let mut proxy = ChaosProxy::start(upstream, 2).unwrap();
+        proxy.push_fault(ConnFault { up: FaultKind::Reset, down: FaultKind::Pass });
+        // First connection: reset upstream — nothing comes back.
+        let echoed = send_recv(proxy.addr, b"doomed").unwrap_or_default();
+        assert!(echoed.is_empty(), "reset connection must echo nothing");
+        // Second connection: schedule empty, default (clean) applies.
+        let echoed = send_recv(proxy.addr, b"survivor").unwrap();
+        assert_eq!(echoed, b"survivor");
+        assert_eq!(proxy.metrics().faulted.load(Ordering::Relaxed), 1);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn corrupt_after_flips_exactly_the_bytes_past_the_offset() {
+        let (upstream, _h) = echo_server();
+        let mut proxy = ChaosProxy::start(upstream, 3).unwrap();
+        proxy.push_fault(ConnFault { up: FaultKind::CorruptAfter(4), down: FaultKind::Pass });
+        let payload = b"AAAABBBB";
+        let echoed = send_recv(proxy.addr, payload).unwrap();
+        assert_eq!(echoed.len(), payload.len(), "corruption never changes length");
+        assert_eq!(&echoed[..4], b"AAAA", "bytes before the offset untouched");
+        assert_ne!(&echoed[4..], b"BBBB", "bytes past the offset corrupted");
+        // Determinism: the same seed yields the same corrupted bytes.
+        let mut proxy2 = ChaosProxy::start(upstream, 3).unwrap();
+        proxy2.push_fault(ConnFault { up: FaultKind::CorruptAfter(4), down: FaultKind::Pass });
+        let echoed2 = send_recv(proxy2.addr, payload).unwrap();
+        assert_eq!(echoed, echoed2, "same seed, same damage");
+        proxy.shutdown();
+        proxy2.shutdown();
+    }
+
+    #[test]
+    fn truncate_severs_after_budget_and_trickle_preserves_content() {
+        let (upstream, _h) = echo_server();
+        let mut proxy = ChaosProxy::start(upstream, 4).unwrap();
+        proxy.push_fault(ConnFault { up: FaultKind::TruncateAfter(3), down: FaultKind::Pass });
+        let echoed = send_recv(proxy.addr, b"123456").unwrap_or_default();
+        assert!(echoed.len() <= 3, "at most the truncation budget arrives: {echoed:?}");
+        proxy.push_fault(ConnFault { up: FaultKind::Trickle, down: FaultKind::Pass });
+        let echoed = send_recv(proxy.addr, b"slowly").unwrap();
+        assert_eq!(echoed, b"slowly", "trickle reorders timing, not content");
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_prompt_even_with_pending_blackhole() {
+        let (upstream, _h) = echo_server();
+        let mut proxy = ChaosProxy::start(upstream, 5).unwrap();
+        proxy.push_fault(ConnFault {
+            up: FaultKind::BlackHole(Duration::from_secs(3600)),
+            down: FaultKind::BlackHole(Duration::from_secs(3600)),
+        });
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        s.write_all(b"into the void").unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // let pumps start
+        let t0 = Instant::now();
+        proxy.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(5), "stop must interrupt the black hole");
+    }
+}

@@ -30,6 +30,13 @@ pub struct Metrics {
     /// Worker threads respawned by the supervisor after a crash or init
     /// failure.
     pub worker_restarts: AtomicU64,
+    /// Wedged worker slots retired by the in-flight watchdog (a slot whose
+    /// batch blew its deadline plus `watchdog_grace` mid-`run_batch`).
+    pub watchdog_kills: AtomicU64,
+    /// In-flight requests stranded on a wedged slot and replied
+    /// `DeadlineExceeded` by the watchdog. Always `<= expired` (the
+    /// watchdog records each stranded request in `expired` too).
+    pub inflight_expired: AtomicU64,
     /// Backend invocations (bisection retries count individually).
     pub batches: AtomicU64,
     /// Sum of (unpadded) batch sizes — mean batch size = this / batches.
@@ -107,7 +114,8 @@ impl Metrics {
         let q = self.queue_hist.lock().unwrap();
         format!(
             "submitted={} completed={} failed={} shed={} expired={} rejected={} \
-             restarts={} batches={} mean_batch={:.2} deadline_flushes={} \
+             restarts={} watchdog_kills={} inflight_expired={} batches={} \
+             mean_batch={:.2} deadline_flushes={} \
              steals={} lane_submitted={}/{} lane_shed={}/{} peak_buckets={} | \
              e2e p50={:?} p99={:?} | exec mean={:?} | queue mean={:?}",
             self.submitted.load(Ordering::Relaxed),
@@ -117,6 +125,8 @@ impl Metrics {
             self.expired.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.worker_restarts.load(Ordering::Relaxed),
+            self.watchdog_kills.load(Ordering::Relaxed),
+            self.inflight_expired.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.deadline_flushes.load(Ordering::Relaxed),
@@ -191,6 +201,43 @@ impl NetMetrics {
     }
 }
 
+/// Client-side resilience counters for [`crate::coordinator::net::ResilientClient`],
+/// shared via `Arc` so several clients (or several threads of one test) can
+/// aggregate into one ledger for exact reconciliation.
+///
+/// Accounting invariants:
+/// - `client_retries` counts re-attempts only — a call that succeeds first
+///   try contributes 0;
+/// - `reconnects` counts TCP reconnections after an `Io` failure (the first
+///   lazy connect of a call is not a reconnect);
+/// - `circuit_opens` counts Closed/HalfOpen → Open transitions;
+/// - `circuit_open_rejections` counts calls refused fail-fast with
+///   [`crate::coordinator::net::ClientError::CircuitOpen`] (no wire traffic).
+#[derive(Debug, Default)]
+pub struct ClientMetrics {
+    /// Attempts beyond the first, across all calls.
+    pub client_retries: AtomicU64,
+    /// Connections re-established after an `Io` error.
+    pub reconnects: AtomicU64,
+    /// Times the circuit breaker tripped open.
+    pub circuit_opens: AtomicU64,
+    /// Calls refused while the circuit was open (before its cooldown).
+    pub circuit_open_rejections: AtomicU64,
+}
+
+impl ClientMetrics {
+    /// One-line summary for logs / test reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "client: retries={} reconnects={} circuit_opens={} circuit_rejections={}",
+            self.client_retries.load(Ordering::Relaxed),
+            self.reconnects.load(Ordering::Relaxed),
+            self.circuit_opens.load(Ordering::Relaxed),
+            self.circuit_open_rejections.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +287,29 @@ mod tests {
         assert!(s.contains("lane_submitted=5/0"), "{s}");
         assert!(s.contains("lane_shed=0/4"), "{s}");
         assert!(s.contains("peak_buckets=3"), "{s}");
+    }
+
+    #[test]
+    fn watchdog_counters_reported_in_summary() {
+        let m = Metrics::default();
+        m.watchdog_kills.fetch_add(2, Ordering::Relaxed);
+        m.inflight_expired.fetch_add(7, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("watchdog_kills=2"), "{s}");
+        assert!(s.contains("inflight_expired=7"), "{s}");
+    }
+
+    #[test]
+    fn client_metrics_summary_reports_every_counter() {
+        let c = ClientMetrics::default();
+        c.client_retries.store(9, Ordering::Relaxed);
+        c.reconnects.store(4, Ordering::Relaxed);
+        c.circuit_opens.store(2, Ordering::Relaxed);
+        c.circuit_open_rejections.store(6, Ordering::Relaxed);
+        let s = c.summary();
+        for needle in ["retries=9", "reconnects=4", "circuit_opens=2", "circuit_rejections=6"] {
+            assert!(s.contains(needle), "summary missing {needle}: {s}");
+        }
     }
 
     #[test]

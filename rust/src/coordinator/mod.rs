@@ -27,9 +27,14 @@
 //! - [`router`]   — multi-model front door mapping requests to coordinators.
 //! - [`net`]      — hardened TCP ingress: bounded frames, typed
 //!   [`net::WireStatus`] replies, a capped handler pool with accept-time
-//!   shedding, I/O timeouts, and drain-on-shutdown.
+//!   shedding, I/O timeouts, drain-on-shutdown, and the self-healing
+//!   [`net::ResilientClient`] (retry + reconnect + circuit breaker).
+//! - [`chaos`]    — deterministic TCP fault-injecting proxy for resilience
+//!   tests: seeded delay/truncate/corrupt/reset/black-hole/trickle faults
+//!   per connection and direction.
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
 pub mod metrics;
 pub mod net;
 pub mod request;
@@ -39,7 +44,11 @@ pub mod worker;
 
 pub use backend::{shared_native_factory, Backend, BackendFactory, MockBackend, NativeBackend, PjrtBackend};
 pub use batcher::{BatchPolicy, BatchQueue, ShedPolicy, SubmitError};
-pub use net::{ClientError, ImageSpec, NetClient, NetConfig, NetServer, WireError, WireStatus};
+pub use chaos::{ChaosProxy, ConnFault, FaultKind};
+pub use net::{
+    ClientError, ImageSpec, NetClient, NetConfig, NetServer, ResilientClient, RetryPolicy,
+    WireError, WireStatus,
+};
 pub use request::{InferError, InferReply, InferRequest, InferResponse, Priority, ShedReason};
 pub use router::{RouteError, Router, RouteStatusFn};
 pub use server::{Coordinator, CoordinatorConfig};

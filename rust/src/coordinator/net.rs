@@ -42,8 +42,13 @@
 //! - **Timeout-guarded I/O.** Per-connection read/write timeouts
 //!   (`io_timeout`) bound how long a slowloris client can pin a handler.
 //! - **Resilient accept loop.** Transient accept errors (`EMFILE`,
-//!   `ECONNABORTED`, ...) back off and retry; only `shutdown` stops the
-//!   listener.
+//!   `ECONNABORTED`, ...) back off and retry with a stop-aware wait; only
+//!   `shutdown` stops the listener, and it is never delayed by a backoff.
+//! - **Resilient client.** [`ResilientClient`] wraps [`NetClient`] with
+//!   reconnect-on-transport-error, jittered exponential retry of
+//!   `retryable()` statuses under an attempt/deadline budget, and a
+//!   half-open circuit breaker ([`ClientError::CircuitOpen`]) so edge
+//!   deployments don't re-derive fault handling.
 //! - **Drain on shutdown.** [`NetServer::shutdown`] stops accepting,
 //!   half-closes idle connections (their handlers see EOF and exit), waits
 //!   up to `drain_timeout` for in-flight requests to resolve, force-closes
@@ -66,10 +71,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::metrics::NetMetrics;
+use crate::coordinator::metrics::{ClientMetrics, NetMetrics};
 use crate::coordinator::request::Priority;
 use crate::coordinator::router::{RouteError, Router};
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// Built-in route answered by the server itself with a readiness report
 /// ([`WireStatus::Health`] reply). Model routes with this name are shadowed.
@@ -242,19 +248,31 @@ pub struct ImageSpec {
 /// `image` is special: its storage leaves with each admitted request (the
 /// coordinator owns the submitted tensor) and comes back through the
 /// handler's recycle ring at reply time — see `handle_conn`.
-struct FrameScratch {
+///
+/// Public (with public fields) so out-of-crate harnesses — the seeded frame
+/// fuzzer in `tests/frame_fuzz.rs` — can drive [`read_frame_into`] with
+/// deliberately dirty recycled buffers, exactly as the pooled reuse path
+/// produces them.
+pub struct FrameScratch {
     /// Route-name bytes of the current frame (UTF-8 validated by the parser).
-    route: Vec<u8>,
+    pub route: Vec<u8>,
     /// Raw little-endian payload bytes of the current frame.
-    payload: Vec<u8>,
+    pub payload: Vec<u8>,
     /// Decoded image floats of the current frame.
-    image: Vec<f32>,
+    pub image: Vec<f32>,
     /// Staged reply bytes, sent with one gathered write.
-    reply: Vec<u8>,
+    pub reply: Vec<u8>,
+}
+
+impl Default for FrameScratch {
+    fn default() -> FrameScratch {
+        FrameScratch::new()
+    }
 }
 
 impl FrameScratch {
-    fn new() -> FrameScratch {
+    /// Empty scratch (buffers grow to working size on first use).
+    pub fn new() -> FrameScratch {
         FrameScratch {
             route: Vec::new(),
             payload: Vec::new(),
@@ -266,7 +284,7 @@ impl FrameScratch {
     /// The current frame's route name. The parser only yields
     /// [`Frame::Infer`] after validating the bytes, so this never fails on
     /// that path; outside it a dirty buffer degrades to "".
-    fn route_str(&self) -> &str {
+    pub fn route_str(&self) -> &str {
         std::str::from_utf8(&self.route).unwrap_or("")
     }
 }
@@ -274,12 +292,17 @@ impl FrameScratch {
 /// One parsed request frame. Variable-size contents (route bytes, decoded
 /// image floats) live in the caller's [`FrameScratch`], not in the variant:
 /// the parser fills reused buffers instead of allocating per frame.
-enum Frame {
+pub enum Frame {
     /// Well-formed inference request: route in `scratch.route`, floats in
     /// `scratch.image` (length already validated against the
     /// [`ImageSpec`]). `lane_tagged` records whether the frame carried the
     /// optional lane byte (exact byte accounting).
-    Infer { priority: Priority, lane_tagged: bool },
+    Infer {
+        /// Scheduling lane decoded from the optional lane byte.
+        priority: Priority,
+        /// Whether the frame carried the lane byte (exact byte accounting).
+        lane_tagged: bool,
+    },
     /// The [`HEALTH_ROUTE`] built-in.
     Health,
     /// Client closed cleanly at a frame boundary.
@@ -287,11 +310,18 @@ enum Frame {
 }
 
 /// Why a frame was not parsed.
-enum FrameError {
+pub enum FrameError {
     /// Typed rejection. `fatal` marks the stream desynced (reply then
     /// close); otherwise the reader is positioned at the next frame and the
     /// connection keeps serving.
-    Reject { status: WireStatus, message: String, fatal: bool },
+    Reject {
+        /// Wire code sent back to the client.
+        status: WireStatus,
+        /// Human-readable rejection detail.
+        message: String,
+        /// Stream desynced: reply, then close the connection.
+        fatal: bool,
+    },
     /// Transport failure (mid-frame disconnect, timeout, ...).
     Io(std::io::Error),
 }
@@ -329,7 +359,11 @@ fn discard(r: &mut impl Read, mut n: u64) -> Result<(), FrameError> {
 /// buffer is `min(route_len, max_route_len)` + the spec-validated image
 /// payload — and on the steady-state path those buffers are reused, so no
 /// per-frame heap allocation happens at all once they reach working size.
-fn read_frame_into(
+///
+/// Public so the deterministic fuzz harness (`tests/frame_fuzz.rs`) can
+/// hammer the exact production parse path with mutated byte streams and
+/// dirty recycled scratch buffers.
+pub fn read_frame_into(
     r: &mut impl Read,
     spec: ImageSpec,
     cfg: &NetConfig,
@@ -639,6 +673,23 @@ impl Drop for NetServer {
     }
 }
 
+/// Sleep up to `total`, waking early (returning `false`) the moment `stop`
+/// flips. Sliced so an accept-error backoff (up to 500ms) never delays
+/// shutdown by more than one ~5ms slice.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return true;
+        }
+        std::thread::sleep((deadline - now).min(Duration::from_millis(5)));
+    }
+}
+
 fn accept_loop(
     listener: TcpListener,
     router: Arc<Router>,
@@ -670,9 +721,13 @@ fn accept_loop(
                 // Transient resource exhaustion (EMFILE/ENFILE from an fd
                 // flood, ECONNABORTED, ...): the listener must outlive the
                 // spike. Back off and retry — `break` is reserved for stop.
+                // The wait is stop-aware so shutdown never stalls behind a
+                // backoff in progress.
                 metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
                 log::warn!("accept failed (retrying in {backoff:?}): {e}");
-                std::thread::sleep(backoff);
+                if !sleep_unless_stopped(&stop, backoff) {
+                    break;
+                }
                 backoff = (backoff * 2).min(Duration::from_millis(500));
             }
         }
@@ -854,11 +909,16 @@ fn health_report(router: &Router, metrics: &NetMetrics) -> String {
             // routes report pre-warm / panel-cache state) append it here.
             let extra =
                 router.route_status(name).map(|s| format!(" [{s}]")).unwrap_or_default();
+            // Self-healing counters ride at the end so existing substring
+            // pins on the prefix (depth/state/extra) stay stable.
+            let m = c.metrics();
             routes.push(format!(
-                "{name} depth={}/{} {}{extra}",
+                "{name} depth={}/{} {}{extra} watchdog_kills={} inflight_expired={}",
                 c.queue_depth(),
                 c.queue_capacity(),
-                if failed { "dead" } else { "up" }
+                if failed { "dead" } else { "up" },
+                m.watchdog_kills.load(Ordering::Relaxed),
+                m.inflight_expired.load(Ordering::Relaxed),
             ));
         }
     }
@@ -897,12 +957,19 @@ pub enum ClientError {
     Io(std::io::Error),
     /// The server answered with a typed non-OK [`WireStatus`].
     Wire(WireError),
+    /// [`ResilientClient`]'s circuit breaker is open: the endpoint failed
+    /// repeatedly and the cooldown has not elapsed, so the call failed fast
+    /// without touching the network. Not retryable by the client itself —
+    /// callers should shed or fail over, then try again later.
+    CircuitOpen,
 }
 
 impl ClientError {
     /// True when retrying (after backoff, or elsewhere) can succeed:
     /// transient overload codes only. Transport errors are *not* marked
     /// retryable — the caller can't tell whether the request executed.
+    /// `CircuitOpen` is deliberately non-retryable: it exists to stop the
+    /// retry traffic.
     pub fn retryable(&self) -> bool {
         matches!(self, ClientError::Wire(w) if w.status.retryable())
     }
@@ -911,7 +978,7 @@ impl ClientError {
     pub fn wire_status(&self) -> Option<WireStatus> {
         match self {
             ClientError::Wire(w) => Some(w.status),
-            ClientError::Io(_) => None,
+            ClientError::Io(_) | ClientError::CircuitOpen => None,
         }
     }
 }
@@ -921,6 +988,9 @@ impl std::fmt::Display for ClientError {
         match self {
             ClientError::Io(e) => write!(f, "wire transport error: {e}"),
             ClientError::Wire(w) => write!(f, "{w}"),
+            ClientError::CircuitOpen => {
+                write!(f, "circuit breaker open: endpoint failing, cooldown not elapsed")
+            }
         }
     }
 }
@@ -1091,6 +1161,256 @@ impl NetClient {
 enum Reply {
     Ok(Vec<f32>, usize),
     Msg(WireStatus, String),
+}
+
+// ----------------------------------------------------- resilient client --
+
+/// Knobs for [`ResilientClient`]: retry budget, backoff shape, and circuit
+/// breaker thresholds. All durations are wall-clock.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per call, including the first (min 1).
+    pub max_attempts: u32,
+    /// Backoff before attempt 2 (doubles each retry, jittered ±50%).
+    pub base_backoff: Duration,
+    /// Cap on a single backoff sleep.
+    pub max_backoff: Duration,
+    /// Wall-clock budget for one call including backoffs; a retry whose
+    /// backoff would cross this deadline returns the last error instead.
+    /// `None` = bounded by `max_attempts` only.
+    pub call_deadline: Option<Duration>,
+    /// Consecutive failures that open the circuit.
+    pub failure_threshold: u32,
+    /// How long an open circuit fails fast before admitting one probe.
+    pub circuit_cooldown: Duration,
+    /// Seed for the jitter RNG — same seed, same backoff schedule, so
+    /// fault-injection tests are deterministic.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+            call_deadline: None,
+            failure_threshold: 3,
+            circuit_cooldown: Duration::from_millis(200),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Circuit breaker state: `Closed` (traffic flows) → `Open` (fail fast)
+/// after `failure_threshold` consecutive failures → `HalfOpen` (single
+/// probe) once `circuit_cooldown` elapses → `Closed` on probe success or
+/// back to `Open` on probe failure.
+enum Circuit {
+    Closed,
+    Open { since: Instant },
+    HalfOpen,
+}
+
+/// Self-healing wrapper around [`NetClient`]: reconnects on transport
+/// errors, retries retryable outcomes with jittered exponential backoff,
+/// and trips a half-open circuit breaker when the endpoint is down — the
+/// client half of the end-to-end fault contract in
+/// `docs/serving-robustness.md`.
+///
+/// Retry semantics are *at-least-once*: a transport error mid-call cannot
+/// tell whether the server executed the request, and classification is
+/// pure, so the client reconnects and resends. Callers needing exactly-once
+/// must deduplicate above this layer.
+///
+/// The connection is lazy — constructing the client does no I/O, so a
+/// client can be created against a not-yet-started (or currently dead)
+/// endpoint and will connect on first use.
+pub struct ResilientClient {
+    addr: String,
+    policy: RetryPolicy,
+    conn: Option<NetClient>,
+    circuit: Circuit,
+    consecutive_failures: u32,
+    ever_connected: bool,
+    io_timeout: Option<Duration>,
+    metrics: Arc<ClientMetrics>,
+    rng: Rng,
+}
+
+impl ResilientClient {
+    /// Build a client for `addr` (no I/O until the first call).
+    pub fn connect_lazy(addr: impl Into<String>, policy: RetryPolicy) -> ResilientClient {
+        ResilientClient::with_metrics(addr, policy, Arc::new(ClientMetrics::default()))
+    }
+
+    /// [`ResilientClient::connect_lazy`] with a shared metrics sink, so a
+    /// harness can reconcile retry/circuit counters across many clients.
+    pub fn with_metrics(
+        addr: impl Into<String>,
+        policy: RetryPolicy,
+        metrics: Arc<ClientMetrics>,
+    ) -> ResilientClient {
+        let seed = policy.seed;
+        ResilientClient {
+            addr: addr.into(),
+            policy,
+            conn: None,
+            circuit: Circuit::Closed,
+            consecutive_failures: 0,
+            ever_connected: false,
+            io_timeout: None,
+            metrics,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Socket read/write timeout applied to every (re)connection
+    /// (`None` = blocking). Takes effect from the next attempt.
+    pub fn set_io_timeout(&mut self, t: Option<Duration>) {
+        self.io_timeout = t;
+        if let Some(c) = self.conn.as_mut() {
+            let _ = c.set_io_timeout(t);
+        }
+    }
+
+    /// Retry/reconnect/circuit counters for this client.
+    pub fn metrics(&self) -> &ClientMetrics {
+        &self.metrics
+    }
+
+    /// True while the breaker is open (calls fail fast with
+    /// [`ClientError::CircuitOpen`] until the cooldown admits a probe).
+    pub fn circuit_open(&self) -> bool {
+        matches!(self.circuit, Circuit::Open { .. })
+    }
+
+    /// [`NetClient::classify`] with retries, reconnects, and the breaker.
+    pub fn classify(
+        &mut self,
+        route: &str,
+        image: &Tensor,
+    ) -> Result<(Vec<f32>, usize), ClientError> {
+        self.call(|c| c.classify(route, image))
+    }
+
+    /// [`NetClient::classify_with_priority`] through the resilience layer.
+    pub fn classify_with_priority(
+        &mut self,
+        route: &str,
+        image: &Tensor,
+        priority: Priority,
+    ) -> Result<(Vec<f32>, usize), ClientError> {
+        self.call(|c| c.classify_with_priority(route, image, priority))
+    }
+
+    /// [`NetClient::health`] through the resilience layer.
+    pub fn health(&mut self) -> Result<String, ClientError> {
+        self.call(|c| c.health())
+    }
+
+    /// The retry loop shared by every call: circuit admission → ensure
+    /// connected → attempt → on failure, classify (transport errors
+    /// reconnect-and-retry; `retryable()` wire statuses retry; everything
+    /// else is terminal) and back off within the attempt/deadline budget.
+    fn call<T>(
+        &mut self,
+        mut op: impl FnMut(&mut NetClient) -> Result<T, ClientError>,
+    ) -> Result<T, ClientError> {
+        let start = Instant::now();
+        let deadline = self.policy.call_deadline.map(|d| start + d);
+        let budget = self.policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            if let Circuit::Open { since } = self.circuit {
+                if since.elapsed() < self.policy.circuit_cooldown {
+                    self.metrics.circuit_open_rejections.fetch_add(1, Ordering::Relaxed);
+                    return Err(ClientError::CircuitOpen);
+                }
+                // Cooldown elapsed: this call is the single probe.
+                self.circuit = Circuit::HalfOpen;
+            }
+            let result = self.ensure_connected().and_then(|()| {
+                op(self.conn.as_mut().expect("ensure_connected fills conn"))
+            });
+            let e = match result {
+                Ok(v) => {
+                    self.on_success();
+                    return Ok(v);
+                }
+                Err(e) => e,
+            };
+            let transport = matches!(e, ClientError::Io(_));
+            if transport {
+                // The stream may be desynced mid-frame; never reuse it.
+                self.conn = None;
+            }
+            self.on_failure();
+            let out_of_budget = attempt >= budget;
+            // A freshly opened (or re-opened) circuit ends the call with the
+            // real error; the fail-fast path serves *subsequent* calls.
+            if (!transport && !e.retryable()) || out_of_budget || self.circuit_open() {
+                return Err(e);
+            }
+            let shift = (attempt - 1).min(10);
+            let exp = self
+                .policy
+                .base_backoff
+                .saturating_mul(1u32 << shift)
+                .min(self.policy.max_backoff);
+            // ±50% deterministic jitter decorrelates retry storms.
+            let sleep = exp.mul_f64(0.5 + self.rng.uniform());
+            if let Some(d) = deadline {
+                if Instant::now() + sleep >= d {
+                    return Err(e);
+                }
+            }
+            self.metrics.client_retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(sleep);
+        }
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), ClientError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut c = NetClient::connect(&self.addr[..]).map_err(|e| {
+            ClientError::Io(std::io::Error::new(
+                ErrorKind::ConnectionRefused,
+                format!("connect {}: {e:#}", self.addr),
+            ))
+        })?;
+        c.set_io_timeout(self.io_timeout)?;
+        if self.ever_connected {
+            self.metrics.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        self.ever_connected = true;
+        self.conn = Some(c);
+        Ok(())
+    }
+
+    fn on_success(&mut self) {
+        self.consecutive_failures = 0;
+        // A successful probe (or any success) closes the breaker.
+        self.circuit = Circuit::Closed;
+    }
+
+    fn on_failure(&mut self) {
+        self.consecutive_failures += 1;
+        let trip = match self.circuit {
+            // A failed probe re-opens immediately — one probe per cooldown.
+            Circuit::HalfOpen => true,
+            Circuit::Closed => {
+                self.consecutive_failures >= self.policy.failure_threshold.max(1)
+            }
+            Circuit::Open { .. } => false,
+        };
+        if trip {
+            self.circuit = Circuit::Open { since: Instant::now() };
+            self.metrics.circuit_opens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1467,5 +1787,124 @@ mod tests {
         expect.extend_from_slice(&0.5f32.to_le_bytes());
         expect.extend_from_slice(&0u32.to_le_bytes());
         assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn accept_backoff_sleep_interrupts_on_stop() {
+        let stop = Arc::new(AtomicBool::new(false));
+        // Uninterrupted short wait completes and reports true.
+        assert!(sleep_unless_stopped(&stop, Duration::from_millis(5)));
+        // A wait far longer than the test budget returns early once stop
+        // flips from another thread.
+        let s2 = Arc::clone(&stop);
+        let flipper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.store(true, Ordering::Relaxed);
+        });
+        let t0 = Instant::now();
+        let completed = sleep_unless_stopped(&stop, Duration::from_secs(30));
+        flipper.join().unwrap();
+        assert!(!completed, "stop must interrupt the backoff");
+        assert!(t0.elapsed() < Duration::from_secs(5), "interrupt must be prompt");
+    }
+
+    #[test]
+    fn resilient_client_round_trip_without_faults_spends_no_retries() {
+        let router = test_router();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+        let mut client =
+            ResilientClient::connect_lazy(server.addr.to_string(), RetryPolicy::default());
+        let (logits, predicted) =
+            client.classify("mock", &Tensor::filled(&[1, 1, 2, 2], 0.25)).unwrap();
+        assert_eq!(logits[0], 1.0);
+        assert_eq!(predicted, 0);
+        let report = client.health().unwrap();
+        assert!(report.contains("ready=true"), "{report}");
+        // Healthy endpoint: the resilience layer must be pure overhead.
+        let m = client.metrics();
+        assert_eq!(m.client_retries.load(Ordering::Relaxed), 0);
+        assert_eq!(m.reconnects.load(Ordering::Relaxed), 0);
+        assert_eq!(m.circuit_opens.load(Ordering::Relaxed), 0);
+        assert!(!client.circuit_open());
+        server.shutdown();
+    }
+
+    #[test]
+    fn resilient_client_terminal_rejection_is_not_retried() {
+        let router = test_router();
+        let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+        let mut client =
+            ResilientClient::connect_lazy(server.addr.to_string(), RetryPolicy::default());
+        let err = client.classify("nope", &Tensor::filled(&[1, 1, 2, 2], 0.1)).unwrap_err();
+        assert_eq!(err.wire_status(), Some(WireStatus::NoRoute));
+        assert_eq!(client.metrics().client_retries.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn circuit_opens_on_dead_endpoint_and_fails_fast() {
+        // Bind-then-drop reserves an address that now refuses connections.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let policy = RetryPolicy {
+            max_attempts: 1, // isolate circuit accounting from the retry loop
+            failure_threshold: 2,
+            circuit_cooldown: Duration::from_secs(3600),
+            ..RetryPolicy::default()
+        };
+        let img = Tensor::filled(&[1, 1, 2, 2], 0.1);
+        let mut client = ResilientClient::connect_lazy(dead_addr, policy);
+        // Two connect failures reach the threshold and trip the breaker.
+        for _ in 0..2 {
+            let err = client.classify("mock", &img).unwrap_err();
+            assert!(matches!(err, ClientError::Io(_)), "{err}");
+        }
+        assert!(client.circuit_open());
+        let m = client.metrics();
+        assert_eq!(m.circuit_opens.load(Ordering::Relaxed), 1);
+        // Within the cooldown every call fails fast without touching the
+        // network, with the typed non-retryable error.
+        let t0 = Instant::now();
+        let err = client.classify("mock", &img).unwrap_err();
+        assert!(matches!(err, ClientError::CircuitOpen), "{err}");
+        assert!(!err.retryable());
+        assert_eq!(err.wire_status(), None);
+        assert!(t0.elapsed() < Duration::from_secs(1), "fail-fast must not dial");
+        assert_eq!(m.circuit_open_rejections.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn half_open_probe_closes_circuit_on_recovery() {
+        // Start dead, trip the breaker, then bring a real server up on the
+        // same address and watch the single probe close the circuit.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let policy = RetryPolicy {
+            max_attempts: 1,
+            failure_threshold: 1,
+            circuit_cooldown: Duration::from_millis(10),
+            ..RetryPolicy::default()
+        };
+        let img = Tensor::filled(&[1, 1, 2, 2], 0.5);
+        let mut client = ResilientClient::connect_lazy(addr.to_string(), policy);
+        client.classify("mock", &img).unwrap_err();
+        assert!(client.circuit_open());
+        // Rebinding the exact port can race another process; tolerate a
+        // failure by skipping (the chaos suite covers this end-to-end).
+        let router = test_router();
+        let server = match NetServer::serve(addr, router, SPEC) {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        std::thread::sleep(Duration::from_millis(20)); // let the cooldown lapse
+        let (logits, _) = client.classify("mock", &img).unwrap();
+        assert_eq!(logits[0], 2.0);
+        assert!(!client.circuit_open(), "successful probe must close the breaker");
+        // Never-connected dials don't count as reconnects.
+        assert_eq!(client.metrics().reconnects.load(Ordering::Relaxed), 0);
+        server.shutdown();
     }
 }

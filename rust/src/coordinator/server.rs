@@ -56,6 +56,13 @@ pub struct CoordinatorConfig {
     /// Schedule the interactive lane ahead of bulk and shed bulk first
     /// (see [`Priority`]).
     pub priority_lanes: bool,
+    /// In-flight watchdog grace: a worker still executing a batch past the
+    /// batch's deadline plus this grace is declared wedged — the stranded
+    /// requests get typed [`InferError::DeadlineExceeded`] replies and the
+    /// slot is respawned through the capped-backoff restart path. `None`
+    /// (the default) disables the watchdog; requests without a deadline are
+    /// never watchdog-killed either way.
+    pub watchdog_grace: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,6 +80,7 @@ impl Default for CoordinatorConfig {
             shards: 0,
             steal: true,
             priority_lanes: true,
+            watchdog_grace: None,
         }
     }
 }
@@ -122,6 +130,7 @@ impl Coordinator {
                 restart_limit: config.restart_limit,
                 restart_backoff: config.restart_backoff,
                 retry_budget: config.retry_budget,
+                watchdog_grace: config.watchdog_grace,
             },
         );
         if !ready_rx.recv().unwrap_or(false) {
@@ -485,6 +494,80 @@ mod tests {
         let m = c.shutdown();
         assert_eq!(m.lane_submitted[0].load(Ordering::Relaxed), 16);
         assert_eq!(m.lane_submitted[1].load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn watchdog_recovers_wedged_worker_and_expires_in_flight() {
+        use std::sync::atomic::AtomicBool;
+        // First run_batch call across the pool hangs until `release`; the
+        // supervisor watchdog must expire the stranded request and respawn
+        // the slot without waiting for the hung call to return.
+        struct WedgeOnce {
+            wedge: Arc<AtomicBool>,
+            release: Arc<AtomicBool>,
+            inner: MockBackend,
+        }
+        impl Backend for WedgeOnce {
+            fn run_batch(&mut self, b: &Tensor) -> anyhow::Result<Tensor> {
+                if self.wedge.swap(false, Ordering::SeqCst) {
+                    while !self.release.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    anyhow::bail!("unwedged late");
+                }
+                self.inner.run_batch(b)
+            }
+            fn describe(&self) -> String {
+                "wedge-once".into()
+            }
+        }
+        let wedge = Arc::new(AtomicBool::new(true));
+        let release = Arc::new(AtomicBool::new(false));
+        let calls = Arc::new(AU64::new(0));
+        let (w2, r2) = (Arc::clone(&wedge), Arc::clone(&release));
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(WedgeOnce {
+                wedge: Arc::clone(&w2),
+                release: Arc::clone(&r2),
+                inner: MockBackend {
+                    classes: 4,
+                    delay: Duration::ZERO,
+                    calls: Arc::clone(&calls),
+                },
+            }) as Box<dyn Backend>)
+        });
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 64,
+            default_deadline: Some(Duration::from_millis(100)),
+            watchdog_grace: Some(Duration::from_millis(50)),
+            restart_backoff: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, factory).unwrap();
+        let t0 = Instant::now();
+        let rx = c.submit(img(1.0)).unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Err(InferError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded from the watchdog, got {other:?}"),
+        }
+        // Bounded recovery: deadline + grace + backoff, plus sweep tick and
+        // scheduling slack — far below the 10s receiver bound either way.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // The replacement worker serves traffic while the zombie still hangs.
+        let resp = c.infer(img(0.5)).unwrap();
+        assert_eq!(resp.logits[0], 2.0);
+        let m = c.metrics();
+        assert_eq!(m.watchdog_kills.load(Ordering::Relaxed), 1);
+        assert_eq!(m.inflight_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        assert!(m.worker_restarts.load(Ordering::Relaxed) >= 1);
+        // Unwedge the zombie before teardown so the detached thread exits.
+        release.store(true, Ordering::SeqCst);
+        let m = c.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //!   slot has exhausted its restart budget it fails the queue —
 //!   submissions refuse with `NoWorkers` and queued requests get error
 //!   replies instead of hanging forever.
+//! - **In-flight watchdog** (optional, `SupervisorConfig::watchdog_grace`):
+//!   workers stamp a shared per-slot slab when they take a batch (busy
+//!   since, batch deadline, per-request reply senders). A supervisor-side
+//!   sweep detects a slot still busy past its batch deadline plus the
+//!   grace, replies `DeadlineExceeded` to the stranded requests through
+//!   the cloned senders, detaches the wedged thread (it can never be
+//!   killed, only abandoned), and respawns the slot through the normal
+//!   capped-backoff path. An epoch'd claim protocol makes double replies
+//!   structurally impossible: the right to reply to a request transfers
+//!   atomically between worker and watchdog.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
@@ -46,6 +56,12 @@ pub struct SupervisorConfig {
     /// Max backend invocations per popped batch (first attempt + bisection
     /// retries). Full bisection of a batch of n costs at most 2n-1.
     pub retry_budget: u32,
+    /// In-flight watchdog: a slot still executing a batch past the batch's
+    /// deadline plus this grace is declared wedged — its stranded requests
+    /// get `DeadlineExceeded` replies and the slot is respawned. `None`
+    /// disables the watchdog (batches may run unboundedly long). Batches
+    /// whose requests carry no deadline are never watchdog-killed.
+    pub watchdog_grace: Option<Duration>,
 }
 
 /// How a worker thread ended.
@@ -60,9 +76,111 @@ enum WorkerExit {
 }
 
 enum WorkerEvent {
-    /// Backend built successfully; the worker is serving.
-    Ready(usize),
-    Exited(usize, WorkerExit),
+    /// Backend built successfully; the worker is serving. Carries the
+    /// slot's incarnation so events from a detached (wedged) predecessor
+    /// are recognized as stale and ignored.
+    Ready(usize, u64),
+    Exited(usize, u64, WorkerExit),
+}
+
+/// Shared in-flight bookkeeping: one slot per worker, stamped when a batch
+/// is taken and cleared when `run_batch` returns. The supervisor's watchdog
+/// sweep reads it to find wedged slots.
+pub(crate) struct InflightSlab {
+    pub(crate) slots: Vec<InflightSlot>,
+}
+
+impl InflightSlab {
+    fn new(n: usize) -> InflightSlab {
+        InflightSlab { slots: (0..n).map(|_| InflightSlot::default()).collect() }
+    }
+}
+
+/// Per-slot in-flight state behind one short-lived mutex.
+#[derive(Default)]
+pub(crate) struct InflightSlot {
+    state: std::sync::Mutex<SlotState>,
+}
+
+#[derive(Default)]
+struct SlotState {
+    /// Bumped on every stamp *and* on every watchdog kill. A worker holding
+    /// a stale epoch has lost the right to reply: its claims fail and it
+    /// must abandon the batch.
+    epoch: u64,
+    busy_since: Option<Instant>,
+    /// Earliest deadline across the stamped batch; `None` when no request
+    /// carries one (such a batch is never watchdog-killed).
+    deadline: Option<Instant>,
+    /// `(request id, reply sender clone)` for every not-yet-replied request
+    /// of the stamped batch. Claiming removes the entry; a watchdog kill
+    /// drains whatever is left.
+    pending: Vec<(u64, mpsc::Sender<crate::coordinator::request::InferReply>)>,
+}
+
+impl InflightSlot {
+    /// Stamp a freshly popped batch; returns the epoch the worker must
+    /// present with every claim.
+    fn stamp(&self, batch: &[InferRequest]) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        s.epoch += 1;
+        s.busy_since = Some(Instant::now());
+        s.deadline = batch.iter().filter_map(|r| r.deadline).min();
+        s.pending = batch.iter().map(|r| (r.id, r.reply.clone())).collect();
+        s.epoch
+    }
+
+    /// Acquire the right to reply to `id`. Fails when the watchdog has
+    /// already killed this epoch (the watchdog replied; the worker must
+    /// stay silent) — the reply right moves atomically, never duplicates.
+    pub(crate) fn claim(&self, epoch: u64, id: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.epoch != epoch {
+            return false;
+        }
+        match s.pending.iter().position(|(pid, _)| *pid == id) {
+            Some(i) => {
+                s.pending.swap_remove(i);
+                true
+            }
+            // Unreachable if callers claim each id once; refusing to reply
+            // is the safe failure mode (the other side must hold the right).
+            None => false,
+        }
+    }
+
+    /// Clear the stamp after `run_batch` returns; no-op if the watchdog
+    /// already confiscated this epoch.
+    fn finish(&self, epoch: u64) {
+        let mut s = self.state.lock().unwrap();
+        if s.epoch == epoch {
+            s.busy_since = None;
+            s.deadline = None;
+            s.pending.clear();
+        }
+    }
+
+    /// Watchdog check: if the slot is busy past its batch deadline plus
+    /// `grace`, bump the epoch (confiscating the worker's reply rights) and
+    /// return the stranded `(id, sender)` pairs. `None` = slot healthy.
+    fn check_wedged(
+        &self,
+        now: Instant,
+        grace: Duration,
+    ) -> Option<Vec<(u64, mpsc::Sender<crate::coordinator::request::InferReply>)>> {
+        let mut s = self.state.lock().unwrap();
+        if s.busy_since.is_none() {
+            return None;
+        }
+        let deadline = s.deadline?;
+        if now < deadline + grace {
+            return None;
+        }
+        s.epoch += 1;
+        s.busy_since = None;
+        s.deadline = None;
+        Some(std::mem::take(&mut s.pending))
+    }
 }
 
 /// Spawn `cfg.workers` supervised worker slots plus the supervisor thread.
@@ -86,6 +204,37 @@ pub fn supervise(
     (handle, ready_rx)
 }
 
+/// Sleep up to `total` in short slices, returning early (false) as soon as
+/// the queue shuts down or fails — restart backoff must never delay
+/// teardown by the full backoff.
+fn wait_interruptible(queue: &BatchQueue, total: Duration) -> bool {
+    const SLICE: Duration = Duration::from_millis(5);
+    let until = Instant::now() + total;
+    loop {
+        if queue.is_shutdown() || queue.is_failed() {
+            return false;
+        }
+        let now = Instant::now();
+        if now >= until {
+            return true;
+        }
+        thread::sleep((until - now).min(SLICE));
+    }
+}
+
+/// Everything the supervisor mutates per slot, grouped so the crash path
+/// and the watchdog kill path can share the failure/backoff/respawn logic.
+struct SlotTable {
+    handles: Vec<Option<thread::JoinHandle<()>>>,
+    /// Consecutive failed respawns per slot (reset by a successful init).
+    failures: Vec<u32>,
+    dead: Vec<bool>,
+    drained: Vec<bool>,
+    /// Bumped on every (re)spawn; events carrying an older incarnation come
+    /// from a detached predecessor and are ignored.
+    incarnation: Vec<u64>,
+}
+
 fn supervisor_loop(
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
@@ -95,35 +244,63 @@ fn supervisor_loop(
 ) {
     let n = cfg.workers;
     let (ev_tx, ev_rx) = mpsc::channel::<WorkerEvent>();
-    let mut handles: Vec<Option<thread::JoinHandle<()>>> = Vec::with_capacity(n);
+    let slab = cfg.watchdog_grace.map(|_| Arc::new(InflightSlab::new(n)));
+    let mut slots = SlotTable {
+        handles: Vec::with_capacity(n),
+        failures: vec![0u32; n],
+        dead: vec![false; n],
+        drained: vec![false; n],
+        incarnation: vec![0u64; n],
+    };
     for slot in 0..n {
-        handles.push(Some(spawn_worker(
+        slots.handles.push(Some(spawn_worker(
             slot,
+            0,
             Arc::clone(&queue),
             Arc::clone(&metrics),
             Arc::clone(&factory),
             cfg.retry_budget,
+            slab.clone(),
             ev_tx.clone(),
         )));
     }
-    // Per-slot state: consecutive respawn failures, and whether the slot is
-    // permanently dead or exited cleanly.
-    let mut failures = vec![0u32; n];
-    let mut dead = vec![false; n];
-    let mut drained = vec![false; n];
     let mut ever_ready = false;
     let mut init_reported = false;
 
     loop {
-        if (0..n).all(|s| dead[s] || drained[s]) {
+        if (0..n).all(|s| slots.dead[s] || slots.drained[s]) {
             break;
         }
         // The supervisor holds an ev_tx clone, so recv() only errors on a
-        // logic bug; treat it as a signal to stop rather than panic.
-        let Ok(ev) = ev_rx.recv() else { break };
+        // logic bug; treat it as a signal to stop rather than panic. With
+        // the watchdog on, wait with a timeout and sweep between events.
+        let ev = match cfg.watchdog_grace {
+            None => match ev_rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break,
+            },
+            Some(grace) => {
+                let tick = (grace / 4)
+                    .clamp(Duration::from_millis(1), Duration::from_millis(100));
+                match ev_rx.recv_timeout(tick) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        watchdog_sweep(
+                            grace, &queue, &metrics, &factory, &cfg, &ev_tx,
+                            slab.as_ref().unwrap(), &mut slots,
+                        );
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
         match ev {
-            WorkerEvent::Ready(slot) => {
-                failures[slot] = 0;
+            WorkerEvent::Ready(slot, inc) => {
+                if inc != slots.incarnation[slot] {
+                    continue; // stale: a detached predecessor came up late
+                }
+                slots.failures[slot] = 0;
                 if !ever_ready {
                     ever_ready = true;
                     if !init_reported {
@@ -132,89 +309,165 @@ fn supervisor_loop(
                     }
                 }
             }
-            WorkerEvent::Exited(slot, WorkerExit::Drained) => {
-                drained[slot] = true;
-                if let Some(h) = handles[slot].take() {
-                    let _ = h.join();
+            WorkerEvent::Exited(slot, inc, exit) => {
+                if inc != slots.incarnation[slot] {
+                    // A wedged worker we already replaced finally returned;
+                    // its handle was detached and its requests were replied
+                    // by the watchdog. Nothing to do.
+                    log::debug!("worker {slot} (stale incarnation {inc}) exited late");
+                    continue;
                 }
-            }
-            WorkerEvent::Exited(slot, exit) => {
-                let why = match &exit {
-                    WorkerExit::InitFailed(e) => format!("backend init failed: {e}"),
-                    WorkerExit::Crashed(e) => format!("crashed: {e}"),
-                    WorkerExit::Drained => unreachable!(),
-                };
-                if let Some(h) = handles[slot].take() {
-                    let _ = h.join();
-                }
-                if queue.is_shutdown() || queue.is_failed() {
-                    log::warn!("worker {slot} {why}; not restarting (tearing down)");
-                    dead[slot] = true;
-                } else {
-                    failures[slot] += 1;
-                    if failures[slot] > cfg.restart_limit {
-                        log::error!(
-                            "worker {slot} {why}; restart budget ({}) exhausted — slot abandoned",
-                            cfg.restart_limit
-                        );
-                        dead[slot] = true;
-                    } else {
-                        let backoff = cfg
-                            .restart_backoff
-                            .saturating_mul(1u32 << (failures[slot] - 1).min(10))
-                            .min(Duration::from_secs(1));
-                        log::warn!(
-                            "worker {slot} {why}; restart {}/{} in {backoff:?}",
-                            failures[slot],
-                            cfg.restart_limit
-                        );
-                        thread::sleep(backoff);
-                        if queue.is_shutdown() || queue.is_failed() {
-                            dead[slot] = true;
-                        } else {
-                            metrics
-                                .worker_restarts
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            handles[slot] = Some(spawn_worker(
-                                slot,
-                                Arc::clone(&queue),
-                                Arc::clone(&metrics),
-                                Arc::clone(&factory),
-                                cfg.retry_budget,
-                                ev_tx.clone(),
-                            ));
-                        }
+                if matches!(exit, WorkerExit::Drained) {
+                    slots.drained[slot] = true;
+                    if let Some(h) = slots.handles[slot].take() {
+                        let _ = h.join();
                     }
+                } else {
+                    let why = match &exit {
+                        WorkerExit::InitFailed(e) => format!("backend init failed: {e}"),
+                        WorkerExit::Crashed(e) => format!("crashed: {e}"),
+                        WorkerExit::Drained => unreachable!(),
+                    };
+                    if let Some(h) = slots.handles[slot].take() {
+                        let _ = h.join();
+                    }
+                    restart_slot(
+                        slot, &why, &queue, &metrics, &factory, &cfg, &ev_tx,
+                        slab.as_ref(), &mut slots,
+                    );
                 }
             }
         }
         // All slots dead without a single successful init: report failed
         // construction to a waiting `Coordinator::start`.
-        if !init_reported && (0..n).all(|s| dead[s]) {
+        if !init_reported && (0..n).all(|s| slots.dead[s]) {
             init_reported = true;
             let _ = ready_tx.send(false);
         }
     }
     // Pool died (no slot exited via a clean drain) outside of shutdown:
     // flip the fail-fast state so nothing ever hangs on this queue.
-    if (0..n).all(|s| dead[s]) && !queue.is_shutdown() {
+    if (0..n).all(|s| slots.dead[s]) && !queue.is_shutdown() {
         log::error!("all {n} worker slots dead — failing the queue (NoWorkers)");
         queue.fail();
     }
     if !init_reported {
         let _ = ready_tx.send(ever_ready);
     }
-    for h in handles.iter_mut().filter_map(|h| h.take()) {
+    for h in slots.handles.iter_mut().filter_map(|h| h.take()) {
         let _ = h.join();
     }
 }
 
+/// One watchdog pass over the live slots: reply `DeadlineExceeded` to every
+/// request stranded on a wedged slot, detach the wedged thread (threads
+/// cannot be killed — the zombie discovers its confiscated epoch on return
+/// and exits silently), and respawn through the shared backoff path.
+#[allow(clippy::too_many_arguments)]
+fn watchdog_sweep(
+    grace: Duration,
+    queue: &Arc<BatchQueue>,
+    metrics: &Arc<Metrics>,
+    factory: &Arc<BackendFactory>,
+    cfg: &SupervisorConfig,
+    ev_tx: &mpsc::Sender<WorkerEvent>,
+    slab: &Arc<InflightSlab>,
+    slots: &mut SlotTable,
+) {
+    let now = Instant::now();
+    for slot in 0..cfg.workers {
+        if slots.dead[slot] || slots.drained[slot] {
+            continue;
+        }
+        let Some(stranded) = slab.slots[slot].check_wedged(now, grace) else {
+            continue;
+        };
+        let n = stranded.len();
+        for (id, tx) in stranded {
+            // No recycle: the wedged worker may still read the image buffer.
+            log::warn!("request {id}: stranded on wedged worker {slot}; expiring");
+            metrics.record_error(&InferError::DeadlineExceeded);
+            metrics
+                .inflight_expired
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = tx.send(Err(InferError::DeadlineExceeded));
+        }
+        metrics.watchdog_kills.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Detach, never join: the thread is hung inside the backend.
+        drop(slots.handles[slot].take());
+        restart_slot(
+            slot,
+            &format!("wedged mid-batch ({n} in-flight requests expired)"),
+            queue, metrics, factory, cfg, ev_tx, Some(slab), slots,
+        );
+    }
+}
+
+/// Shared tail of the crash and watchdog-kill paths: count the failure,
+/// back off (interruptibly), and respawn the slot with a new incarnation —
+/// or abandon it when the restart budget is spent.
+#[allow(clippy::too_many_arguments)]
+fn restart_slot(
+    slot: usize,
+    why: &str,
+    queue: &Arc<BatchQueue>,
+    metrics: &Arc<Metrics>,
+    factory: &Arc<BackendFactory>,
+    cfg: &SupervisorConfig,
+    ev_tx: &mpsc::Sender<WorkerEvent>,
+    slab: Option<&Arc<InflightSlab>>,
+    slots: &mut SlotTable,
+) {
+    if queue.is_shutdown() || queue.is_failed() {
+        log::warn!("worker {slot} {why}; not restarting (tearing down)");
+        slots.dead[slot] = true;
+        return;
+    }
+    slots.failures[slot] += 1;
+    if slots.failures[slot] > cfg.restart_limit {
+        log::error!(
+            "worker {slot} {why}; restart budget ({}) exhausted — slot abandoned",
+            cfg.restart_limit
+        );
+        slots.dead[slot] = true;
+        return;
+    }
+    let backoff = cfg
+        .restart_backoff
+        .saturating_mul(1u32 << (slots.failures[slot] - 1).min(10))
+        .min(Duration::from_secs(1));
+    log::warn!(
+        "worker {slot} {why}; restart {}/{} in {backoff:?}",
+        slots.failures[slot],
+        cfg.restart_limit
+    );
+    if !wait_interruptible(queue, backoff) {
+        slots.dead[slot] = true;
+        return;
+    }
+    metrics.worker_restarts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    slots.incarnation[slot] += 1;
+    slots.handles[slot] = Some(spawn_worker(
+        slot,
+        slots.incarnation[slot],
+        Arc::clone(queue),
+        Arc::clone(metrics),
+        Arc::clone(factory),
+        cfg.retry_budget,
+        slab.map(Arc::clone),
+        ev_tx.clone(),
+    ));
+}
+
+#[allow(clippy::too_many_arguments)]
 fn spawn_worker(
     slot: usize,
+    incarnation: u64,
     queue: Arc<BatchQueue>,
     metrics: Arc<Metrics>,
     factory: Arc<BackendFactory>,
     retry_budget: u32,
+    slab: Option<Arc<InflightSlab>>,
     events: mpsc::Sender<WorkerEvent>,
 ) -> thread::JoinHandle<()> {
     thread::Builder::new()
@@ -224,35 +477,64 @@ fn spawn_worker(
             // Backstop: a panic anywhere in the worker loop (not just inside
             // the backend call) still reports Crashed instead of vanishing.
             let exit = catch_unwind(AssertUnwindSafe(|| {
-                worker_main(slot, &queue, &metrics, &factory, retry_budget, &ev2)
+                worker_main(
+                    slot,
+                    incarnation,
+                    &queue,
+                    &metrics,
+                    &factory,
+                    retry_budget,
+                    slab.as_deref(),
+                    &ev2,
+                )
             }))
             .unwrap_or_else(|p| WorkerExit::Crashed(panic_message(&p)));
-            let _ = events.send(WorkerEvent::Exited(slot, exit));
+            let _ = events.send(WorkerEvent::Exited(slot, incarnation, exit));
         })
         .expect("spawn worker")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     slot: usize,
+    incarnation: u64,
     queue: &BatchQueue,
     metrics: &Metrics,
     factory: &BackendFactory,
     retry_budget: u32,
+    slab: Option<&InflightSlab>,
     events: &mpsc::Sender<WorkerEvent>,
 ) -> WorkerExit {
     let mut backend = match factory() {
         Ok(b) => b,
         Err(e) => return WorkerExit::InitFailed(format!("{e:#}")),
     };
-    let _ = events.send(WorkerEvent::Ready(slot));
+    let _ = events.send(WorkerEvent::Ready(slot, incarnation));
     log::info!("worker {slot}: {}", backend.describe());
     // The slot index doubles as the worker's home-shard identity: slot i
     // drains shard `i % shards` first and steals from siblings after.
     while let Some((batch, reason)) = queue.pop_batch_from(slot) {
-        if let BatchOutcome::WorkerPoisoned(msg) =
-            run_batch(&mut *backend, batch, reason, metrics, retry_budget)
-        {
-            return WorkerExit::Crashed(format!("backend panicked: {msg}"));
+        // Stamp before running so the watchdog can see this batch; clear
+        // after (a no-op if the watchdog confiscated the epoch meanwhile).
+        let watch = slab.map(|s| {
+            let cell = &s.slots[slot];
+            (cell, cell.stamp(&batch))
+        });
+        let outcome = run_batch(&mut *backend, batch, reason, metrics, retry_budget, watch);
+        if let Some((cell, epoch)) = watch {
+            cell.finish(epoch);
+        }
+        match outcome {
+            BatchOutcome::Completed => {}
+            BatchOutcome::WorkerPoisoned(msg) => {
+                return WorkerExit::Crashed(format!("backend panicked: {msg}"));
+            }
+            BatchOutcome::Stranded => {
+                // The watchdog declared this incarnation wedged and already
+                // replied to the batch; this thread is a detached zombie and
+                // must exit without touching anything else.
+                return WorkerExit::Crashed("stranded by watchdog".into());
+            }
         }
     }
     log::debug!("worker {slot}: queue drained, exiting");
@@ -267,6 +549,11 @@ pub(crate) enum BatchOutcome {
     /// The backend panicked — every request got a typed reply, but the
     /// backend's internal state is unknown and the worker must be replaced.
     WorkerPoisoned(String),
+    /// The watchdog confiscated this batch's epoch mid-run: the stranded
+    /// requests were already replied `DeadlineExceeded` by the supervisor
+    /// and this worker has been detached and replaced. It must exit without
+    /// replying to anything.
+    Stranded,
 }
 
 /// Execute one popped batch, replying exactly once to every request.
@@ -279,14 +566,23 @@ pub(crate) enum BatchOutcome {
 /// single `BackendFailed` reply. Backend panics are caught; the current
 /// sub-batch and all not-yet-run splits get `BackendFailed` replies and the
 /// caller is told to retire the worker.
+///
+/// `watch` is the in-flight watchdog handle (`None` when disabled): every
+/// reply is preceded by an epoch'd claim, so if the supervisor declared
+/// this batch wedged mid-run, the remaining requests are dropped silently
+/// (the watchdog already replied) and [`BatchOutcome::Stranded`] is
+/// returned.
 pub(crate) fn run_batch(
     backend: &mut dyn crate::coordinator::backend::Backend,
     batch: Vec<InferRequest>,
     reason: FlushReason,
     metrics: &Metrics,
     retry_budget: u32,
+    watch: Option<(&InflightSlot, u64)>,
 ) -> BatchOutcome {
     debug_assert!(!batch.is_empty());
+    let claimed = |id: u64| watch.map_or(true, |(cell, epoch)| cell.claim(epoch, id));
+    let mut stranded = false;
     let formed_at = Instant::now();
     // Release-mode shape screen: one route = one input geometry. The first
     // request defines the batch shape; stragglers get typed errors instead
@@ -297,16 +593,20 @@ pub(crate) fn run_batch(
         if r.image.shape() != &expected[..] {
             let got = r.image.shape().to_vec();
             log::warn!("request {}: shape {got:?} != batch shape {expected:?}", r.id);
-            r.respond_err(
-                InferError::ShapeMismatch { expected: expected.clone(), got },
-                metrics,
-            );
+            if claimed(r.id) {
+                r.respond_err(
+                    InferError::ShapeMismatch { expected: expected.clone(), got },
+                    metrics,
+                );
+            } else {
+                stranded = true;
+            }
         } else {
             good.push(r);
         }
     }
     if good.is_empty() {
-        return BatchOutcome::Completed;
+        return if stranded { BatchOutcome::Stranded } else { BatchOutcome::Completed };
     }
 
     // Bisection worklist (LIFO so the left half runs first, preserving
@@ -315,14 +615,24 @@ pub(crate) fn run_batch(
     let mut first = true;
     let mut pending: Vec<Vec<InferRequest>> = vec![good];
     while let Some(mut reqs) = pending.pop() {
+        if stranded {
+            // Epoch confiscated: reply rights belong to the watchdog now.
+            // Dropping the remaining requests is correct — their receivers
+            // already have the watchdog's DeadlineExceeded reply.
+            break;
+        }
         if budget == 0 {
             for r in reqs {
-                r.respond_err(
-                    InferError::BackendFailed {
-                        message: "retry budget exhausted during bisection".into(),
-                    },
-                    metrics,
-                );
+                if claimed(r.id) {
+                    r.respond_err(
+                        InferError::BackendFailed {
+                            message: "retry budget exhausted during bisection".into(),
+                        },
+                        metrics,
+                    );
+                } else {
+                    stranded = true;
+                }
             }
             continue;
         }
@@ -343,15 +653,23 @@ pub(crate) fn run_batch(
                     );
                     log::error!("{message}");
                     for r in reqs {
-                        r.respond_err(
-                            InferError::BackendFailed { message: message.clone() },
-                            metrics,
-                        );
+                        if claimed(r.id) {
+                            r.respond_err(
+                                InferError::BackendFailed { message: message.clone() },
+                                metrics,
+                            );
+                        } else {
+                            stranded = true;
+                        }
                     }
                     continue;
                 }
                 let classes = logits.dim(1);
                 for (i, req) in reqs.into_iter().enumerate() {
+                    if !claimed(req.id) {
+                        stranded = true;
+                        continue;
+                    }
                     let queue_time = formed_at.duration_since(req.submitted_at);
                     let resp = InferResponse::from_logits(
                         req.id,
@@ -374,10 +692,14 @@ pub(crate) fn run_batch(
             Ok(Err(e)) => {
                 log::error!("request {} failed: {e:#}", reqs[0].id);
                 for r in reqs {
-                    r.respond_err(
-                        InferError::BackendFailed { message: format!("{e:#}") },
-                        metrics,
-                    );
+                    if claimed(r.id) {
+                        r.respond_err(
+                            InferError::BackendFailed { message: format!("{e:#}") },
+                            metrics,
+                        );
+                    } else {
+                        stranded = true;
+                    }
                 }
             }
             Err(p) => {
@@ -387,13 +709,17 @@ pub(crate) fn run_batch(
                     message: format!("backend panicked: {msg}"),
                 };
                 for r in reqs.into_iter().chain(pending.into_iter().flatten()) {
-                    r.respond_err(err.clone(), metrics);
+                    if claimed(r.id) {
+                        r.respond_err(err.clone(), metrics);
+                    } else {
+                        stranded = true;
+                    }
                 }
                 return BatchOutcome::WorkerPoisoned(msg);
             }
         }
     }
-    BatchOutcome::Completed
+    if stranded { BatchOutcome::Stranded } else { BatchOutcome::Completed }
 }
 
 /// Assemble `(n, C, H, W)` from per-request `(1, C, H, W)` images (all
@@ -435,7 +761,7 @@ pub fn run_one(
         reply: tx,
         recycle: None,
     };
-    let _ = run_batch(backend, vec![req], FlushReason::Full, &Metrics::default(), 1);
+    let _ = run_batch(backend, vec![req], FlushReason::Full, &Metrics::default(), 1, None);
     match rx.recv() {
         Ok(Ok(resp)) => Ok(resp),
         Ok(Err(e)) => Err(e.into()),
@@ -520,7 +846,7 @@ mod tests {
             reqs.push(r);
             rxs.push(rx);
         }
-        let out = run_batch(&mut b, reqs, FlushReason::Full, &metrics, 2 * 8);
+        let out = run_batch(&mut b, reqs, FlushReason::Full, &metrics, 2 * 8, None);
         assert!(matches!(out, BatchOutcome::Completed));
         for (i, rx) in rxs.into_iter().enumerate() {
             let reply = rx.try_recv().expect("every request replied");
@@ -548,7 +874,7 @@ mod tests {
         }
         let metrics = Metrics::default();
         let (reqs, rxs): (Vec<_>, Vec<_>) = (0..8u64).map(|i| req(i, 1.0)).unzip();
-        let out = run_batch(&mut AlwaysFails, reqs, FlushReason::Full, &metrics, 3);
+        let out = run_batch(&mut AlwaysFails, reqs, FlushReason::Full, &metrics, 3, None);
         assert!(matches!(out, BatchOutcome::Completed));
         // Only 3 invocations allowed; every request still resolves.
         assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
@@ -572,7 +898,7 @@ mod tests {
             reply: tx,
             recycle: None,
         };
-        let out = run_batch(&mut b, vec![r0, odd], FlushReason::Full, &metrics, 4);
+        let out = run_batch(&mut b, vec![r0, odd], FlushReason::Full, &metrics, 4, None);
         assert!(matches!(out, BatchOutcome::Completed));
         assert!(rx0.try_recv().unwrap().is_ok());
         match rx1.try_recv().unwrap() {
@@ -583,6 +909,111 @@ mod tests {
             other => panic!("expected ShapeMismatch, got {other:?}"),
         }
         assert_eq!(metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    fn req_with_deadline(
+        id: u64,
+        v: f32,
+        deadline: Instant,
+    ) -> (InferRequest, mpsc::Receiver<crate::coordinator::request::InferReply>) {
+        let (mut r, rx) = req(id, v);
+        r.deadline = Some(deadline);
+        (r, rx)
+    }
+
+    #[test]
+    fn restart_backoff_wait_is_interruptible_by_shutdown() {
+        use crate::coordinator::batcher::{BatchPolicy, BatchQueue, ShedPolicy};
+        let queue = Arc::new(BatchQueue::new(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                capacity: 8,
+                shed: ShedPolicy::RejectNewest,
+                shards: 1,
+                steal: true,
+                priority_lanes: true,
+            },
+            Arc::new(Metrics::default()),
+        ));
+        let q2 = Arc::clone(&queue);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            q2.shutdown();
+        });
+        let t0 = Instant::now();
+        let completed = wait_interruptible(&queue, Duration::from_secs(30));
+        assert!(!completed, "wait must be cut short by shutdown");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "a 30s backoff must not delay shutdown: waited {:?}",
+            t0.elapsed()
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn slab_claim_transfers_reply_right_exactly_once() {
+        let slot = InflightSlot::default();
+        let now = Instant::now();
+        let (reqs, _rxs): (Vec<_>, Vec<_>) =
+            (0..3u64).map(|i| req_with_deadline(i, 1.0, now)).unzip();
+        let epoch = slot.stamp(&reqs);
+        // Worker claims one request, then the watchdog fires.
+        assert!(slot.claim(epoch, 0));
+        assert!(!slot.claim(epoch, 0), "double claim must fail");
+        let stranded = slot
+            .check_wedged(now + Duration::from_millis(1), Duration::ZERO)
+            .expect("slot blew its deadline");
+        let mut ids: Vec<u64> = stranded.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "already-claimed request must not be drained");
+        // The zombie's stale epoch can neither claim nor clear the stamp.
+        assert!(!slot.claim(epoch, 1));
+        slot.finish(epoch);
+        assert!(
+            slot.check_wedged(now + Duration::from_secs(1), Duration::ZERO).is_none(),
+            "confiscated slot is idle until the replacement stamps it"
+        );
+    }
+
+    #[test]
+    fn no_deadline_batches_are_never_wedge_killed() {
+        let slot = InflightSlot::default();
+        let (reqs, _rxs): (Vec<_>, Vec<_>) = (0..2u64).map(|i| req(i, 1.0)).unzip();
+        let _epoch = slot.stamp(&reqs);
+        assert!(slot
+            .check_wedged(Instant::now() + Duration::from_secs(3600), Duration::ZERO)
+            .is_none());
+    }
+
+    #[test]
+    fn stranded_batch_drops_silently_after_watchdog_reply() {
+        let slot = InflightSlot::default();
+        let metrics = Metrics::default();
+        let now = Instant::now();
+        let (reqs, rxs): (Vec<_>, Vec<_>) =
+            (0..4u64).map(|i| req_with_deadline(i, i as f32, now)).unzip();
+        let epoch = slot.stamp(&reqs);
+        // Watchdog fires before the worker replies and sends the typed
+        // expiry through the confiscated senders.
+        let stranded = slot.check_wedged(now, Duration::ZERO).expect("wedged");
+        assert_eq!(stranded.len(), 4);
+        for (_, tx) in &stranded {
+            let _ = tx.send(Err(InferError::DeadlineExceeded));
+        }
+        // The zombie worker now finishes the batch — it must not reply.
+        let out =
+            run_batch(&mut mock(), reqs, FlushReason::Full, &metrics, 8, Some((&slot, epoch)));
+        assert!(matches!(out, BatchOutcome::Stranded), "{out:?}");
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+        for rx in rxs {
+            assert!(matches!(rx.try_recv().unwrap(), Err(InferError::DeadlineExceeded)));
+            assert!(
+                rx.try_recv().is_err(),
+                "exactly one reply per request (no zombie double-reply)"
+            );
+        }
     }
 
     #[test]
@@ -598,7 +1029,7 @@ mod tests {
         }
         let metrics = Metrics::default();
         let (reqs, rxs): (Vec<_>, Vec<_>) = (0..4u64).map(|i| req(i, 1.0)).unzip();
-        let out = run_batch(&mut Panics, reqs, FlushReason::Full, &metrics, 8);
+        let out = run_batch(&mut Panics, reqs, FlushReason::Full, &metrics, 8, None);
         match out {
             BatchOutcome::WorkerPoisoned(msg) => assert!(msg.contains("kaboom")),
             other => panic!("expected WorkerPoisoned, got {other:?}"),

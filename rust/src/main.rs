@@ -79,6 +79,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("max-batch", "8", "dynamic batch size cap")
         .flag("max-wait-ms", "5", "batch deadline in milliseconds")
         .flag("deadline-ms", "0", "per-request TTL in milliseconds (0 = no deadline)")
+        .flag("watchdog-grace-ms", "0", "kill a worker wedged past deadline+grace (0 = off)")
         .flag("shed", "reject-newest", "overload policy: reject-newest | drop-oldest")
         .flag("shards", "0", "submission queue shards (0 = one per worker)")
         .flag("steal", "true", "idle workers steal stale buckets from sibling shards")
@@ -94,6 +95,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let shed = ShedPolicy::parse(p.get("shed"))
         .ok_or_else(|| anyhow::anyhow!("--shed must be reject-newest or drop-oldest"))?;
     let deadline_ms = p.get_u64("deadline-ms");
+    let watchdog_ms = p.get_u64("watchdog-grace-ms");
     let cfg = CoordinatorConfig {
         workers: p.get_usize("workers"),
         max_batch: p.get_usize("max-batch"),
@@ -101,6 +103,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         queue_capacity: 4096,
         shed,
         default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        watchdog_grace: (watchdog_ms > 0).then(|| Duration::from_millis(watchdog_ms)),
         shards: p.get_usize("shards"),
         steal: p.get_bool("steal"),
         priority_lanes: p.get_bool("priority-lanes"),
@@ -181,6 +184,8 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
         .flag("workers", "1", "workers per route")
         .flag("max-batch", "8", "dynamic batch cap")
         .flag("max-wait-ms", "5", "batch deadline (ms)")
+        .flag("deadline-ms", "0", "per-request TTL in milliseconds (0 = no deadline)")
+        .flag("watchdog-grace-ms", "0", "kill a worker wedged past deadline+grace (0 = off)")
         .flag("shards", "0", "submission queue shards per route (0 = one per worker)")
         .flag("steal", "true", "idle workers steal stale buckets from sibling shards")
         .flag("priority-lanes", "true", "interactive lane forms first, bulk sheds first")
@@ -195,11 +200,15 @@ fn cmd_serve_tcp(argv: &[String]) -> Result<()> {
     let artifacts = p.get("artifacts").to_string();
     let manifest = Manifest::load(&artifacts)?;
     let mut router = Router::new();
+    let deadline_ms = p.get_u64("deadline-ms");
+    let watchdog_ms = p.get_u64("watchdog-grace-ms");
     let coord_cfg = || CoordinatorConfig {
         workers: p.get_usize("workers"),
         max_batch: p.get_usize("max-batch"),
         max_wait: Duration::from_millis(p.get_u64("max-wait-ms")),
         queue_capacity: 4096,
+        default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        watchdog_grace: (watchdog_ms > 0).then(|| Duration::from_millis(watchdog_ms)),
         shards: p.get_usize("shards"),
         steal: p.get_bool("steal"),
         priority_lanes: p.get_bool("priority-lanes"),

@@ -7,5 +7,7 @@
 mod npz;
 mod tensorf;
 
-pub use npz::{npz_bytes, read_npz, read_npz_bytes, read_npz_names, write_npz, NpzData, NpzEntry};
+pub use npz::{
+    npz_bytes, read_npz, read_npz_bytes, read_npz_names, write_npz, NpzData, NpzEntry, NpzError,
+};
 pub use tensorf::Tensor;

@@ -12,6 +12,11 @@
 //! seek+read), and each array is decoded straight from its slice into its
 //! typed `Vec`. [`NpzEntry::into_tensor`] then *moves* that storage into the
 //! [`Tensor`] — model cold-start never duplicates weight bytes.
+//!
+//! The read path *validates* as it decodes: non-finite floats, zero-sized
+//! dimensions, and body-length mismatches surface as typed [`NpzError`]s,
+//! so a corrupt weight archive fails the load instead of crashing (or
+//! silently poisoning) the serving plane.
 
 use std::fs::File;
 use std::io::Write as _;
@@ -20,6 +25,45 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::Tensor;
+
+/// Typed validation failure for array payloads: a corrupt or hostile model
+/// file must degrade to a load error at the npz boundary, never to a NaN
+/// propagating through the serving plane or a mis-sized weight tensor. The
+/// vendored `anyhow` subset has no downcasting, so callers that care match
+/// on the formatted message; `?` converts into `anyhow::Error` elsewhere.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NpzError {
+    /// A float array holds NaN or ±Inf (index of the first offender).
+    /// f64 members are checked *after* the f32 narrowing, so an f64 value
+    /// that overflows f32 range is caught here too.
+    NonFinite { index: usize },
+    /// The header shape contains a zero-sized dimension — no weight or
+    /// activation tensor is legitimately empty, and downstream layers
+    /// assume non-empty storage.
+    ZeroDim { shape: Vec<usize> },
+    /// Body byte length does not exactly match `shape × dtype size` — a
+    /// truncated or padded member means the offsets (or the file) are
+    /// corrupt; decoding a prefix would silently mis-load weights.
+    LengthMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for NpzError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NpzError::NonFinite { index } => {
+                write!(f, "non-finite value (NaN/Inf) at element {index}")
+            }
+            NpzError::ZeroDim { shape } => {
+                write!(f, "zero-sized dimension in shape {shape:?}")
+            }
+            NpzError::LengthMismatch { expected, got } => {
+                write!(f, "body length mismatch: expected {expected} bytes, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NpzError {}
 
 /// One named array from an npz archive.
 #[derive(Debug, Clone)]
@@ -127,49 +171,42 @@ fn parse_npy(bytes: &[u8]) -> Result<(Vec<usize>, NpzData)> {
     if fortran {
         bail!("fortran-order arrays unsupported");
     }
+    if shape.iter().any(|&d| d == 0) {
+        return Err(NpzError::ZeroDim { shape }.into());
+    }
     let n: usize = shape.iter().product();
     let body = &bytes[body_at + header_len..];
     let data = match descr.as_str() {
         "<f4" => {
-            if body.len() < n * 4 {
-                bail!("npy body too short");
-            }
-            NpzData::F32(
-                body[..n * 4]
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect(),
-            )
+            let body = body_exact(body, n, 4)?;
+            let v: Vec<f32> = body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ensure_finite(&v)?;
+            NpzData::F32(v)
         }
         "<f8" => {
-            if body.len() < n * 8 {
-                bail!("npy body too short");
-            }
-            NpzData::F32(
-                body[..n * 8]
-                    .chunks_exact(8)
-                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
-                    .collect(),
-            )
+            let body = body_exact(body, n, 8)?;
+            let v: Vec<f32> = body
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect();
+            ensure_finite(&v)?;
+            NpzData::F32(v)
         }
         "<i4" => {
-            if body.len() < n * 4 {
-                bail!("npy body too short");
-            }
+            let body = body_exact(body, n, 4)?;
             NpzData::I32(
-                body[..n * 4]
-                    .chunks_exact(4)
+                body.chunks_exact(4)
                     .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect(),
             )
         }
         "<i8" => {
-            if body.len() < n * 8 {
-                bail!("npy body too short");
-            }
+            let body = body_exact(body, n, 8)?;
             NpzData::I32(
-                body[..n * 8]
-                    .chunks_exact(8)
+                body.chunks_exact(8)
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
                     .collect(),
             )
@@ -177,6 +214,25 @@ fn parse_npy(bytes: &[u8]) -> Result<(Vec<usize>, NpzData)> {
         d => bail!("npy dtype {d} unsupported"),
     };
     Ok((shape, data))
+}
+
+/// The body must hold *exactly* `n × elem` bytes (the zip member slice has
+/// an exact csize, and npy bodies carry no padding). `saturating_mul` keeps
+/// an overflowing hostile shape on the error path instead of wrapping into
+/// a small "expected" value that could match.
+fn body_exact(body: &[u8], n: usize, elem: usize) -> std::result::Result<&[u8], NpzError> {
+    let expected = n.saturating_mul(elem);
+    if body.len() != expected {
+        return Err(NpzError::LengthMismatch { expected, got: body.len() });
+    }
+    Ok(body)
+}
+
+fn ensure_finite(v: &[f32]) -> std::result::Result<(), NpzError> {
+    match v.iter().position(|x| !x.is_finite()) {
+        Some(index) => Err(NpzError::NonFinite { index }),
+        None => Ok(()),
+    }
 }
 
 const EOCD_SIG: u32 = 0x0605_4b50;
@@ -509,6 +565,68 @@ mod tests {
             let _ = read_npz_bytes(&bytes[..cut]);
         }
         assert!(read_npz_bytes(&bytes).is_ok());
+    }
+
+    /// Hand-build a v1 npy member with an arbitrary (possibly wrong) body.
+    fn raw_npy(descr: &str, shape: &str, body: &[u8]) -> Vec<u8> {
+        let header = format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}");
+        let mut h = header;
+        while (10 + h.len() + 1) % 64 != 0 {
+            h.push(' ');
+        }
+        h.push('\n');
+        let mut bytes = b"\x93NUMPY\x01\x00".to_vec();
+        bytes.extend((h.len() as u16).to_le_bytes());
+        bytes.extend(h.as_bytes());
+        bytes.extend_from_slice(body);
+        bytes
+    }
+
+    fn f32_body(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn nan_and_inf_weights_are_rejected_typed() {
+        let bad = raw_npy("<f4", "(4,)", &f32_body(&[1.0, 2.0, f32::NAN, 4.0]));
+        let err = parse_npy(&bad).unwrap_err().to_string();
+        assert!(err.contains("non-finite value (NaN/Inf) at element 2"), "{err}");
+        let bad = raw_npy("<f4", "(2,)", &f32_body(&[f32::INFINITY, 0.0]));
+        let err = parse_npy(&bad).unwrap_err().to_string();
+        assert!(err.contains("at element 0"), "{err}");
+    }
+
+    #[test]
+    fn f64_overflowing_f32_range_is_rejected_after_narrowing() {
+        let body: Vec<u8> = [1e300f64, 1.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let err = parse_npy(&raw_npy("<f8", "(2,)", &body)).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "1e300 narrows to +Inf and must fail: {err}");
+    }
+
+    #[test]
+    fn zero_dim_shapes_are_rejected_typed() {
+        let err = parse_npy(&raw_npy("<f4", "(0, 3)", &[])).unwrap_err().to_string();
+        assert!(err.contains("zero-sized dimension in shape [0, 3]"), "{err}");
+        // Scalars (shape ()) hold one element and stay valid.
+        let ok = parse_npy(&raw_npy("<f4", "()", &f32_body(&[7.0])));
+        assert!(ok.is_ok(), "{:?}", ok.err());
+    }
+
+    #[test]
+    fn body_length_must_match_exactly_in_both_directions() {
+        // Short: 3 floats promised, 2 present.
+        let err =
+            parse_npy(&raw_npy("<f4", "(3,)", &f32_body(&[1.0, 2.0]))).unwrap_err().to_string();
+        assert!(err.contains("expected 12 bytes, got 8"), "{err}");
+        // Long: trailing garbage after the promised payload means the file
+        // is corrupt — the old prefix-decode would have hidden this.
+        let err = parse_npy(&raw_npy("<f4", "(2,)", &f32_body(&[1.0, 2.0, 3.0])))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected 8 bytes, got 12"), "{err}");
+        // Integer members get the same exactness.
+        let err = parse_npy(&raw_npy("<i4", "(2,)", &[0u8; 7])).unwrap_err().to_string();
+        assert!(err.contains("expected 8 bytes, got 7"), "{err}");
     }
 
     // Reading real numpy-written npz files is covered by the integration test

@@ -1,0 +1,348 @@
+//! End-to-end self-healing under deterministic chaos: the closing scenario
+//! of the fault contract in `docs/serving-robustness.md`.
+//!
+//! Three layers under test at once, wired through a seeded fault-injecting
+//! [`ChaosProxy`]:
+//!
+//! - the **in-flight watchdog** (supervisor side): a backend wedged
+//!   mid-`run_batch` is detected, its stranded requests get typed
+//!   `DeadlineExceeded` replies, and the slot respawns — observed here
+//!   through the full TCP stack, not a unit harness;
+//! - the **resilient client**: `ResilientClient` reconnects through
+//!   resets/truncations/black-holes, retries retryable statuses, and trips
+//!   its circuit breaker against a dead path;
+//! - the **ledger**: the coordinator's conservation invariant
+//!   (`completed + failed + shed + expired == submitted`) holds *exactly*
+//!   no matter what the wire does, and the new self-healing counters
+//!   (`watchdog_kills`, `inflight_expired`, `client_retries`,
+//!   `circuit_opens`) reconcile with the observed outcomes.
+//!
+//! Determinism: every proxy fault schedule, corruption byte, and client
+//! backoff jitter derives from fixed seeds — a failure replays.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lqr::coordinator::backend::{Backend, BackendFactory, MockBackend};
+use lqr::coordinator::chaos::{ChaosProxy, ConnFault, FaultKind};
+use lqr::coordinator::metrics::ClientMetrics;
+use lqr::coordinator::net::{ImageSpec, NetConfig, NetServer, ResilientClient, RetryPolicy};
+use lqr::coordinator::router::Router;
+use lqr::coordinator::{ClientError, CoordinatorConfig};
+use lqr::tensor::Tensor;
+
+const SPEC: ImageSpec = ImageSpec { c: 1, h: 2, w: 2 };
+
+fn img(v: f32) -> Tensor {
+    Tensor::filled(&[1, 1, 2, 2], v)
+}
+
+/// Sum of the coordinator's resolved-outcome counters (the ledger's
+/// right-hand side).
+fn resolved(m: &lqr::coordinator::metrics::Metrics) -> u64 {
+    m.completed.load(Ordering::Relaxed)
+        + m.failed.load(Ordering::Relaxed)
+        + m.shed.load(Ordering::Relaxed)
+        + m.expired.load(Ordering::Relaxed)
+}
+
+// ----------------------------------------------------- watchdog, end-to-end --
+
+#[test]
+fn wedged_backend_recovers_while_client_retries_to_success() {
+    // First run_batch across the worker pool hangs until `release`; every
+    // later call (the respawned slot) serves normally.
+    struct WedgeOnce {
+        wedge: Arc<AtomicBool>,
+        release: Arc<AtomicBool>,
+        inner: MockBackend,
+    }
+    impl Backend for WedgeOnce {
+        fn run_batch(&mut self, b: &Tensor) -> anyhow::Result<Tensor> {
+            if self.wedge.swap(false, Ordering::SeqCst) {
+                while !self.release.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                anyhow::bail!("unwedged late");
+            }
+            self.inner.run_batch(b)
+        }
+        fn describe(&self) -> String {
+            "wedge-once".into()
+        }
+    }
+    let wedge = Arc::new(AtomicBool::new(true));
+    let release = Arc::new(AtomicBool::new(false));
+    let calls = Arc::new(AtomicU64::new(0));
+    let (w2, r2) = (Arc::clone(&wedge), Arc::clone(&release));
+    let factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(WedgeOnce {
+            wedge: Arc::clone(&w2),
+            release: Arc::clone(&r2),
+            inner: MockBackend {
+                classes: 4,
+                delay: Duration::ZERO,
+                calls: Arc::clone(&calls),
+            },
+        }) as Box<dyn Backend>)
+    });
+    let coord_cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 64,
+        default_deadline: Some(Duration::from_millis(150)),
+        watchdog_grace: Some(Duration::from_millis(50)),
+        restart_backoff: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let mut router = Router::new();
+    router.add_route("mock", coord_cfg, factory).unwrap();
+    let router = Arc::new(router);
+    let server = NetServer::serve("127.0.0.1:0", Arc::clone(&router), SPEC).unwrap();
+    let mut proxy = ChaosProxy::start(server.addr, 0xC4A0_0001).unwrap();
+
+    let policy = RetryPolicy {
+        max_attempts: 10,
+        base_backoff: Duration::from_millis(20),
+        max_backoff: Duration::from_millis(100),
+        failure_threshold: 100, // keep the breaker out of this scenario
+        ..RetryPolicy::default()
+    };
+    let mut client = ResilientClient::connect_lazy(proxy.addr.to_string(), policy);
+    client.set_io_timeout(Some(Duration::from_secs(10)));
+
+    // One call, end to end: the first attempt strands in the wedged
+    // backend, the watchdog expires it with a typed retryable reply, the
+    // client retries, and the respawned slot answers.
+    let t0 = Instant::now();
+    let (logits, predicted) = client.classify("mock", &img(0.5)).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(logits[0], 2.0);
+    assert_eq!(predicted, 0);
+    // Bounded recovery: deadline + grace + restart backoff + sweep tick +
+    // client backoff — far under this generous ceiling either way.
+    assert!(elapsed < Duration::from_secs(8), "recovery took {elapsed:?}");
+
+    let cm = client.metrics();
+    assert!(
+        cm.client_retries.load(Ordering::Relaxed) >= 1,
+        "success required at least one retry"
+    );
+    assert_eq!(cm.circuit_opens.load(Ordering::Relaxed), 0);
+
+    // Server-side reconciliation, down to exact counts: one watchdog kill
+    // expired exactly one in-flight request, the slot restarted, and the
+    // ledger stayed exact.
+    let m = router.coordinator("mock").unwrap().metrics();
+    assert_eq!(m.watchdog_kills.load(Ordering::Relaxed), 1);
+    assert_eq!(m.inflight_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+    assert!(m.worker_restarts.load(Ordering::Relaxed) >= 1);
+    assert_eq!(m.submitted.load(Ordering::Relaxed), resolved(m), "ledger must balance");
+
+    // The health built-in carries the new counters through the wire.
+    let report = client.health().unwrap();
+    assert!(report.contains("watchdog_kills=1 inflight_expired=1"), "{report}");
+
+    release.store(true, Ordering::SeqCst);
+    proxy.shutdown();
+    server.shutdown();
+}
+
+// ------------------------------------------------------------ circuit breaker --
+
+#[test]
+fn circuit_opens_against_dead_path_and_probe_closes_it_on_recovery() {
+    let mut router = Router::new();
+    router
+        .add_route(
+            "mock",
+            CoordinatorConfig::default(),
+            Box::new(|| {
+                Ok(Box::new(MockBackend {
+                    classes: 4,
+                    delay: Duration::ZERO,
+                    calls: Arc::new(AtomicU64::new(0)),
+                }) as Box<dyn Backend>)
+            }),
+        )
+        .unwrap();
+    let server = NetServer::serve("127.0.0.1:0", Arc::new(router), SPEC).unwrap();
+    let mut proxy = ChaosProxy::start(server.addr, 0xC4A0_0002).unwrap();
+    // Dead path: every connection is reset before a byte crosses.
+    proxy.set_default(ConnFault { up: FaultKind::Reset, down: FaultKind::Reset });
+
+    let policy = RetryPolicy {
+        max_attempts: 1, // isolate the breaker from the retry loop
+        failure_threshold: 2,
+        circuit_cooldown: Duration::from_millis(150),
+        ..RetryPolicy::default()
+    };
+    let metrics = Arc::new(ClientMetrics::default());
+    let mut client =
+        ResilientClient::with_metrics(proxy.addr.to_string(), policy, Arc::clone(&metrics));
+    client.set_io_timeout(Some(Duration::from_secs(2)));
+
+    // Two consecutive transport failures trip the breaker...
+    for _ in 0..2 {
+        let err = client.classify("mock", &img(0.5)).unwrap_err();
+        assert!(matches!(err, ClientError::Io(_)), "{err}");
+    }
+    assert!(client.circuit_open());
+    assert_eq!(metrics.circuit_opens.load(Ordering::Relaxed), 1);
+
+    // ...and within the cooldown the client fails fast, typed, no dial.
+    let t0 = Instant::now();
+    let err = client.classify("mock", &img(0.5)).unwrap_err();
+    assert!(matches!(err, ClientError::CircuitOpen), "{err}");
+    assert!(t0.elapsed() < Duration::from_millis(100), "CircuitOpen must not touch the wire");
+    assert_eq!(metrics.circuit_open_rejections.load(Ordering::Relaxed), 1);
+
+    // Path heals; after the cooldown the single half-open probe closes the
+    // breaker and traffic flows again.
+    proxy.set_default(ConnFault::clean());
+    std::thread::sleep(Duration::from_millis(200));
+    let (logits, _) = client.classify("mock", &img(0.5)).unwrap();
+    assert_eq!(logits[0], 2.0);
+    assert!(!client.circuit_open());
+    // Exactly one open across the whole scenario, and the recovery dial
+    // after the first (reset) connection counted as a reconnect.
+    assert_eq!(metrics.circuit_opens.load(Ordering::Relaxed), 1);
+    assert!(metrics.reconnects.load(Ordering::Relaxed) >= 1);
+
+    proxy.shutdown();
+    server.shutdown();
+}
+
+// -------------------------------------------------- conservation under chaos --
+
+#[test]
+fn conservation_ledger_is_exact_under_mixed_wire_faults() {
+    let mut router = Router::new();
+    let coord_cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+        default_deadline: Some(Duration::from_secs(2)),
+        watchdog_grace: Some(Duration::from_millis(500)),
+        ..Default::default()
+    };
+    router
+        .add_route(
+            "mock",
+            coord_cfg,
+            Box::new(|| {
+                Ok(Box::new(MockBackend {
+                    classes: 4,
+                    delay: Duration::from_millis(1),
+                    calls: Arc::new(AtomicU64::new(0)),
+                }) as Box<dyn Backend>)
+            }),
+        )
+        .unwrap();
+    let router = Arc::new(router);
+    let net_cfg = NetConfig { io_timeout: Duration::from_millis(300), ..Default::default() };
+    let server =
+        NetServer::serve_with("127.0.0.1:0", Arc::clone(&router), SPEC, net_cfg).unwrap();
+    let mut proxy = ChaosProxy::start(server.addr, 0xC4A0_0003).unwrap();
+    let proxy_addr = proxy.addr;
+
+    // A deterministic burst of per-connection faults; once the schedule
+    // drains, connections are clean, so every retrying client can land.
+    // Corrupt-up faults may surface as *typed terminal* rejections
+    // (BadRequest/BadFrame from the server's frame validation) — those
+    // resolve the call, they don't hang it.
+    let pass = FaultKind::Pass;
+    let faults = [
+        ConnFault { up: FaultKind::TruncateAfter(6), down: pass },
+        ConnFault { up: pass, down: FaultKind::Reset },
+        ConnFault { up: FaultKind::CorruptAfter(10), down: pass },
+        ConnFault { up: pass, down: FaultKind::BlackHole(Duration::from_millis(150)) },
+        ConnFault { up: FaultKind::Delay(Duration::from_millis(30)), down: pass },
+        ConnFault { up: FaultKind::Trickle, down: pass },
+        ConnFault { up: FaultKind::TruncateAfter(9), down: pass },
+        ConnFault { up: pass, down: FaultKind::TruncateAfter(2) },
+    ];
+    const CORRUPT_FAULTS: usize = 1; // the only kind that can end a call in a typed reject
+    for f in faults {
+        proxy.push_fault(f);
+    }
+
+    const THREADS: usize = 4;
+    const CALLS: usize = 6;
+    let shared = Arc::new(ClientMetrics::default());
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let shared = Arc::clone(&shared);
+            let addr = proxy_addr.to_string();
+            std::thread::spawn(move || {
+                let policy = RetryPolicy {
+                    max_attempts: 12,
+                    base_backoff: Duration::from_millis(5),
+                    max_backoff: Duration::from_millis(50),
+                    call_deadline: Some(Duration::from_secs(8)),
+                    failure_threshold: 1000, // conservation scenario, not a breaker one
+                    seed: 0xC4A0_1000 + t as u64,
+                    ..RetryPolicy::default()
+                };
+                let mut client = ResilientClient::with_metrics(addr, policy, shared);
+                client.set_io_timeout(Some(Duration::from_secs(2)));
+                let mut ok = 0usize;
+                let mut typed_err = 0usize;
+                for i in 0..CALLS {
+                    let v = (t * CALLS + i) as f32 * 0.05;
+                    match client.classify("mock", &img(v)) {
+                        Ok((logits, _)) => {
+                            assert!(
+                                (logits[0] - 4.0 * v).abs() < 1e-4,
+                                "wrong answer for v={v}: {logits:?}"
+                            );
+                            ok += 1;
+                        }
+                        // Typed terminal rejection (e.g. a corrupted frame
+                        // the server answered BadRequest to): resolved.
+                        Err(ClientError::Wire(_)) => typed_err += 1,
+                        Err(e) => panic!("call neither succeeded nor typed-failed: {e}"),
+                    }
+                }
+                (ok, typed_err)
+            })
+        })
+        .collect();
+
+    let mut ok_total = 0usize;
+    let mut err_total = 0usize;
+    for w in workers {
+        let (ok, err) = w.join().expect("client thread must not panic");
+        ok_total += ok;
+        err_total += err;
+    }
+    // Every call resolved; terminal rejections are bounded by the number of
+    // corrupting faults in the schedule.
+    assert_eq!(ok_total + err_total, THREADS * CALLS);
+    assert!(
+        err_total <= CORRUPT_FAULTS,
+        "only corrupt-up faults may typed-fail, got {err_total}"
+    );
+    // The faults actually bit: transport-level retries and reconnects ran.
+    assert!(shared.client_retries.load(Ordering::Relaxed) >= 1);
+    assert!(shared.reconnects.load(Ordering::Relaxed) >= 1);
+    assert_eq!(shared.circuit_opens.load(Ordering::Relaxed), 0);
+
+    // Drain the server, then reconcile the ledger *exactly*: every request
+    // the coordinator admitted resolved to exactly one typed outcome —
+    // retries, severed connections, and black holes included.
+    server.shutdown();
+    let m = router.coordinator("mock").unwrap().metrics();
+    let submitted = m.submitted.load(Ordering::Relaxed);
+    assert!(submitted >= ok_total as u64, "at least every Ok was admitted");
+    assert_eq!(submitted, resolved(m), "conservation must be exact under chaos");
+    // No wedge in this scenario: the watchdog stayed quiet, and its
+    // counters reconcile to zero.
+    assert_eq!(m.watchdog_kills.load(Ordering::Relaxed), 0);
+    assert_eq!(m.inflight_expired.load(Ordering::Relaxed), 0);
+    proxy.shutdown();
+}

@@ -344,6 +344,45 @@ fn dead_pool_flips_to_fail_fast_no_hangs() {
 }
 
 #[test]
+fn shutdown_interrupts_restart_backoff() {
+    // Detonate the only worker under a restart backoff far longer than any
+    // test budget, then shut down while the supervisor is mid-backoff. The
+    // interruptible wait must abandon the sleep immediately — a shutdown
+    // that blocks for `restart_backoff` is a liveness bug.
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 64,
+        restart_limit: 5,
+        restart_backoff: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        Box::new(|| Ok(Box::new(PanicOnMagic { inner: mock(4, Duration::ZERO) }) as Box<dyn Backend>)),
+    )
+    .unwrap();
+    assert!(resolve(coord.submit(img(1.0)).unwrap()).is_ok());
+    // The detonation reply resolves before the replacement spawns, so right
+    // after it the supervisor is inside its 30s backoff window.
+    assert!(matches!(
+        resolve(coord.submit(img(500.0)).unwrap()),
+        Err(InferError::BackendFailed { .. })
+    ));
+    std::thread::sleep(Duration::from_millis(20));
+    let t0 = Instant::now();
+    let m = coord.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown must interrupt the restart backoff, took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
 fn deadlines_expire_under_stalled_worker() {
     let cfg = CoordinatorConfig {
         workers: 1,

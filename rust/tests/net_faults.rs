@@ -393,6 +393,19 @@ fn shutdown_with_idle_connections_is_prompt() {
     }
 }
 
+#[test]
+fn shutdown_is_prompt_with_no_connection_ever_made() {
+    // No client ever connects: the accept loop is parked in its idle wait
+    // (the same sliced, stop-aware wait its error backoff uses). Shutdown
+    // must interrupt that wait, not ride it out.
+    let router = router_with(4, Duration::ZERO);
+    let server = NetServer::serve("127.0.0.1:0", router, SPEC).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    let (elapsed, metrics) = shutdown_within(server, Duration::from_secs(5));
+    assert!(elapsed < Duration::from_secs(2), "idle accept loop took {elapsed:?} to stop");
+    assert_eq!(metrics.active_conns.load(Ordering::Relaxed), 0);
+}
+
 // ------------------------------------------------------------------ health --
 
 #[test]
@@ -406,6 +419,9 @@ fn health_reports_pool_and_queue_state() {
     assert!(report.contains("ready=true"), "{report}");
     assert!(report.contains("mock depth=0/1024 up"), "{report}");
     assert!(report.contains("active_conns=1"), "{report}");
+    // Self-healing counters ride on every route line (zero on a healthy
+    // pool) — scrapers watch these to catch wedged-worker incidents.
+    assert!(report.contains("watchdog_kills=0 inflight_expired=0"), "{report}");
     server.shutdown();
 }
 

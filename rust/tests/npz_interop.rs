@@ -94,3 +94,72 @@ fn copy_free_load_matches_cloning_path() {
     let y = old_path.iter().find(|e| e.name == "y").unwrap();
     assert_eq!(y.as_i32().unwrap(), &[-7, 0, 15, i32::MAX]);
 }
+
+// Corrupt-archive rejection: the typed `NpzError` validation must fire
+// through the full archive path (`read_npz_bytes`, member context and all),
+// not just the npy parser it lives in. Archives are built with the crate's
+// own writer, then surgically damaged — the reader is CRC-agnostic by
+// design (STORED members are sliced, not checksummed), so validation is
+// the only line of defense these tests pin.
+
+/// Byte offset of `needle`'s first occurrence in `hay` (panics if absent —
+/// these tests know exactly what they wrote).
+fn find(hay: &[u8], needle: &[u8]) -> usize {
+    hay.windows(needle.len())
+        .position(|w| w == needle)
+        .expect("pattern must exist in the archive these tests built")
+}
+
+fn f32_entry(name: &str, shape: Vec<usize>, vals: Vec<f32>) -> NpzEntry {
+    NpzEntry { name: name.into(), shape, data: NpzData::F32(vals) }
+}
+
+#[test]
+fn archive_with_nan_weight_fails_the_load_typed() {
+    // Locate the payload by the 8-byte [2.5, 3.5] pair (a single float's 4
+    // bytes could in principle collide with a zip header field), then stamp
+    // NaN over the 2.5.
+    let mut archive =
+        npz_bytes(&[f32_entry("w", vec![2, 2], vec![0.5, 1.5, 2.5, 3.5])]);
+    let mut needle = Vec::new();
+    needle.extend_from_slice(&2.5f32.to_le_bytes());
+    needle.extend_from_slice(&3.5f32.to_le_bytes());
+    let at = find(&archive, &needle);
+    archive[at..at + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+    let err = read_npz_bytes(&archive).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("member w.npy"), "{msg}");
+    assert!(msg.contains("non-finite value (NaN/Inf) at element 2"), "{msg}");
+}
+
+#[test]
+fn archive_with_zero_dim_member_fails_the_load_typed() {
+    // The writer will happily serialize an empty (0, 3) array — numpy does
+    // too — so the *reader* must be the one to refuse it.
+    let archive = npz_bytes(&[
+        f32_entry("ok", vec![2], vec![1.0, 2.0]),
+        f32_entry("empty", vec![0, 3], vec![]),
+    ]);
+    let err = read_npz_bytes(&archive).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("member empty.npy"), "{msg}");
+    assert!(msg.contains("zero-sized dimension in shape [0, 3]"), "{msg}");
+}
+
+#[test]
+fn archive_with_shape_body_disagreement_fails_the_load_typed() {
+    // Rewrite the ASCII shape tuple in the npy header — "(2, 3)" and
+    // "(2, 4)" are the same length, so every zip offset stays valid and
+    // only the promised element count lies.
+    let mut archive = npz_bytes(&[f32_entry(
+        "w",
+        vec![2, 3],
+        vec![0.5, -1.0, 1.5, -2.0, 2.5, -3.0],
+    )]);
+    let at = find(&archive, b"'shape': (2, 3)");
+    archive[at..at + 15].copy_from_slice(b"'shape': (2, 4)");
+    let err = read_npz_bytes(&archive).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("member w.npy"), "{msg}");
+    assert!(msg.contains("body length mismatch: expected 32 bytes, got 24"), "{msg}");
+}
